@@ -1,0 +1,51 @@
+"""Paper §Sustainability: early-exit networks preempt computation on
+easy inputs.  Trains a small dense model + exit head briefly, then
+sweeps the confidence threshold; derived: expected-FLOPs saved fraction.
+"""
+import time
+
+import jax
+
+from repro.configs import InputShape, get_smoke_config
+from repro.core import earlyexit as EE
+from repro.data import DataConfig, data_iterator
+from repro.models import model as M
+from repro.training import optimizer as opt
+
+
+def bench():
+    t0 = time.perf_counter()
+    cfg = get_smoke_config("phi3-medium-14b")
+    shape = InputShape("ee", 32, 8, "train")
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    heads = EE.init_exit_heads(cfg, key, [0])
+    # branching=1 => deterministic successor chain: a learnable
+    # task where exit confidence can actually saturate
+    it = data_iterator(cfg, shape, DataConfig(branching=1))
+
+    # brief joint training so exits become confident on the easy chain
+    def loss_fn(pe, batch):
+        p, exits = pe
+        h = {"exits": exits, "exit_layers": heads["exit_layers"]}
+        return EE.exit_loss(cfg, p, h, batch)
+
+    grad = jax.jit(jax.value_and_grad(loss_fn))
+    last = None
+    for _ in range(30):
+        batch = next(it)
+        l, (gp, ge) = grad((params, heads["exits"]), batch)
+        params = opt.sgd_update(params, gp, 0.3)
+        heads["exits"] = opt.sgd_update(heads["exits"], ge, 0.3)
+        last = float(l)
+
+    out = []
+    toks = next(it)["tokens"]
+    for thr in (0.5, 0.8, 0.95):
+        rep = EE.serve_early_exit(cfg, params, heads, toks, threshold=thr)
+        us = (time.perf_counter() - t0) * 1e6
+        out.append((f"earlyexit.thr{thr}.flops_saved_frac", us,
+                    rep.flops_saved_frac))
+    out.append(("earlyexit.final_train_loss",
+                (time.perf_counter() - t0) * 1e6, last))
+    return out

@@ -1,0 +1,31 @@
+"""Paper Fig. 1: DNN FLOPs demand vs consumer-hardware OP/s supply.
+
+Computes inference FLOPs/token for every assigned architecture and the
+serving-latency envelope on each consumer-edge device tier — the
+compute gap the EdgeAI-Hub paradigm exists to close.  Derived value:
+max(model FLOPs/token) / (flagship phone OP/s) in ms/token.
+"""
+import time
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.perf_model import DEVICE_CATALOGUE, model_flops_per_token
+
+
+def bench():
+    t0 = time.perf_counter()
+    rows = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        f_tok = model_flops_per_token(cfg)
+        rows.append((arch, f_tok))
+    phone = DEVICE_CATALOGUE["flagship-phone"]
+    hub = DEVICE_CATALOGUE["edgeai-hub"]
+    worst = max(f for _, f in rows)
+    gap_phone_ms = worst / (phone.peak_flops * 0.4) * 1e3
+    gap_hub_ms = worst / (hub.peak_flops * 0.4) * 1e3
+    us = (time.perf_counter() - t0) * 1e6
+    out = [("flops_trend.max_model_vs_phone_ms_per_tok", us, gap_phone_ms),
+           ("flops_trend.max_model_vs_hub_ms_per_tok", us, gap_hub_ms)]
+    for arch, f in rows:
+        out.append((f"flops_trend.{arch}.gflops_per_tok", us, f / 1e9))
+    return out

@@ -1,0 +1,35 @@
+"""Paper claim: TinyBERT (255 MB fp32) on an 8 MB-cache Edge TPU is
+dominated by off-chip accesses; memory, not compute, is the scaling
+bottleneck (memory ~100x the energy of compute).
+
+We reproduce the structure of the claim with our stack: for each
+architecture, the roofline memory term vs compute term at decode on an
+edge NPU with a small on-chip buffer; derived value = fraction of archs
+that are memory-bound at the edge (paper predicts ~all).
+"""
+import time
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.perf_model import DEVICE_CATALOGUE, estimate, inference_cost
+
+ENERGY_PER_FLOP = 0.4e-12      # J (MAC, scaled-down mobile process)
+ENERGY_PER_DRAM_BYTE = 40e-12  # J — the paper's ~100x memory:compute gap
+
+
+def bench():
+    t0 = time.perf_counter()
+    phone = DEVICE_CATALOGUE["mid-phone"]
+    rows = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        cost = inference_cost(cfg, batch=1, seq=1, weight_bits=16)
+        est = estimate(cost, phone)
+        e_compute = cost.flops * ENERGY_PER_FLOP
+        e_memory = cost.mem_bytes * ENERGY_PER_DRAM_BYTE
+        rows.append((arch, est.bottleneck, e_memory / max(e_compute, 1e-12)))
+    frac_membound = sum(r[1] == "memory" for r in rows) / len(rows)
+    us = (time.perf_counter() - t0) * 1e6
+    out = [("memtraffic.frac_archs_memory_bound_decode", us, frac_membound)]
+    for arch, _, ratio in rows:
+        out.append((f"memtraffic.{arch}.energy_mem_over_compute", us, ratio))
+    return out

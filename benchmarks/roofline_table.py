@@ -1,0 +1,77 @@
+"""Render dry-run JSONL records into the EXPERIMENTS.md roofline tables.
+
+  PYTHONPATH=src python -m benchmarks.roofline_table results/*.jsonl
+"""
+import json
+import sys
+
+
+def load(paths):
+    recs = {}
+    for p in paths:
+        with open(p) as f:
+            for line in f:
+                r = json.loads(line)
+                key = (r.get("arch"), r.get("shape"), r.get("mesh"),
+                       r.get("preset_name", "baseline"))
+                recs[key] = r  # later runs win
+    return recs
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    if x < 1e-4:
+        return f"{x*1e6:.1f}µs"
+    if x < 0.1:
+        return f"{x*1e3:.2f}ms"
+    return f"{x:.2f}s"
+
+
+def gib(x):
+    return f"{x/2**30:.2f}"
+
+
+def render(recs, mesh="single", preset="baseline"):
+    rows = []
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    archs = sorted({k[0] for k in recs})
+    print(f"\n### Roofline — mesh={mesh}, preset={preset}\n")
+    print("| arch | shape | compute | memory | collective | bottleneck | "
+          "useful | args GiB/chip | temp GiB/chip |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch in archs:
+        for shape in shapes:
+            r = recs.get((arch, shape, mesh, preset))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                print(f"| {arch} | {shape} | — | — | — | "
+                      f"SKIP: {r['reason']} | — | — | — |")
+                continue
+            if r["status"] != "ok":
+                print(f"| {arch} | {shape} | — | — | — | "
+                      f"{r['status'].upper()} | — | — | — |")
+                continue
+            print(f"| {arch} | {shape} | {fmt_s(r['compute_s'])} | "
+                  f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+                  f"**{r['bottleneck']}** | {r['useful_ratio']:.2f} | "
+                  f"{gib(r['arg_bytes_per_chip'])} | "
+                  f"{gib(r['temp_bytes_per_chip'])} |")
+
+
+def main():
+    paths = sys.argv[1:] or ["results/dryrun_baseline.jsonl"]
+    recs = load(paths)
+    meshes = sorted({k[2] for k in recs})
+    presets = sorted({k[3] for k in recs})
+    for preset in presets:
+        for mesh in meshes:
+            if any(k[2] == mesh and k[3] == preset for k in recs):
+                render(recs, mesh, preset)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Benchmark driver — one benchmark per paper claim/table (DESIGN.md
+§Paper-claim validation map).  Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--only quant]
+"""
+import argparse
+import sys
+import traceback
+
+from benchmarks import (
+    early_exit,
+    flops_trend,
+    memory_traffic,
+    quant_serving,
+    scheduler_qoe,
+    split_inference,
+    train_vs_infer_mem,
+)
+
+SUITES = {
+    "flops_trend": flops_trend,
+    "quant": quant_serving,
+    "memtraffic": memory_traffic,
+    "trainmem": train_vs_infer_mem,
+    "split": split_inference,
+    "earlyexit": early_exit,
+    "qoe": scheduler_qoe,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    chosen = (args.only.split(",") if args.only else list(SUITES))
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in chosen:
+        mod = SUITES[name]
+        try:
+            for n, us, derived in mod.bench():
+                print(f"{n},{us:.1f},{derived:.6g}")
+        except Exception:
+            failures += 1
+            print(f"{name}.FAILED,0,0")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

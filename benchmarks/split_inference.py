@@ -1,0 +1,33 @@
+"""Paper §Shared compute: split/offloaded inference (SPINN-style).
+
+Sweeps the cut point for a 14B dense model between a mid phone and the
+hub over four channel qualities; derived values: the optimal cut and
+its speedup vs fully-on-device for each channel.
+"""
+import time
+
+from repro.configs import get_config
+from repro.core.network import CHANNEL_CATALOGUE, MultiChannelLink
+from repro.core.perf_model import DEVICE_CATALOGUE, estimate, inference_cost
+from repro.core.split import choose_split
+
+
+def bench():
+    out = []
+    cfg = get_config("phi3-medium-14b")
+    phone = DEVICE_CATALOGUE["mid-phone"]
+    hub = DEVICE_CATALOGUE["edgeai-hub"]
+    for ch_name in ("ethernet", "wifi6", "wifi-legacy", "ble"):
+        t0 = time.perf_counter()
+        link = MultiChannelLink([CHANNEL_CATALOGUE[ch_name]])
+        dec = choose_split(cfg, phone, hub, link, batch=1, seq=128)
+        # fully-on-device reference = split at the last layer
+        local = choose_split(cfg, phone, phone, link, batch=1, seq=128)
+        local_t = max(local.total_s,
+                      estimate(inference_cost(cfg, 1, 128), phone).latency_s)
+        us = (time.perf_counter() - t0) * 1e6
+        out.append((f"split.{ch_name}.best_cut_layer", us, dec.split))
+        out.append((f"split.{ch_name}.latency_ms", us, dec.total_s * 1e3))
+        out.append((f"split.{ch_name}.speedup_vs_local", us,
+                    local_t / dec.total_s))
+    return out

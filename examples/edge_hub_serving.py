@@ -1,0 +1,94 @@
+"""END-TO-END DRIVER — a day in the life of an EdgeAI-Hub.
+
+Serves a small LM to a household of devices with batched requests
+through the continuous-batching engine, while the orchestrator
+schedules a mixed multi-tenant workload (streaming upscales, background
+photo classification, a federated personalization round) with
+priorities, deadlines, trust zones and a device failure mid-way.
+
+  PYTHONPATH=src python examples/edge_hub_serving.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import InputShape, get_smoke_config
+from repro.core import trustzones as tz
+from repro.core.hub import EdgeAIHub
+from repro.core.orchestrator import TaskSpec
+from repro.data import DataConfig, data_iterator
+from repro.models import model as M
+from repro.serving import Request, ServeConfig
+from repro.training import federated as fed
+from repro.configs import get_config
+
+
+def main():
+    hub = EdgeAIHub.create(policy="edf")
+    print("devices:", ", ".join(hub.registry.names()))
+
+    # ------------------------------------------------------------------
+    # 1. deploy an assistant LM on the hub and serve batched requests
+    # ------------------------------------------------------------------
+    cfg = get_smoke_config("gemma3-1b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = hub.deploy_model("assistant", cfg, params,
+                           ServeConfig(max_slots=4, max_len=96,
+                                       prefill_buckets=(8, 16)))
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for uid in range(10):
+        hub.serve("assistant", Request(
+            uid=uid, prompt=rng.integers(0, cfg.vocab_size, 6 + uid % 8,
+                                         dtype=np.int32),
+            max_new_tokens=12, priority=(2 if uid % 3 == 0 else 0)))
+    done = eng.run_until_drained()
+    toks = sum(len(r.generated) for r in done)
+    print(f"[serving] {len(done)} requests, {toks} tokens in "
+          f"{eng.steps} decode waves ({toks/(time.time()-t0):.0f} tok/s "
+          f"on CPU)")
+
+    # ------------------------------------------------------------------
+    # 2. multi-tenant QoE scheduling with a mid-run device failure
+    # ------------------------------------------------------------------
+    full = get_config("gemma3-1b")
+    for i in range(12):  # streaming upscale frames — tight deadlines
+        hub.submit(TaskSpec(kind="stream", model=full, batch=1, seq=256,
+                            priority=5, deadline_rel=0.2, arrival=i * 0.05,
+                            source_device="living-room-tv"))
+    for i in range(4):   # background gallery classification
+        hub.submit(TaskSpec(
+            kind="inference", model=full, batch=32, seq=1024, priority=0,
+            deadline_rel=30.0, arrival=i * 0.1,
+            source_device="alice-phone",
+            data=tz.DataItem("gallery", "household", "alice")))
+    hub.orchestrator.fail_device("vacuum")   # fault tolerance, mid-flight
+    report = hub.run()
+    print(f"[scheduler] {report['completed']} tasks, "
+          f"miss_rate={report['miss_rate']:.2f}, "
+          f"p99={report['p99_latency_s']*1e3:.0f}ms, "
+          f"preemptions={report['preemptions']}")
+
+    # ------------------------------------------------------------------
+    # 3. overnight federated personalization round (trust-zone gated)
+    # ------------------------------------------------------------------
+    shape = InputShape("fl", 32, 4, "train")
+    clients = ["alice-phone", "bob-phone", "living-room-tv",
+               "bob-old-phone"]
+    client_data = {n: [next(data_iterator(cfg, shape, DataConfig(seed=i)))]
+                   for i, n in enumerate(clients)}
+    item = tz.DataItem("home-speech", "household", "alice")
+    new_params, info = hub.federated_round(
+        cfg, fed.FedConfig(local_steps=2, local_lr=0.3, dp_clip=1.0,
+                           dp_noise_multiplier=0.05,
+                           secure_aggregation=True),
+        params, client_data, item)
+    print(f"[federated] round over {len(info['clients'])} zone-eligible "
+          f"clients (of {len(clients)} offered), update_norm="
+          f"{info['update_norm']:.3f} — DP + SecAgg on")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

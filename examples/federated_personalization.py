@@ -1,0 +1,51 @@
+"""Federated personalization at the consumer edge: FedAvg rounds across
+household devices with DP clipping + Gaussian noise and secure
+aggregation, gated by trust zones.  Shows global loss improving while
+individual updates stay masked.
+
+  PYTHONPATH=src python examples/federated_personalization.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import InputShape, get_smoke_config
+from repro.data import DataConfig, data_iterator
+from repro.models import model as M
+from repro.training import federated as fed
+from repro.training import optimizer as opt
+
+
+def main():
+    cfg = get_smoke_config("gemma3-1b")
+    shape = InputShape("fl", 48, 4, "train")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    # four household clients with non-IID shards (different seeds)
+    clients = {c: [next(data_iterator(cfg, shape, DataConfig(seed=c,
+                                                             branching=2)))
+                   for _ in range(2)] for c in range(4)}
+    eval_batch = clients[0][0]
+
+    fcfg = fed.FedConfig(local_steps=2, local_lr=0.4, dp_clip=2.0,
+                         dp_noise_multiplier=0.02, secure_aggregation=True)
+    print("round | eval loss | update norm   (DP clip=2.0, noise=0.02, "
+          "SecAgg on)")
+    loss = float(M.loss_fn(cfg, params, eval_batch)[0])
+    print(f"  init | {loss:9.3f} |")
+    for r in range(5):
+        params, info = fed.fed_round(cfg, fcfg, params, clients, r)
+        loss = float(M.loss_fn(cfg, params, eval_batch)[0])
+        print(f"  {r:4d} | {loss:9.3f} | {info['update_norm']:.3f}")
+
+    # demonstrate the SecAgg property: a single masked update is garbage,
+    # the sum of masked updates is exact
+    delta = {"w": jnp.ones((6,))}
+    masked = [fed.secagg_mask(delta, c, [0, 1, 2], 7) for c in range(3)]
+    total = jax.tree.map(lambda *xs: sum(xs), *masked)
+    print("\nSecAgg: one masked update:", masked[0]["w"][:3],
+          "... (hides the 1s)")
+    print("        sum of all masked :", total["w"][:3], "= 3 x exact")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Shared context demo (paper §Shared context): a smart speaker and a
+camera embed observations into ONE subspace; multiple downstream tasks
+(user intent, intrusion detection) share the fused representation —
+and the fusion stays robust when a sensor drops out.
+
+  PYTHONPATH=src python examples/shared_context.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import context as CX
+from repro.training import optimizer as opt
+
+
+def make_data(key, n, cam_d=32, mic_d=16, classes=4):
+    """Synthetic multi-view events: both sensors observe a shared latent."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    latent = jax.random.randint(k1, (n,), 0, classes)
+    proto_cam = jax.random.normal(k2, (classes, cam_d))
+    proto_mic = jax.random.normal(k3, (classes, mic_d))
+    noise = 0.7
+    cam = proto_cam[latent] + noise * jax.random.normal(k4, (n, cam_d))
+    mic = proto_mic[latent] + noise * jax.random.normal(k1, (n, mic_d))
+    return {"cam": cam, "mic": mic}, latent
+
+
+def accuracy(params, task, views, labels):
+    preds = jnp.argmax(CX.multiview_logits(params, task, views), -1)
+    return float(jnp.mean(preds == labels))
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    params = CX.init_context_space(key, {"cam": 32, "mic": 16},
+                                   shared_dim=24, num_classes=4)
+    CX.add_task_head(params, "intent", 4)
+    CX.add_task_head(params, "intrusion", 4)
+
+    views, labels = make_data(key, 512)
+    test_views, test_labels = make_data(jax.random.PRNGKey(9), 256)
+
+    grad = jax.jit(jax.grad(
+        lambda p, v, y: CX.context_loss(p, "intent", v, y)))
+    static = {k: params[k] for k in ("_key", "shared_dim", "hidden")}
+    for step in range(150):
+        g = grad({k: v for k, v in params.items() if k not in static},
+                 views, labels)
+        upd = opt.sgd_update(
+            {k: v for k, v in params.items() if k not in static}, g, 0.1)
+        params = {**upd, **static}
+
+    both = accuracy(params, "intent", test_views, test_labels)
+    cam_only = accuracy(params, "intent", {"cam": test_views["cam"]},
+                        test_labels)
+    mic_only = accuracy(params, "intent", {"mic": test_views["mic"]},
+                        test_labels)
+    print("multi-view intent accuracy:")
+    print(f"  camera + microphone : {both:.2%}")
+    print(f"  camera only (mic down): {cam_only:.2%}")
+    print(f"  microphone only       : {mic_only:.2%}")
+    print("-> fusion beats either sensor; partial availability degrades "
+          "gracefully")
+
+    # second task rides the same backbone (no per-device duplication)
+    logits = CX.multiview_logits(params, "intrusion", test_views)
+    print(f"\nsecond task ('intrusion') shares the backbone: logits "
+          f"{logits.shape} from the same fused context")
+
+
+if __name__ == "__main__":
+    main()

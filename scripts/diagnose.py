@@ -1,0 +1,48 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Hillclimb diagnostics: compile one (arch x shape) and print the top
+ops by bytes / flops / collective bytes (trip-scaled, per chip).
+
+  PYTHONPATH=src python scripts/diagnose.py <arch> <shape> [top]
+"""
+import sys
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch import presets as pz
+from repro.launch import specs as sp
+from repro.launch.hlo_analysis import breakdown
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.training import optimizer as opt
+from repro.training import trainer as tr
+
+
+def main():
+    arch, shape_name = sys.argv[1], sys.argv[2]
+    top = int(sys.argv[3]) if len(sys.argv) > 3 else 10
+    preset_name = sys.argv[4] if len(sys.argv) > 4 else "baseline"
+    preset = (pz.baseline if preset_name == "baseline" else pz.optimized)(arch)
+    shape = INPUT_SHAPES[shape_name]
+    cfg = M.specialize(get_config(arch), shape).replace(
+        param_dtype=preset.param_dtype,
+        moe_rowwise=getattr(preset, "moe_rowwise", False))
+    mesh = make_production_mesh()
+    tcfg = tr.TrainConfig(
+        optimizer=opt.OptimizerConfig(moments_dtype=preset.moments_dtype),
+        microbatches=preset.microbatches, remat=preset.remat)
+    built = sp.build(cfg, shape, mesh, tcfg=tcfg, fsdp=preset.fsdp,
+                     smart=preset.smart)
+    compiled = built.fn.lower(*built.args).compile()
+    bd = breakdown(compiled.as_text(), top=top)
+    for section in ("by_coll", "by_bytes", "by_flops"):
+        print(f"\n==== {section} ====")
+        for r in bd[section]:
+            key = {"by_coll": "coll_bytes", "by_bytes": "bytes",
+                   "by_flops": "flops"}[section]
+            print(f"  {r[key]:.3e}  x{r['scale']:<6.0f} {r['opcode']:<22s} "
+                  f"{r['shape']:<40s} {r['meta']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.configs.registry import (
+    ARCH_IDS,
+    applicable,
+    get_config,
+    get_shape,
+    get_smoke_config,
+)
+
+__all__ = [
+    "ARCH_IDS", "INPUT_SHAPES", "InputShape", "ModelConfig",
+    "applicable", "get_config", "get_shape", "get_smoke_config",
+]

@@ -1,0 +1,22 @@
+from repro.core import (
+    context,
+    earlyexit,
+    network,
+    orchestrator,
+    perf_model,
+    placement,
+    resource,
+    scheduler,
+    split,
+    trustzones,
+)
+from repro.core.hub import EdgeAIHub, default_home
+from repro.core.orchestrator import Orchestrator, TaskSpec
+from repro.core.scheduler import AITask, EdgeScheduler
+
+__all__ = [
+    "AITask", "EdgeAIHub", "EdgeScheduler", "Orchestrator", "TaskSpec",
+    "context", "default_home", "earlyexit", "network", "orchestrator",
+    "perf_model", "placement", "resource", "scheduler", "split",
+    "trustzones",
+]

@@ -1,0 +1,71 @@
+"""Shared context between sensing devices (paper §Shared context).
+
+* ``SharedContextSpace`` — implicit context sharing: each sensor embeds
+  its observations into a COMMON subspace via a per-device projection;
+  downstream tasks consume fused embeddings ("embedding subsets of
+  available sensors into a common subspace").
+* multi-view fusion — several devices observing the same event fuse
+  their embeddings to improve a shared task (smart speaker + camera).
+* multi-task heads — different tasks share one DNN backend instead of
+  replicating it per device.
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def init_context_space(key, sensor_dims: Dict[str, int], shared_dim: int,
+                       num_classes: int, hidden: int = 64):
+    ks = jax.random.split(key, len(sensor_dims) + 2)
+    proj = {
+        name: L._dense_init(k, (dim, shared_dim))
+        for (name, dim), k in zip(sorted(sensor_dims.items()), ks)
+    }
+    return {
+        "proj": proj,
+        "trunk_w": L._dense_init(ks[-2], (shared_dim, hidden)),
+        "heads": {},
+        "_key": ks[-1],
+        "shared_dim": shared_dim,
+        "hidden": hidden,
+    }
+
+
+def add_task_head(params, task: str, num_classes: int):
+    key = params["_key"]
+    params["_key"], sub = jax.random.split(key)
+    params["heads"][task] = L._dense_init(
+        sub, (params["hidden"], num_classes))
+    return params
+
+
+def embed_views(params, views: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Project each sensor's features into the shared subspace and fuse
+    (mean over available views — robust to partial availability)."""
+    embs = [views[name] @ params["proj"][name]
+            for name in sorted(views) if name in params["proj"]]
+    if not embs:
+        raise ValueError("no recognised sensor views")
+    return jnp.mean(jnp.stack(embs), axis=0)
+
+
+def task_logits(params, task: str, fused: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.relu(fused @ params["trunk_w"])
+    return h @ params["heads"][task]
+
+
+def multiview_logits(params, task: str,
+                     views: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    return task_logits(params, task, embed_views(params, views))
+
+
+def context_loss(params, task: str, views: Dict[str, jnp.ndarray],
+                 labels: jnp.ndarray) -> jnp.ndarray:
+    logits = multiview_logits(params, task, views)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))

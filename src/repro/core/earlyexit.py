@@ -1,0 +1,130 @@
+"""Early-exit networks (paper Sustainability pillar; HAPI [25]/SPINN [24]).
+
+Attach lightweight exit heads to intermediate layers of a dense trunk;
+at serve time a confidence threshold preempts computation on easy
+inputs.  TPU adaptation (DESIGN.md): exits are evaluated on the whole
+batch SPMD-style and the *batch exit mask* decides skipping — per-sample
+divergent control flow has no TPU analogue, so savings are realized at
+batch granularity (all-exited => remaining layers skipped) and measured
+in expected-FLOPs for per-sample accounting.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+def init_exit_heads(cfg: ModelConfig, key, exit_layers: Sequence[int]):
+    """One (norm + unembed-tied) head per exit point."""
+    norm_init, _ = L.make_norm(cfg)
+    heads = []
+    for i, _ in enumerate(exit_layers):
+        heads.append({"ln": norm_init(cfg.d_model)})
+    return {"exits": heads, "exit_layers": tuple(exit_layers)}
+
+
+def _layer(trunk, i: int):
+    return jax.tree.map(lambda a: a[i], trunk["layers"])
+
+
+def _exit_logits(cfg, params, head, x):
+    _, norm = L.make_norm(cfg)
+    h = norm(head["ln"], x)
+    return L.unembed(cfg, params["embed"], params["unembed"], h)
+
+
+def forward_with_exits(cfg: ModelConfig, params, heads, tokens):
+    """All exit logits (training mode). Returns list[(layer, logits)]."""
+    if cfg.pattern_period > 1:
+        raise NotImplementedError("early exits target uniform dense stacks")
+    x = L.embed(cfg, params["embed"], tokens)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    exit_at = dict(zip(heads["exit_layers"], range(len(heads["exits"]))))
+    outs = []
+    for i in range(cfg.num_layers):
+        x = T.block_fwd(cfg, _layer(params["trunk"], i), x, positions,
+                        is_global=True)
+        if i in exit_at:
+            outs.append((i, _exit_logits(cfg, params,
+                                         heads["exits"][exit_at[i]], x)))
+    _, norm = L.make_norm(cfg)
+    xf = norm(params["final_norm"], x)
+    outs.append((cfg.num_layers - 1,
+                 L.unembed(cfg, params["embed"], params["unembed"], xf)))
+    return outs
+
+
+def exit_loss(cfg: ModelConfig, params, heads, batch,
+              weights: Optional[Sequence[float]] = None):
+    """Weighted sum of per-exit cross-entropies (joint training)."""
+    outs = forward_with_exits(cfg, params, heads, batch["tokens"])
+    targets = batch["targets"]
+    if weights is None:
+        weights = [1.0] * len(outs)
+    total = 0.0
+    for w, (_, logits) in zip(weights, outs):
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+        total = total + w * jnp.mean(nll)
+    return total / sum(weights)
+
+
+@dataclass
+class ExitReport:
+    predictions: jnp.ndarray       # (B, S)
+    exit_layer: jnp.ndarray        # (B,) layer index each example left at
+    expected_layers: float         # mean layers executed per example
+    flops_saved_frac: float        # vs. always running the full stack
+
+
+def serve_early_exit(cfg: ModelConfig, params, heads, tokens,
+                     threshold: float = 0.7,
+                     conf_reduce: str = "mean") -> ExitReport:
+    """Confidence-gated inference.
+
+    conf_reduce: per-example confidence over token positions — "mean"
+    (LM-style; first tokens of a sequence are inherently unpredictable)
+    or "min" (strictest, classification-style).
+    """
+    x = L.embed(cfg, params["embed"], tokens)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    exit_at = dict(zip(heads["exit_layers"], range(len(heads["exits"]))))
+
+    exited = jnp.zeros((B,), bool)
+    exit_layer = jnp.full((B,), cfg.num_layers - 1, jnp.int32)
+    preds = jnp.zeros((B, S), jnp.int32)
+
+    for i in range(cfg.num_layers):
+        if bool(jnp.all(exited)):
+            break  # batch-granular compute skip (TPU-friendly)
+        x = T.block_fwd(cfg, _layer(params["trunk"], i), x, positions,
+                        is_global=True)
+        if i in exit_at:
+            logits = _exit_logits(cfg, params,
+                                  heads["exits"][exit_at[i]], x)
+            probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+            tok_conf = jnp.max(probs, axis=-1)
+            conf = (jnp.min(tok_conf, axis=-1) if conf_reduce == "min"
+                    else jnp.mean(tok_conf, axis=-1))
+            newly = (~exited) & (conf >= threshold)
+            preds = jnp.where(newly[:, None], jnp.argmax(logits, -1), preds)
+            exit_layer = jnp.where(newly, i, exit_layer)
+            exited = exited | newly
+
+    _, norm = L.make_norm(cfg)
+    logits = L.unembed(cfg, params["embed"], params["unembed"],
+                       norm(params["final_norm"], x))
+    preds = jnp.where(exited[:, None], preds, jnp.argmax(logits, -1))
+
+    expected = float(jnp.mean(exit_layer + 1))
+    saved = 1.0 - expected / cfg.num_layers
+    return ExitReport(preds, exit_layer, expected, saved)

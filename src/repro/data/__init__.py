@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, data_iterator, synthetic_tokens
+
+__all__ = ["DataConfig", "data_iterator", "synthetic_tokens"]

@@ -1,0 +1,120 @@
+"""Blocked (flash-style) causal attention Pallas TPU kernel.
+
+Online-softmax attention with GQA, optional sliding window and logit
+softcap — one kernel covers phi3/llama (full causal), gemma2/3 (window +
+softcap) and the hybrid's shared block.  VMEM working set per grid step:
+one (bq, hd) query tile, one (bk, hd) K/V tile pair and the f32
+running (m, l, acc) scratch; K/V tiles stream down the innermost grid
+dimension, and out-of-band blocks (beyond causal front or behind the
+sliding window) are skipped via ``pl.when`` so windowed layers do
+O(S·W) work, not O(S²).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, softcap: float, window: int, bq: int, bk: int,
+            n_k: int):
+    i = pl.program_id(2)          # query block
+    j = pl.program_id(3)          # kv block (innermost, sequential)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # band check: is this (i, j) block inside the causal/window band?
+    q_lo, q_hi = i * bq, i * bq + bq - 1
+    k_lo, k_hi = j * bk, j * bk + bk - 1
+    relevant = k_lo <= q_hi
+    if window > 0:
+        relevant &= k_hi > q_lo - window
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...][:, 0]                     # (bq,)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = (l_scr[...][:, 0] * alpha + jnp.sum(p, axis=1))[:, None]
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new[:, None]
+
+    @pl.when(j == n_k - 1)
+    def _finalize():
+        l = l_scr[...][:, 0]
+        o_ref[0, 0, ...] = (acc_scr[...]
+                            / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def _pick_block(n: int, pref=(512, 256, 128, 64, 32, 16, 8)) -> int:
+    for c in pref:
+        if n % c == 0 and c <= n:
+            return c
+    return n
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "window", "softcap", "interpret"))
+def flash_attention(q, k, v, *, scale: float, window: int = 0,
+                    softcap: float = 0.0, interpret: bool = False):
+    """q: (B, S, H, hd); k, v: (B, T, K, hd) with H % K == 0 (GQA).
+
+    Causal; ``window`` > 0 adds a sliding window.  Returns (B, S, H, hd).
+    """
+    B, S, H, hd = q.shape
+    _, T, Kh, _ = k.shape
+    G = H // Kh
+    qt = q.transpose(0, 2, 1, 3)                  # (B, H, S, hd)
+    kt = k.transpose(0, 2, 1, 3)                  # (B, K, T, hd)
+    vt = v.transpose(0, 2, 1, 3)
+    bq, bk = _pick_block(S), _pick_block(T)
+    grid = (B, H, S // bq, T // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, softcap=softcap,
+                          window=window, bq=bq, bk=bk, n_k=grid[3]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,36 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run in ``interpret=True`` mode — the
+kernel body executes step-by-step in Python, validating BlockSpec
+indexing and the numerics.  On TPU backends they compile for real.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import quant_matmul as _qm
+from repro.kernels import ssd_scan as _ssd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def quant_matmul(x, wq, scale, out_dtype=jnp.bfloat16):
+    return _qm.quant_matmul(x, wq, scale, out_dtype=out_dtype,
+                            interpret=_interpret())
+
+
+quantize_weights = _qm.quantize_weights
+
+
+def flash_attention(q, k, v, *, scale, window: int = 0, softcap: float = 0.0):
+    return _fa.flash_attention(q, k, v, scale=scale, window=window,
+                               softcap=softcap, interpret=_interpret())
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 128, h0=None):
+    return _ssd.ssd_scan(x, dt, A, B, C, chunk=chunk, h0=h0,
+                         interpret=_interpret())

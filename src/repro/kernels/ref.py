@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+Deliberately written in the most obvious way possible — masked full
+softmax, dense dequant matmul, step-by-step SSD recurrence — so the
+kernels are validated against independent math, not a refactor of
+themselves.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quant_matmul_ref(x, wq, scale, out_dtype=jnp.bfloat16):
+    """x (M,K) @ dequant(wq (K,N) int8, scale (N,))."""
+    w = wq.astype(jnp.float32) * scale[None, :].astype(jnp.float32)
+    out = jnp.dot(x.astype(jnp.float32), w)
+    return out.astype(out_dtype)
+
+
+def flash_attention_ref(q, k, v, *, scale, window: int = 0,
+                        softcap: float = 0.0):
+    """q (B,S,H,hd); k,v (B,T,K,hd). Masked full-softmax attention."""
+    B, S, H, hd = q.shape
+    _, T, Kh, _ = k.shape
+    G = H // Kh
+    qg = q.reshape(B, S, Kh, G, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, kf) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, vf)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, B, C, h0=None):
+    """Naive sequential SSD recurrence (the definition, O(L) steps).
+
+    x (b,l,h,p); dt (b,l,h); A (h,); B,C (b,l,n); h0 (b,h,p,n)|None.
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    hs = (jnp.zeros((b, h, p, n), jnp.float32) if h0 is None
+          else h0.astype(jnp.float32))
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(hstate, inp):
+        xt, dtt, Bt, Ct = inp
+        a = jnp.exp(dtt * Af)                          # (b,h)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dtt, xt, Bt)
+        hstate = hstate * a[:, :, None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", hstate, Ct)
+        return hstate, y
+
+    hs, ys = jax.lax.scan(
+        step, hs,
+        (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+         Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), hs

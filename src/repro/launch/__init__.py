@@ -1,0 +1,3 @@
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+
+__all__ = ["make_local_mesh", "make_production_mesh"]

@@ -1,0 +1,389 @@
+"""Structured post-SPMD HLO analysis with while-loop trip-count scaling.
+
+``compiled.cost_analysis()`` counts a ``lax.scan`` body ONCE (XLA does
+not multiply by trip count), which under-reports FLOPs/bytes by ~the
+layer count for scanned models.  This module parses the partitioned HLO
+text into computations, builds a per-computation symbol table, and
+accumulates costs from ENTRY with every ``while`` body multiplied by its
+trip count (recovered from the loop-condition constant).
+
+Costs per op:
+  * FLOPs — ``dot`` ops: 2 * prod(batch+free dims) * prod(contracting);
+    fusion ops recurse into their called computation.
+  * bytes — sum of operand + result buffer sizes for every
+    memory-touching op (post-fusion roofline assumption: each top-level
+    op streams operands from HBM and writes its result).
+  * collective bytes — result sizes of all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute (async -start
+    counted, -done skipped).
+
+Shapes in the partitioned module are per-device, so every number this
+produces is per-chip.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?(%[\w.\-]+)\s*\(.*\)\s*->\s*(.+?)\s*\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(\(?[^=]+?\)?)\s+"
+    r"([\w\-]+)\((.*)$")
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-reduce-start", "all-gather-start",
+                "collective-permute-start", "reduce-scatter-start",
+                "all-to-all-start"}
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "partition-id", "replica-id",
+             "while", "conditional", "call", "iota", "reshape",
+             "copy-done", "all-reduce-done", "all-gather-done",
+             "collective-permute-done", "reduce-scatter-done",
+             "all-to-all-done"}
+
+
+def _shape_elems(shape_str: str):
+    """Yield (dtype, dims list) for every array in a (possibly tuple) type."""
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        ds = [int(d) for d in dims.split(",") if d.strip()]
+        yield dt, ds
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, ds in _shape_elems(shape_str):
+        total += _DTYPE_BYTES[dt] * math.prod(ds) if ds else _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Op:
+    name: str
+    shape: str
+    opcode: str
+    rest: str            # operand list + attributes (raw tail)
+    operands: list = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    ops: list = field(default_factory=list)
+    table: dict = field(default_factory=dict)   # %name -> shape str
+
+
+_INSTR_START = re.compile(r"^\s*(ROOT\s+)?%[\w.\-]+\s*=\s")
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def _logical_lines(hlo: str):
+    """Merge wrapped instruction lines (long tuple types span lines) and
+    strip /*...*/ comments (they contain '=' which breaks op parsing)."""
+    buf = None
+    for line in _COMMENT_RE.sub("", hlo).splitlines():
+        stripped = line.strip()
+        if _INSTR_START.match(line):
+            if buf is not None:
+                yield buf
+            buf = line
+        elif stripped == "}" or (_COMP_HDR.match(stripped)
+                                 if "{" in line else False) or \
+                stripped.startswith(("HloModule", "ENTRY")):
+            if buf is not None:
+                yield buf
+                buf = None
+            yield line
+        elif buf is not None:
+            buf += " " + stripped
+        else:
+            yield line
+    if buf is not None:
+        yield buf
+
+
+def parse_module(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in _logical_lines(hlo):
+        m = _COMP_HDR.match(line.strip()) if "{" in line else None
+        if m and ("->" in line):
+            cur = Computation(m.group(2), bool(m.group(1)))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        om = _OP_RE.match(line)
+        if not om:
+            continue
+        name, shape, opcode, rest = om.groups()
+        operands = re.findall(r"%[\w.\-]+", rest.split(")", 1)[0])
+        op = Op(name, shape.strip(), opcode, rest, operands)
+        cur.ops.append(op)
+        cur.table[name] = op.shape
+    return comps
+
+
+def _dot_flops(op: Op, table: dict) -> float:
+    lhs_sh = table.get(op.operands[0], "") if op.operands else ""
+    lhs_c = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    lhs_b = re.search(r"lhs_batch_dims=\{([0-9,]*)\}", op.rest)
+    dims = list(_shape_elems(lhs_sh))
+    if not dims:
+        return 0.0
+    _, lhs_dims = dims[0]
+    contract = 1
+    if lhs_c:
+        for d in lhs_c.group(1).split(","):
+            if d.strip():
+                contract *= lhs_dims[int(d)]
+    out_elems = 0
+    for _, ds in _shape_elems(op.shape):
+        out_elems += math.prod(ds) if ds else 1
+    return 2.0 * out_elems * contract
+
+
+def _trip_count(cond: Computation) -> int:
+    """Scan-style loops compare the induction var against a constant."""
+    consts = []
+    for o in cond.ops:
+        if o.opcode == "constant" and o.shape.startswith("s32[]"):
+            m = re.match(r"(\d+)", o.rest)
+            if m:
+                consts.append(int(m.group(1)))
+        # constants may also be inlined in compare(...) operands
+        for m in re.finditer(r"s32\[\] constant\((\d+)\)", o.rest):
+            consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_counts: dict = field(default_factory=dict)
+
+    def add(self, other: "Costs", scale: float = 1.0):
+        self.flops += other.flops * scale
+        self.bytes += other.bytes * scale
+        self.coll_bytes += other.coll_bytes * scale
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v * scale
+
+
+def _op_called(op: Op) -> dict[str, str]:
+    out = {}
+    for attr in ("calls", "to_apply", "condition", "body",
+                 "true_computation", "false_computation"):
+        m = re.search(attr + r"=(%[\w.\-]+)", op.rest)
+        if m:
+            out[attr] = m.group(1)
+    m = re.search(r"branch_computations=\{([^}]*)\}", op.rest)
+    if m:
+        for i, b in enumerate(re.findall(r"%[\w.\-]+", m.group(1))):
+            out[f"branch{i}"] = b
+    return out
+
+
+def _sliced_param_bytes(called_comp: Computation) -> dict[int, int]:
+    """Parameters of a fusion body that are only dynamic-sliced: charge
+    the slice size, not the full buffer (scan weight streaming)."""
+    param_idx: dict[str, int] = {}
+    for o in called_comp.ops:
+        if o.opcode == "parameter":
+            m = re.match(r"(\d+)", o.rest)
+            if m:
+                param_idx[o.name] = int(m.group(1))
+    out: dict[int, int] = {}
+    uses: dict[str, list] = {}
+    for o in called_comp.ops:
+        for operand in o.operands:
+            if operand in param_idx:
+                uses.setdefault(operand, []).append(o)
+    for pname, ops in uses.items():
+        if ops and all(o.opcode == "dynamic-slice" for o in ops):
+            out[param_idx[pname]] = sum(shape_bytes(o.shape) for o in ops)
+    return out
+
+
+def _op_bytes(op: Op, comp: Computation, comps: dict, called: dict) -> int:
+    """HBM traffic of one op: result write + operand reads, with
+    slice/in-place-update awareness."""
+    if op.opcode == "dynamic-slice":
+        return 2 * shape_bytes(op.shape)
+    if op.opcode == "dynamic-update-slice":
+        upd = shape_bytes(comp.table.get(op.operands[1], "")) \
+            if len(op.operands) > 1 else 0
+        return 2 * upd          # in-place: read+write the update window
+    sliced: dict[int, int] = {}
+    root_dus_update = None
+    if op.opcode == "fusion" and called.get("calls") in comps:
+        body = comps[called["calls"]]
+        sliced = _sliced_param_bytes(body)
+        root = body.ops[-1] if body.ops else None
+        if root is not None and root.opcode == "dynamic-update-slice" \
+                and len(root.operands) > 1:
+            root_dus_update = shape_bytes(
+                body.table.get(root.operands[1], ""))
+
+    if root_dus_update is not None:
+        b = 2 * root_dus_update    # in-place cache write
+    else:
+        b = shape_bytes(op.shape)
+    for i, o in enumerate(op.operands):
+        if i in sliced:
+            b += sliced[i]
+        elif root_dus_update is not None and i == 0:
+            continue               # the aliased full buffer isn't streamed
+        else:
+            b += shape_bytes(comp.table.get(o, ""))
+    return b
+
+
+def _analyze_comp(name: str, comps: dict, memo: dict) -> Costs:
+    if name in memo:
+        return memo[name]
+    memo[name] = Costs()  # break cycles defensively
+    comp = comps.get(name)
+    if comp is None:
+        return memo[name]
+    c = Costs()
+    for op in comp.ops:
+        called = _op_called(op)
+        if op.opcode == "while":
+            trip = _trip_count(comps[called["condition"]]) \
+                if called.get("condition") in comps else 1
+            body = _analyze_comp(called["body"], comps, memo) \
+                if called.get("body") else Costs()
+            c.add(body, scale=trip)
+            continue
+        if op.opcode == "conditional":
+            branches = [v for k, v in called.items()
+                        if k.startswith(("true", "false", "branch"))]
+            if branches:
+                sub = [_analyze_comp(b, comps, memo) for b in branches]
+                # charge the most expensive branch
+                c.add(max(sub, key=lambda s: s.flops + s.bytes))
+            continue
+        if op.opcode == "call" and "to_apply" in called:
+            c.add(_analyze_comp(called["to_apply"], comps, memo))
+            continue
+
+        if op.opcode == "dot":
+            c.flops += _dot_flops(op, comp.table)
+        elif op.opcode == "fusion" and "calls" in called:
+            inner = _analyze_comp(called["calls"], comps, memo)
+            c.flops += inner.flops      # dots inside the fusion body
+        elif op.opcode.startswith("convolution"):
+            c.flops += 0.0              # none in this framework
+
+        base = op.opcode.replace("-start", "")
+        if base in ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute") \
+                and not op.opcode.endswith("-done"):
+            b = shape_bytes(op.shape)
+            c.coll_bytes += b
+            c.coll_counts[base] = c.coll_counts.get(base, 0) + 1
+
+        if op.opcode in _FREE_OPS:
+            continue
+        c.bytes += _op_bytes(op, comp, comps, called)
+    memo[name] = c
+    return c
+
+
+def analyze_hlo(hlo_text: str) -> Costs:
+    """Per-chip costs of one execution of the module's ENTRY."""
+    comps = parse_module(hlo_text)
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return Costs()
+    # fusion bodies must not be double counted: they are only reached via
+    # fusion ops (handled above), while/call/cond reached explicitly.
+    return _analyze_comp(entry, comps, {})
+
+
+# ---------------------------------------------------------------------------
+# per-op breakdown (hillclimb diagnostics)
+# ---------------------------------------------------------------------------
+
+def breakdown(hlo_text: str, top: int = 15) -> dict:
+    """Top ops by (trip-scaled) bytes / flops / collective bytes, with
+    the computation they live in and the loop scale that applies."""
+    comps = parse_module(hlo_text)
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+    scales: dict[str, float] = {entry: 1.0}
+    order = [entry]
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for op in comp.ops:
+            called = _op_called(op)
+            if op.opcode == "while" and called.get("body") in comps:
+                trip = _trip_count(comps[called["condition"]]) \
+                    if called.get("condition") in comps else 1
+                for sub in ("body", "condition"):
+                    nm = called.get(sub)
+                    if nm in comps:
+                        scales[nm] = scales.get(nm, 0) + scales[cname] * trip
+                        order.append(nm)
+            elif op.opcode == "call" and called.get("to_apply") in comps:
+                nm = called["to_apply"]
+                scales[nm] = scales.get(nm, 0) + scales[cname]
+                order.append(nm)
+
+    rows = []
+    for cname, scale in scales.items():
+        comp = comps[cname]
+        for op in comp.ops:
+            called = _op_called(op)
+            if op.opcode in ("while", "call", "conditional"):
+                continue
+            flops = 0.0
+            if op.opcode == "dot":
+                flops = _dot_flops(op, comp.table)
+            elif op.opcode == "fusion" and called.get("calls") in comps:
+                flops = _analyze_comp(called["calls"], comps, {}).flops
+            nbytes = 0 if op.opcode in _FREE_OPS else \
+                _op_bytes(op, comp, comps, called)
+            base = op.opcode.replace("-start", "")
+            coll = shape_bytes(op.shape) if base in (
+                "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute") and not op.opcode.endswith("-done") \
+                else 0
+            if nbytes or flops or coll:
+                rows.append({
+                    "op": op.name, "opcode": op.opcode, "comp": cname,
+                    "scale": scale, "bytes": nbytes * scale,
+                    "flops": flops * scale, "coll_bytes": coll * scale,
+                    "shape": op.shape[:60],
+                    "meta": (re.search(r'op_name="([^"]*)"', op.rest)
+                             or [None, ""])[1][:90],
+                })
+    return {
+        "by_bytes": sorted(rows, key=lambda r: -r["bytes"])[:top],
+        "by_flops": sorted(rows, key=lambda r: -r["flops"])[:top],
+        "by_coll": sorted([r for r in rows if r["coll_bytes"]],
+                          key=lambda r: -r["coll_bytes"])[:top],
+    }

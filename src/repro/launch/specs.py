@@ -1,0 +1,162 @@
+"""Step builders + input_specs for the multi-pod dry-run and launchers.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input
+(weak-type-correct, shardable, no device allocation).  ``build_train`` /
+``build_serve`` / ``build_prefill`` return (jitted_fn, example_args) —
+``fn.lower(*args).compile()`` is the dry-run;  feeding real arrays is
+the launcher.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch import sharding as sh
+from repro.models import model as M
+from repro.training import trainer as tr
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStructs for every model input of this (arch, shape)."""
+    if shape.kind == "decode":
+        B = shape.global_batch
+        cache = jax.eval_shape(partial(M.init_cache, cfg, B, shape.seq_len))
+        return {
+            "cache": cache,
+            "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+        }
+    return M.batch_shapes(cfg, shape)
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Built:
+    fn: Any                 # jitted function
+    args: tuple             # ShapeDtypeStructs to .lower(*args)
+    in_shardings: Any
+    out_shardings: Any
+
+
+def build_train(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                tcfg: Optional[tr.TrainConfig] = None, *,
+                fsdp: bool = False, smart: bool = False) -> Built:
+    tcfg = tcfg or tr.TrainConfig()
+    state_shape = jax.eval_shape(
+        partial(tr.init_train_state, cfg, tcfg, jax.random.PRNGKey(0)))
+    pspec = sh.param_pspecs(cfg, mesh, state_shape["params"], fsdp=fsdp,
+                            smart=smart)
+    ospec = sh.opt_pspecs(pspec, state_shape["opt"], mesh)
+    state_spec = {"params": pspec, "opt": ospec}
+
+    batch_shape = M.batch_shapes(cfg, shape)
+    bspec = sh.batch_pspecs(cfg, mesh, batch_shape)
+
+    step = tr.make_train_step(cfg, tcfg)
+    in_sh = (sh.named(mesh, state_spec), sh.named(mesh, bspec))
+    out_sh = (sh.named(mesh, state_spec), None)
+    fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                 donate_argnums=(0,))
+    return Built(fn, (state_shape, batch_shape), in_sh, out_sh)
+
+
+# ---------------------------------------------------------------------------
+# serve: decode + prefill
+# ---------------------------------------------------------------------------
+
+def build_serve(cfg: ModelConfig, shape: InputShape, mesh: Mesh, *,
+                fsdp: bool = False, smart: bool = False) -> Built:
+    """serve_step: ONE new token against a seq_len cache."""
+    assert shape.kind == "decode"
+    B = shape.global_batch
+    specs = input_specs(cfg, shape)
+    params_shape = jax.eval_shape(
+        partial(M.init_params, cfg, jax.random.PRNGKey(0)))
+    pspec = sh.param_pspecs(cfg, mesh, params_shape, smart=smart)
+    cspec = sh.cache_pspecs(cfg, mesh, specs["cache"], B, smart=smart)
+    da = sh.data_axes(mesh)
+    dax = da[0] if len(da) == 1 else tuple(da)
+    bdiv = B % sh._axsize(mesh, dax) == 0
+    vdiv = cfg.vocab_size % sh._axsize(mesh, "model") == 0
+    tok_spec = P(dax, None) if bdiv else P(None, None)
+    pos_spec = P(dax) if bdiv else P(None)
+    logits_spec = P(dax if bdiv else None, None, "model" if vdiv else None)
+
+    def serve_step(params, cache, tokens, pos):
+        return M.decode_step(cfg, params, cache, tokens, pos)
+
+    in_sh = (sh.named(mesh, pspec), sh.named(mesh, cspec),
+             NamedSharding(mesh, tok_spec), NamedSharding(mesh, pos_spec))
+    out_sh = (NamedSharding(mesh, logits_spec), sh.named(mesh, cspec))
+    fn = jax.jit(serve_step, in_shardings=in_sh, out_shardings=out_sh,
+                 donate_argnums=(1,))
+    args = (params_shape, specs["cache"], specs["tokens"], specs["pos"])
+    return Built(fn, args, in_sh, out_sh)
+
+
+def build_prefill(cfg: ModelConfig, shape: InputShape, mesh: Mesh, *,
+                  fsdp: bool = False, smart: bool = False) -> Built:
+    """prefill step: run the whole prompt, emit last logits + full cache."""
+    assert shape.kind == "prefill"
+    B, S = shape.global_batch, shape.seq_len
+    params_shape = jax.eval_shape(
+        partial(M.init_params, cfg, jax.random.PRNGKey(0)))
+    pspec = sh.param_pspecs(cfg, mesh, params_shape, fsdp=fsdp, smart=smart)
+    batch_shape = M.batch_shapes(cfg, shape)
+    batch_shape.pop("targets", None)
+    bspec = sh.batch_pspecs(cfg, mesh, batch_shape)
+    cache_shape = jax.eval_shape(partial(M.init_cache, cfg, B, S))
+    cspec = sh.cache_pspecs(cfg, mesh, cache_shape, B, smart=smart)
+
+    def prefill_step(params, batch):
+        return M.prefill(cfg, params, batch, S)
+
+    da = sh.data_axes(mesh)
+    dax = da[0] if len(da) == 1 else tuple(da)
+    vdiv = cfg.vocab_size % sh._axsize(mesh, "model") == 0
+    logits_spec = P(dax if B % sh._axsize(mesh, dax) == 0 else None, None,
+                    "model" if vdiv else None)
+    in_sh = (sh.named(mesh, pspec), sh.named(mesh, bspec))
+    out_sh = (NamedSharding(mesh, logits_spec), sh.named(mesh, cspec))
+    fn = jax.jit(prefill_step, in_shardings=in_sh, out_shardings=out_sh)
+    return Built(fn, (params_shape, batch_shape), in_sh, out_sh)
+
+
+def _maybe_enable_seq_parallel_attn(cfg: ModelConfig, shape: InputShape,
+                                    mesh: Mesh) -> None:
+    """§Perf: when query heads can't shard over `model`, shard the query
+    SEQUENCE over it inside blockwise attention (layers.py knob;
+    process-scoped, must stay set through .lower())."""
+    from repro.models import layers as L
+    msize = mesh.shape["model"]
+    heads_div = cfg.num_heads > 0 and cfg.num_heads % msize == 0
+    if heads_div or cfg.num_heads == 0 or shape.kind == "decode":
+        return
+    per = shape.seq_len // msize
+    if shape.seq_len % msize or per < L.BLOCKWISE_CHUNK \
+            or per % L.BLOCKWISE_CHUNK:
+        return
+    spec = P(None, "model", None, None, None, None)
+    L.SEQ_PARALLEL_ATTN = (msize, NamedSharding(mesh, spec))
+
+
+def build(cfg: ModelConfig, shape: InputShape, mesh: Mesh, *,
+          tcfg: Optional[tr.TrainConfig] = None, fsdp: bool = False,
+          smart: bool = False) -> Built:
+    if smart:
+        _maybe_enable_seq_parallel_attn(cfg, shape, mesh)
+    if shape.kind == "train":
+        return build_train(cfg, shape, mesh, tcfg, fsdp=fsdp, smart=smart)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, mesh, fsdp=fsdp, smart=smart)
+    return build_serve(cfg, shape, mesh, fsdp=fsdp, smart=smart)

@@ -1,0 +1,77 @@
+"""Distributed training launcher.
+
+Runs real steps on whatever mesh the host offers (CPU: 1 device; a TPU
+slice: the production mesh).  The same ``build_train`` artifact the
+dry-run compiles is executed here with live data from the pipeline —
+config system, sharding rules and step function are shared, so a
+passing dry-run IS the deploy config.
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b \
+      --steps 50 --batch 8 --seq 128 --scale smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.configs import INPUT_SHAPES, ARCH_IDS, InputShape, get_config, \
+    get_smoke_config
+from repro.data import DataConfig, data_iterator
+from repro.launch import specs as sp
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models import model as M
+from repro.training import checkpoint as ckpt
+from repro.training import optimizer as opt
+from repro.training import trainer as tr
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="gemma3-1b")
+    ap.add_argument("--scale", choices=("smoke", "full"), default="smoke",
+                    help="smoke = reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--moments", choices=("float32", "int8"),
+                    default="float32")
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args()
+
+    cfg = (get_smoke_config(args.arch) if args.scale == "smoke"
+           else get_config(args.arch))
+    shape = InputShape("cli", args.seq, args.batch, "train")
+    cfg = M.specialize(cfg, shape)
+    mesh = make_local_mesh()
+    tcfg = tr.TrainConfig(
+        optimizer=opt.OptimizerConfig(
+            learning_rate=args.lr, warmup_steps=max(args.steps // 10, 1),
+            total_steps=args.steps, moments_dtype=args.moments),
+        microbatches=args.microbatches)
+
+    built = sp.build_train(cfg, shape, mesh, tcfg)
+    state = tr.init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+    it = data_iterator(cfg, shape, DataConfig(branching=4))
+
+    t0 = time.time()
+    for step in range(args.steps):
+        batch = next(it)
+        state, metrics = built.fn(state, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            m = {k: round(float(v), 4) for k, v in metrics.items()}
+            print(json.dumps({"step": step,
+                              "elapsed_s": round(time.time() - t0, 1), **m}))
+    if args.checkpoint:
+        ckpt.save(args.checkpoint, state["params"],
+                  {"arch": args.arch, "steps": args.steps})
+        print(f"saved params -> {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+from repro.models import model
+from repro.models.model import (
+    apply,
+    batch_shapes,
+    count_params,
+    decode_step,
+    init_cache,
+    init_params,
+    loss_fn,
+    make_batch,
+    prefill,
+    specialize,
+)
+
+__all__ = [
+    "apply", "batch_shapes", "count_params", "decode_step", "init_cache",
+    "init_params", "loss_fn", "make_batch", "model", "prefill", "specialize",
+]

@@ -1,0 +1,146 @@
+"""Zamba2-style hybrid trunk: Mamba2 blocks + a SHARED attention block.
+
+[arXiv:2411.15242] One attention(+MLP) block whose weights are shared
+across all of its periodic applications (every ``hybrid_attn_period``-th
+position); all other positions are Mamba2 blocks.  81 layers @ period 6
+=> 13 super-blocks of (5 mamba + 1 shared-attn) + 3 remainder mamba.
+
+Long-context behaviour: training/prefill use full causal attention (as
+the model is trained); serving decode uses a sliding-window ring cache
+of ``local_window`` — this is what makes ``long_500k`` sub-quadratic
+per DESIGN.md §Arch-applicability (SSM state is O(1) regardless).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import transformer as T
+
+Params = dict
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 6)
+    period = cfg.hybrid_attn_period
+    nb = cfg.num_layers // period
+    rem = cfg.num_layers % period
+    p = {
+        "embed": L.init_embedding(cfg, ks[0]),
+        "unembed": L.init_unembed(cfg, ks[1]),
+        "mamba": S.init_mamba_block(cfg, ks[2], stack=(nb, period - 1)),
+        "shared_attn": T.init_block(cfg, ks[3]),   # ONE set of weights
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+    }
+    if rem:
+        p["rem_mamba"] = S.init_mamba_block(cfg, ks[4], stack=(rem,))
+    return p
+
+
+def _superblocks(cfg: ModelConfig) -> tuple[int, int]:
+    period = cfg.hybrid_attn_period
+    return cfg.num_layers // period, cfg.num_layers % period
+
+
+# ---------------------------------------------------------------------------
+# forward / prefill / decode
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params: Params, tokens, *, use_flash=False,
+            use_kernel=False, remat: Optional[str] = None):
+    x = L.embed(cfg, params["embed"], tokens)
+    B, Sq, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+    shared = params["shared_attn"]
+
+    def mamba_body(h, lp):
+        h, _ = S.block_fwd(cfg, lp, h, use_kernel=use_kernel)
+        return h, None
+
+    def super_body(h, mp):
+        h, _ = lax.scan(T._maybe_remat(mamba_body, remat), h, mp)
+        h = T.block_fwd(cfg, shared, h, positions, is_global=True,
+                        use_flash=use_flash)
+        return h, None
+
+    x, _ = lax.scan(T._maybe_remat(super_body, remat), x, params["mamba"])
+    if "rem_mamba" in params:
+        x, _ = lax.scan(T._maybe_remat(mamba_body, remat), x,
+                        params["rem_mamba"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return L.unembed(cfg, params["embed"], params["unembed"], x)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    nb, rem = _superblocks(cfg)
+    W = min(max_len, cfg.local_window)
+    c = {
+        "mamba": S.init_state(cfg, batch, stack=(nb, cfg.hybrid_attn_period - 1)),
+        "attn": L.init_kv_cache(cfg, batch, W, stack=(nb,)),
+    }
+    if rem:
+        c["rem_mamba"] = S.init_state(cfg, batch, stack=(rem,))
+    return c
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params, tokens, pos):
+    x = L.embed(cfg, params["embed"], tokens)
+    shared = params["shared_attn"]
+
+    def mamba_body(h, inp):
+        lp, st = inp
+        h, st2 = S.block_decode(cfg, lp, h, st)
+        return h, st2
+
+    def super_body(h, inp):
+        mp, mst, ac = inp
+        h, mst2 = lax.scan(mamba_body, h, (mp, mst))
+        h, ac2 = T.block_decode(cfg, shared, h, ac, pos, is_global=False)
+        return h, (mst2, ac2)
+
+    x, (new_m, new_a) = lax.scan(
+        super_body, x, (params["mamba"], cache["mamba"], cache["attn"]))
+    new_cache = {"mamba": new_m, "attn": new_a}
+    if "rem_mamba" in params:
+        x, rst = lax.scan(mamba_body, x,
+                          (params["rem_mamba"], cache["rem_mamba"]))
+        new_cache["rem_mamba"] = rst
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(cfg, params["embed"], params["unembed"], x)
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, max_len, *,
+            use_flash=False, use_kernel=False):
+    x = L.embed(cfg, params["embed"], tokens)
+    B, Sq, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+    shared = params["shared_attn"]
+    W = min(max_len, cfg.local_window)
+
+    def mamba_body(h, lp):
+        h, st = S.block_fwd(cfg, lp, h, use_kernel=use_kernel)
+        return h, st
+
+    def super_body(h, mp):
+        h, mst = lax.scan(mamba_body, h, mp)
+        h, kv = T.block_prefill(cfg, shared, h, positions, is_global=True,
+                                use_flash=use_flash)
+        return h, (mst, kv)
+
+    x, (mst, (ks, vs)) = lax.scan(super_body, x, params["mamba"])
+    fill = jax.vmap(lambda k, v: T._fill_local(
+        cfg.replace(local_window=W), B, max_len, k, v))
+    cache = {"mamba": mst, "attn": fill(ks, vs)}
+    if "rem_mamba" in params:
+        x, rst = lax.scan(mamba_body, x, params["rem_mamba"])
+        cache["rem_mamba"] = rst
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(cfg, params["embed"], params["unembed"], x[:, -1:])
+    return logits, cache

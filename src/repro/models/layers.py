@@ -1,0 +1,506 @@
+"""Shared neural-net building blocks (pure JAX, functional params-as-pytrees).
+
+Conventions
+-----------
+* Parameters are nested dicts of jnp arrays. Init functions accept a
+  ``stack`` tuple prefix so layers can be stacked for ``jax.lax.scan``.
+* Activations run in ``cfg.activation_dtype`` (bf16 by default); softmax
+  and norms accumulate in float32.
+* Attention is GQA throughout: H query heads grouped over K kv heads.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, shape, stack=(), in_axis_size=None, dtype=jnp.float32):
+    """Truncated-normal fan-in init, with optional stacking prefix."""
+    full = tuple(stack) + tuple(shape)
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, full, dtype)
+
+
+def _zeros(shape, stack=(), dtype=jnp.float32):
+    return jnp.zeros(tuple(stack) + tuple(shape), dtype)
+
+
+def _ones(shape, stack=(), dtype=jnp.float32):
+    return jnp.ones(tuple(stack) + tuple(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, stack=()):
+    return {"scale": _zeros((d,), stack)}  # gemma-style (1 + scale)
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dtype)
+
+
+def init_layernorm(d: int, stack=()):
+    return {"scale": _ones((d,), stack), "bias": _zeros((d,), stack)}
+
+
+def layernorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dtype)
+
+
+def make_norm(cfg: ModelConfig):
+    if cfg.use_layernorm:
+        return (lambda d, stack=(): init_layernorm(d, stack),
+                lambda p, x: layernorm(p, x, cfg.norm_eps))
+    return (lambda d, stack=(): init_rmsnorm(d, stack),
+            lambda p, x: rmsnorm(p, x, cfg.norm_eps))
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (head_dim//2,)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, n_heads, head_dim); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd//2)
+    angles = angles[..., None, :]  # (..., S, 1, hd//2) to broadcast over heads
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jnp.ndarray:
+    """Whisper-style fixed sinusoidal embedding table (n, d)."""
+    half = d // 2
+    log_timescale = math.log(10_000.0) / max(half - 1, 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(half, dtype=jnp.float32))
+    scaled = jnp.arange(n, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg: ModelConfig, key, stack=()):
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(k1, (d, H, hd), stack, in_axis_size=d),
+        "wk": _dense_init(k2, (d, K, hd), stack, in_axis_size=d),
+        "wv": _dense_init(k3, (d, K, hd), stack, in_axis_size=d),
+        "wo": _dense_init(k4, (H, hd, d), stack, in_axis_size=H * hd),
+    }
+    if cfg.use_qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, stack)
+        p["k_norm"] = init_rmsnorm(hd, stack)
+    return p
+
+
+def _softcap(x, cap: float):
+    if cap and cap > 0.0:
+        return cap * jnp.tanh(x / cap)
+    return x
+
+
+def attention_weights_and_out(q, k, v, mask, *, scale, softcap=0.0):
+    """GQA attention core.
+
+    q: (B, S, K, G, hd)   k, v: (B, T, K, hd)   mask: broadcast (B,1,1,S,T)
+    returns (B, S, K, G, hd)
+    """
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k, preferred_element_type=jnp.float32)
+    scores = _softcap(scores * scale, softcap)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgst,btkd->bskgd", probs, v)
+
+
+def causal_mask(s: int, t: int, q_offset=0) -> jnp.ndarray:
+    """(S, T) causal mask; q position i attends kv positions <= i+q_offset."""
+    qpos = jnp.arange(s)[:, None] + q_offset
+    kpos = jnp.arange(t)[None, :]
+    return kpos <= qpos
+
+
+def window_mask(s: int, t: int, window: int, q_offset=0) -> jnp.ndarray:
+    qpos = jnp.arange(s)[:, None] + q_offset
+    kpos = jnp.arange(t)[None, :]
+    return (kpos <= qpos) & (kpos > qpos - window)
+
+
+def attention_fwd(cfg: ModelConfig, params, x, positions, *,
+                  is_global: bool, kv_x=None, causal: bool = True,
+                  use_flash: bool = False):
+    """Full-sequence attention (training / prefill).
+
+    x: (B, S, d). kv_x: cross-attention source (B, T, d) or None.
+    Local (sliding-window) layers use a chunked implementation when the
+    sequence is long enough, giving true O(S*W) cost.
+    Returns (out (B,S,d), k, v) — k/v returned for cache construction.
+    """
+    B, S, d = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // K
+    scale = cfg.attn_scale if cfg.attn_scale is not None else hd ** -0.5
+
+    q = jnp.einsum("bsd,dhq->bshq", x, params["wq"].astype(x.dtype))
+    src = x if kv_x is None else kv_x
+    k = jnp.einsum("btd,dkq->btkq", src, params["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dkq->btkq", src, params["wv"].astype(x.dtype))
+
+    if cfg.use_qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+
+    if not cfg.use_abs_pos and kv_x is None:
+        theta = (cfg.rope_theta_global
+                 if (is_global and cfg.rope_theta_global) else cfg.rope_theta)
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+
+    T = k.shape[1]
+    qg = q.reshape(B, S, K, G, hd)
+
+    window = 0 if is_global else cfg.local_window
+    if kv_x is not None or not causal:
+        mask = jnp.ones((S, T), bool)
+        out = attention_weights_and_out(qg, k, v, mask[None, None, None],
+                                        scale=scale, softcap=cfg.attn_logit_softcap)
+    elif use_flash:
+        from repro.kernels import ops as kernel_ops
+        out = kernel_ops.flash_attention(
+            qg.reshape(B, S, H, hd), k, v, scale=scale,
+            window=window, softcap=cfg.attn_logit_softcap,
+        ).reshape(B, S, K, G, hd)
+    elif window and S > 2 * window and S % window == 0:
+        out = _chunked_local_attention(qg, k, v, window, scale,
+                                       cfg.attn_logit_softcap)
+    elif S >= BLOCKWISE_THRESHOLD and S % BLOCKWISE_CHUNK == 0 \
+            and T % BLOCKWISE_CHUNK == 0:
+        # long full-causal prefill: online-softmax blockwise attention —
+        # O(S*chunk) live memory instead of an O(S^2) score tensor (the
+        # pure-jnp twin of kernels/flash_attention, used where Pallas
+        # can't be lowered for the dry-run)
+        out = _blockwise_causal_attention(qg, k, v, scale,
+                                          cfg.attn_logit_softcap,
+                                          chunk=BLOCKWISE_CHUNK)
+    else:
+        m = (window_mask(S, T, window) if window else causal_mask(S, T))
+        out = attention_weights_and_out(qg, k, v, m[None, None, None],
+                                        scale=scale, softcap=cfg.attn_logit_softcap)
+
+    out = out.reshape(B, S, H, hd)
+    o = jnp.einsum("bshq,hqd->bsd", out, params["wo"].astype(x.dtype))
+    return o, k, v
+
+
+def _chunked_local_attention(qg, k, v, window, scale, softcap):
+    """Sliding-window attention in O(S * 2W): chunk + previous chunk.
+
+    qg: (B, S, K, G, hd) with S % window == 0.
+    """
+    B, S, K, G, hd = qg.shape
+    W = window
+    C = S // W
+    qc = qg.reshape(B, C, W, K, G, hd)
+    kc = k.reshape(B, C, W, K, hd)
+    vc = v.reshape(B, C, W, K, hd)
+    # previous chunk (zeros before chunk 0)
+    kprev = jnp.concatenate([jnp.zeros_like(kc[:, :1]), kc[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], axis=1)
+    k2 = jnp.concatenate([kprev, kc], axis=2)  # (B, C, 2W, K, hd)
+    v2 = jnp.concatenate([vprev, vc], axis=2)
+
+    qpos = jnp.arange(W)[:, None] + W            # within the 2W frame
+    kpos = jnp.arange(2 * W)[None, :]
+    m = (kpos <= qpos) & (kpos > qpos - W)       # (W, 2W)
+    # chunk 0 has no previous chunk
+    first = m & (kpos >= W)
+    mask = jnp.concatenate(
+        [first[None], jnp.broadcast_to(m, (C - 1, W, 2 * W))], axis=0)
+
+    scores = jnp.einsum("bcskgd,bctkd->bckgst", qc, k2,
+                        preferred_element_type=jnp.float32)
+    scores = _softcap(scores * scale, softcap)
+    scores = jnp.where(mask[None, :, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bckgst,bctkd->bcskgd", probs, v2)
+    return out.reshape(B, S, K, G, hd)
+
+
+BLOCKWISE_THRESHOLD = 8192
+BLOCKWISE_CHUNK = 1024
+
+# §Perf knob (set by launch builders, process-scoped): sequence-parallel
+# blockwise attention.  Tuple (n_shards, NamedSharding for the
+# (B, shard, S/shard, K, G, hd) query layout) or None.  Used when query
+# heads cannot shard over the model axis: instead of replicating the
+# whole attention, each model-shard computes its 1/n slice of the query
+# sequence against (once-gathered) full K/V — no redundant FLOPs and
+# 1/n of the score HBM traffic per chip.
+SEQ_PARALLEL_ATTN = None
+
+
+def _blockwise_causal_attention(qg, k, v, scale, softcap,
+                                chunk: int = BLOCKWISE_CHUNK):
+    """Memory-efficient causal attention: lax.scan over (q, kv) chunks
+    with a running (max, denom, acc) — the flash algorithm in pure jnp.
+
+    qg: (B, S, K, G, hd); k, v: (B, T, K, hd).  Strictly-above-diagonal
+    chunk pairs are masked (not skipped): ~2x upper-triangle FLOPs, but
+    O(S * chunk) live memory, which is what prefill_32k needs to fit.
+
+    With SEQ_PARALLEL_ATTN set, the query sequence is sharded over the
+    model axis (vmap over shards stays parallel; lax.map inside each
+    shard walks its local chunks).
+    """
+    B, S, K, G, hd = qg.shape
+    T = k.shape[1]
+    sp = SEQ_PARALLEL_ATTN
+    if sp is not None:
+        n_sh, shard_sharding = sp
+        per = S // n_sh
+        if S % n_sh == 0 and per % chunk == 0 and per >= chunk:
+            qs = qg.reshape(B, n_sh, per, K, G, hd)
+            qs = lax.with_sharding_constraint(qs, shard_sharding)
+            offs = jnp.arange(n_sh) * per
+
+            def per_shard(q_shard, off):
+                return _blockwise_inner(q_shard, k, v, scale, softcap,
+                                        chunk, q_offset=off)
+            out = jax.vmap(per_shard, in_axes=(1, 0), out_axes=1)(qs, offs)
+            out = lax.with_sharding_constraint(out, shard_sharding)
+            return out.reshape(B, S, K, G, hd)
+    return _blockwise_inner(qg, k, v, scale, softcap, chunk)
+
+
+def _blockwise_inner(qg, k, v, scale, softcap, chunk, q_offset=0):
+    B, S, K, G, hd = qg.shape
+    T = k.shape[1]
+    nq, nk = S // chunk, T // chunk
+    qc = qg.reshape(B, nq, chunk, K, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    kc = k.reshape(B, nk, chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    rel = jnp.arange(chunk)
+
+    def q_block(args):
+        qi, q = args  # q: (B, chunk, K, G, hd)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kj, kb, vb = inp
+            s = jnp.einsum("bskgd,btkd->bkgst", q, kb,
+                           preferred_element_type=jnp.float32) * scale
+            s = _softcap(s, softcap)
+            qpos = q_offset + qi * chunk + rel[:, None]
+            kpos = kj * chunk + rel[None, :]
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where((kpos <= qpos)[None, None, None], p, 0.0)
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgst,btkd->bkgsd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, K, G, chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, chunk), jnp.float32)
+        a0 = jnp.zeros((B, K, G, chunk, hd), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0),
+                                  (jnp.arange(nk), kc, vc))
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(qg.dtype)
+        return out.transpose(0, 3, 1, 2, 4)          # (B, chunk, K, G, hd)
+
+    out = lax.map(q_block, (jnp.arange(nq), qc))     # (nq, B, chunk, ...)
+    return out.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, K, G, hd)
+
+
+def attention_decode(cfg: ModelConfig, params, x, cache, pos, *,
+                     is_global: bool, cross_kv=None):
+    """Single-token decode. x: (B, 1, d); pos: (B,) int32 per-sequence
+    write positions (scalars are broadcast) — continuous batching serves
+    requests at different depths in one step.
+
+    cache: dict(k=(B, T, K, hd), v=..., slots=(B, T) ring positions) —
+    T == seq_len for global layers, T == window for local ring buffers.
+    cross_kv: (k, v) for enc-dec cross attention (no cache update).
+    Returns (out, new_cache).
+    """
+    B, S, d = x.shape
+    assert S == 1
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // K
+    scale = cfg.attn_scale if cfg.attn_scale is not None else hd ** -0.5
+
+    q = jnp.einsum("bsd,dhq->bshq", x, params["wq"].astype(x.dtype))
+    if cfg.use_qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        qg = q.reshape(B, 1, K, G, hd)
+        T = k.shape[1]
+        mask = jnp.ones((1, 1, 1, 1, T), bool)
+        out = attention_weights_and_out(qg, k, v, mask, scale=scale,
+                                        softcap=cfg.attn_logit_softcap)
+        o = jnp.einsum("bshq,hqd->bsd", out.reshape(B, 1, H, hd),
+                       params["wo"].astype(x.dtype))
+        return o, cache
+
+    knew = jnp.einsum("bsd,dkq->bskq", x, params["wk"].astype(x.dtype))
+    vnew = jnp.einsum("bsd,dkq->bskq", x, params["wv"].astype(x.dtype))
+    if cfg.use_qk_norm:
+        knew = rmsnorm(params["k_norm"], knew, cfg.norm_eps)
+
+    if not cfg.use_abs_pos:
+        theta = (cfg.rope_theta_global
+                 if (is_global and cfg.rope_theta_global) else cfg.rope_theta)
+        posb = pos[:, None]
+        q = apply_rope(q, posb, theta)
+        knew = apply_rope(knew, posb, theta)
+
+    T = cache["k"].shape[1]
+    slot = pos % T  # global caches have T == max seq, so slot == pos there
+    barange = jnp.arange(B)
+    kc = cache["k"].at[barange, slot].set(knew[:, 0].astype(cache["k"].dtype))
+    vc = cache["v"].at[barange, slot].set(vnew[:, 0].astype(cache["v"].dtype))
+    slots = cache["slots"].at[barange, slot].set(pos)
+
+    window = 0 if is_global else cfg.local_window
+    valid = (slots >= 0) & (slots <= pos[:, None])
+    if window:
+        valid &= slots > (pos[:, None] - window)
+    mask = valid[:, None, None, None, :]  # (B,1,1,1,T)
+
+    qg = q.reshape(B, 1, K, G, hd)
+    out = attention_weights_and_out(qg, kc.astype(x.dtype), vc.astype(x.dtype),
+                                    mask, scale=scale,
+                                    softcap=cfg.attn_logit_softcap)
+    o = jnp.einsum("bshq,hqd->bsd", out.reshape(B, 1, H, hd),
+                   params["wo"].astype(x.dtype))
+    return o, {"k": kc, "v": vc, "slots": slots}
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, length: int, stack=(),
+                  dtype=None):
+    """Empty cache dict with stacking prefix (e.g. per layer)."""
+    dtype = dtype or cfg.activation_dtype
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": _zeros((batch, length, K, hd), stack, dtype),
+        "v": _zeros((batch, length, K, hd), stack, dtype),
+        "slots": jnp.full(tuple(stack) + (batch, length), -1, jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key, d_ff=None, stack=()):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": _dense_init(k1, (d, f), stack),
+        "w_up": _dense_init(k2, (d, f), stack),
+        "w_down": _dense_init(k3, (f, d), stack, in_axis_size=f),
+    }
+
+
+def mlp(params, x, activation="silu"):
+    act = jax.nn.gelu if activation == "gelu" else jax.nn.silu
+    w_gate = params["w_gate"].astype(x.dtype)
+    w_up = params["w_up"].astype(x.dtype)
+    w_down = params["w_down"].astype(x.dtype)
+    h = act(jnp.einsum("bsd,df->bsf", x, w_gate)) * jnp.einsum("bsd,df->bsf", x, w_up)
+    return jnp.einsum("bsf,fd->bsd", h, w_down)
+
+
+def init_gelu_mlp(cfg: ModelConfig, key, stack=()):
+    """Whisper-style 2-matrix GELU MLP."""
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": _dense_init(k1, (d, f), stack),
+        "b_in": _zeros((f,), stack),
+        "w_out": _dense_init(k2, (f, d), stack, in_axis_size=f),
+        "b_out": _zeros((d,), stack),
+    }
+
+
+def gelu_mlp(params, x):
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, params["w_in"].astype(x.dtype))
+                    + params["b_in"].astype(x.dtype))
+    return jnp.einsum("bsf,fd->bsd", h, params["w_out"].astype(x.dtype)) \
+        + params["b_out"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(cfg: ModelConfig, key):
+    std = cfg.d_model ** -0.5  # keeps tied-unembed logits O(1)
+    p = {"table": std * jax.random.normal(key, (cfg.vocab_size, cfg.d_model))}
+    return p
+
+
+def embed(cfg: ModelConfig, params, tokens):
+    x = params["table"].astype(cfg.activation_dtype)[tokens]
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def unembed(cfg: ModelConfig, emb_params, head_params, x):
+    if cfg.tie_embeddings:
+        w = emb_params["table"].astype(x.dtype)
+        logits = jnp.einsum("bsd,vd->bsv", x, w)
+    else:
+        w = head_params["w"].astype(x.dtype)
+        logits = jnp.einsum("bsd,dv->bsv", x, w)
+    logits = _softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+    return logits
+
+
+def init_unembed(cfg: ModelConfig, key):
+    if cfg.tie_embeddings:
+        return {}
+    return {"w": _dense_init(key, (cfg.d_model, cfg.vocab_size))}

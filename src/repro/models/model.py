@@ -1,0 +1,184 @@
+"""Unified model API over all architecture families.
+
+Every family exposes the same five entry points, dispatched on
+``cfg.family``:
+
+    init_params(cfg, key)                      -> params pytree
+    apply(cfg, params, batch, **opts)          -> (logits, aux_loss)
+    loss_fn(cfg, params, batch, **opts)        -> (loss, metrics)
+    init_cache(cfg, batch_size, max_len)       -> cache pytree
+    prefill(cfg, params, batch, max_len)       -> (logits, cache)
+    decode_step(cfg, params, cache, toks, pos) -> (logits, cache)
+
+``batch`` is a dict: always ``tokens``/``targets``; plus
+``image_embeds`` (vlm) or ``audio_embeds`` (encdec) stub-frontend
+embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import encdec, hybrid, moe, ssm, transformer, vlm
+
+Params = Any
+
+_FAMILIES = {
+    "dense": transformer,
+    "moe": moe,
+    "ssm": ssm,
+    "hybrid": hybrid,
+    "encdec": encdec,
+    "vlm": vlm,
+}
+
+
+def family_module(cfg: ModelConfig):
+    return _FAMILIES[cfg.family]
+
+
+def specialize(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Adapt static config knobs to an input shape (e.g. enc-dec position
+    table must cover the assigned decoder length)."""
+    if cfg.family == "encdec":
+        need = shape.seq_len if shape.kind != "decode" else shape.seq_len
+        if cfg.max_target_positions < need:
+            cfg = cfg.replace(max_target_positions=need)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# params / forward
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    return family_module(cfg).init_params(cfg, key)
+
+
+def apply(cfg: ModelConfig, params: Params, batch: dict, *,
+          use_flash: bool = False, use_kernel: bool = False,
+          remat: Optional[str] = None):
+    """Full-sequence logits + scalar aux loss (0 where n/a)."""
+    tokens = batch["tokens"]
+    zero = jnp.zeros((), jnp.float32)
+    if cfg.family == "dense":
+        return transformer.forward(cfg, params, tokens, use_flash=use_flash,
+                                   remat=remat), zero
+    if cfg.family == "moe":
+        return moe.forward(cfg, params, tokens, use_flash=use_flash,
+                           remat=remat)
+    if cfg.family == "ssm":
+        return ssm.forward(cfg, params, tokens, use_kernel=use_kernel,
+                           remat=remat), zero
+    if cfg.family == "hybrid":
+        return hybrid.forward(cfg, params, tokens, use_flash=use_flash,
+                              use_kernel=use_kernel, remat=remat), zero
+    if cfg.family == "encdec":
+        return encdec.forward(cfg, params, tokens, batch["audio_embeds"],
+                              use_flash=use_flash, remat=remat), zero
+    if cfg.family == "vlm":
+        return vlm.forward(cfg, params, tokens, batch["image_embeds"],
+                           use_flash=use_flash, remat=remat), zero
+    raise ValueError(cfg.family)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: dict, **opts):
+    logits, aux = apply(cfg, params, batch, **opts)
+    targets = batch["targets"]
+    S_t = targets.shape[1]
+    logits = logits[:, -S_t:]  # vlm prepends image tokens; align to text
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        denom = float(nll.size)
+    ce = jnp.sum(nll) / denom
+    loss = ce + cfg.router_aux_coef * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    return family_module(cfg).init_cache(cfg, batch_size, max_len)
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: dict, max_len: int, *,
+            use_flash: bool = False, use_kernel: bool = False):
+    tokens = batch["tokens"]
+    if cfg.family == "encdec":
+        return encdec.prefill(cfg, params, tokens, max_len,
+                              audio_embeds=batch["audio_embeds"],
+                              use_flash=use_flash)
+    if cfg.family == "vlm":
+        return vlm.prefill(cfg, params, tokens, max_len,
+                           image_embeds=batch["image_embeds"],
+                           use_flash=use_flash)
+    if cfg.family == "ssm":
+        return ssm.prefill(cfg, params, tokens, max_len,
+                           use_kernel=use_kernel)
+    if cfg.family == "hybrid":
+        return hybrid.prefill(cfg, params, tokens, max_len,
+                              use_flash=use_flash, use_kernel=use_kernel)
+    if cfg.family == "moe":
+        return moe.prefill(cfg, params, tokens, max_len, use_flash=use_flash)
+    return transformer.prefill(cfg, params, tokens, max_len,
+                               use_flash=use_flash)
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache, tokens, pos):
+    return family_module(cfg).decode_step(cfg, params, cache, tokens, pos)
+
+
+# ---------------------------------------------------------------------------
+# batch construction
+# ---------------------------------------------------------------------------
+
+def make_batch(cfg: ModelConfig, shape: InputShape, key=None) -> dict:
+    """Concrete random batch matching ``batch_shapes`` (smoke/e2e use)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    shapes = batch_shapes(cfg, shape)
+    out = {}
+    for name, sds in shapes.items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(sds.dtype, jnp.integer):
+            out[name] = jax.random.randint(sub, sds.shape, 0, cfg.vocab_size,
+                                           dtype=sds.dtype)
+        else:
+            out[name] = 0.1 * jax.random.normal(sub, sds.shape, sds.dtype)
+    return out
+
+
+def batch_shapes(cfg: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStructs for every model input of a train/prefill batch."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    act = cfg.activation_dtype
+    sds = jax.ShapeDtypeStruct
+    if cfg.family == "vlm":
+        S_text = S - cfg.num_image_tokens
+        return {
+            "tokens": sds((B, S_text), i32),
+            "image_embeds": sds((B, cfg.num_image_tokens,
+                                 cfg.image_embed_dim), act),
+            "targets": sds((B, S_text), i32),
+        }
+    if cfg.family == "encdec":
+        return {
+            "tokens": sds((B, S), i32),
+            "audio_embeds": sds((B, cfg.encoder_seq, cfg.d_model), act),
+            "targets": sds((B, S), i32),
+        }
+    return {"tokens": sds((B, S), i32), "targets": sds((B, S), i32)}
+
+
+def count_params(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

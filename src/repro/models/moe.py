@@ -1,0 +1,267 @@
+"""Mixture-of-Experts trunk (kimi-k2, granite-moe).
+
+TPU-native expert-parallel design: token->expert dispatch and combine are
+*gathers* against an (E, capacity, d) expert buffer, built from a small
+integer scatter.  The expert dimension shards over the ``model`` mesh
+axis; XLA SPMD inserts the dispatch/combine all-to-alls.  Capacity-based
+token dropping (GShard/Switch style) keeps every shape static.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# router + expert FFN
+# ---------------------------------------------------------------------------
+
+def init_moe_mlp(cfg: ModelConfig, key, stack=()) -> Params:
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {
+        "router": L._dense_init(k1, (d, E), stack),
+        "w_gate": L._dense_init(k2, (E, d, f), stack, in_axis_size=d),
+        "w_up": L._dense_init(k3, (E, d, f), stack, in_axis_size=d),
+        "w_down": L._dense_init(k4, (E, f, d), stack, in_axis_size=f),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = L.init_mlp(
+            cfg, k5, d_ff=cfg.moe_d_ff * cfg.num_shared_experts, stack=stack)
+    return p
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = math.ceil(n_tokens * cfg.num_experts_per_tok * cfg.capacity_factor
+                  / cfg.num_experts)
+    return max(c, 1)
+
+
+def moe_mlp(cfg: ModelConfig, p: Params, x):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar f32).
+
+    cfg.moe_rowwise: dispatch each sequence independently (vmap over
+    batch) — the expert buffers then carry the batch dim and shard over
+    `data`, instead of one GLOBAL (E, c) buffer that every model-shard
+    must process in full (16x redundant expert FLOPs on the 16-way data
+    mesh; EXPERIMENTS.md §Perf).  Per-row capacity is the usual
+    trade-off (slightly higher dropping variance).
+    """
+    B, S, d = x.shape
+    if cfg.moe_rowwise:
+        out, aux = jax.vmap(lambda row: _moe_tokens(cfg, p, row))(
+            x.reshape(B, S, d))
+        return out.reshape(B, S, d), jnp.mean(aux)
+    out, aux = _moe_tokens(cfg, p, x.reshape(B * S, d))
+    return out.reshape(B, S, d), aux
+
+
+def _moe_tokens(cfg: ModelConfig, p: Params, xf):
+    """Capacity-based top-k dispatch over a flat token set xf: (N, d)."""
+    N, d = xf.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    c = capacity(cfg, N)
+
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (N, E)
+    gate, eidx = lax.top_k(probs, k)                           # (N, k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # load-balancing auxiliary loss (Switch): E * <f_e> . <p_e>
+    me = jnp.mean(probs, axis=0)                               # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(eidx, E, dtype=jnp.float32), axis=1), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    # position of each (token, choice) within its expert, via stable sort
+    ef = eidx.reshape(-1)                                      # (N*k,)
+    order = jnp.argsort(ef, stable=True)                       # (N*k,)
+    es = ef[order]
+    idx = jnp.arange(N * k, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), es[1:] != es[:-1]])
+    seg_start = jax.lax.associative_scan(jnp.maximum,
+                                         jnp.where(is_start, idx, 0))
+    pos_sorted = idx - seg_start
+    pos = jnp.zeros((N * k,), jnp.int32).at[order].set(pos_sorted)
+    pos = pos.reshape(N, k)
+    valid = pos < c
+
+    # dispatch: (E, c) inverse map expert-slot -> token row (sentinel N)
+    tok = jnp.broadcast_to(idx.reshape(N, k)[:, :1] * 0
+                           + jnp.arange(N, dtype=jnp.int32)[:, None], (N, k))
+    inv = jnp.full((E, c), N, jnp.int32)
+    inv = inv.at[eidx, jnp.where(valid, pos, c)].set(tok, mode="drop")
+    x_pad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
+    xs = x_pad[inv]                                            # (E, c, d)
+
+    # expert FFN (E-sharded einsums)
+    wg = p["w_gate"].astype(xf.dtype)
+    wu = p["w_up"].astype(xf.dtype)
+    wd = p["w_down"].astype(xf.dtype)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xs, wg)) \
+        * jnp.einsum("ecd,edf->ecf", xs, wu)
+    ys = jnp.einsum("ecf,efd->ecd", h, wd)                     # (E, c, d)
+
+    # combine: gather each token's k expert outputs (dropped -> zero row)
+    ys_pad = jnp.concatenate(
+        [ys, jnp.zeros((E, 1, d), ys.dtype)], axis=1)          # (E, c+1, d)
+    slot = jnp.where(valid, pos, c)
+    y_tok = ys_pad[eidx, slot]                                 # (N, k, d)
+    out = jnp.sum(y_tok * gate.astype(y_tok.dtype)[..., None], axis=1)
+
+    if cfg.num_shared_experts:
+        out = out + L.mlp(p["shared"], xf[None]).reshape(N, d)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# blocks & trunk
+# ---------------------------------------------------------------------------
+
+def init_moe_block(cfg: ModelConfig, key, stack=()) -> Params:
+    norm_init, _ = L.make_norm(cfg)
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": L.init_attention(cfg, k1, stack),
+        "moe": init_moe_mlp(cfg, k2, stack),
+        "ln1": norm_init(cfg.d_model, stack),
+        "ln2": norm_init(cfg.d_model, stack),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    norm_init, _ = L.make_norm(cfg)
+    ks = jax.random.split(key, 5)
+    n_moe = cfg.num_layers - cfg.first_dense_layers
+    p = {
+        "embed": L.init_embedding(cfg, ks[0]),
+        "unembed": L.init_unembed(cfg, ks[1]),
+        "moe_layers": init_moe_block(cfg, ks[2], stack=(n_moe,)),
+        "final_norm": norm_init(cfg.d_model),
+    }
+    if cfg.first_dense_layers:
+        p["dense_layers"] = T.init_block(
+            cfg, ks[3], stack=(cfg.first_dense_layers,))
+    return p
+
+
+def moe_block_fwd(cfg: ModelConfig, p: Params, x, positions, *,
+                  use_flash=False):
+    _, norm = L.make_norm(cfg)
+    h = norm(p["ln1"], x)
+    a, k, v = L.attention_fwd(cfg, p["attn"], h, positions, is_global=True,
+                              use_flash=use_flash)
+    x = x + a
+    h = norm(p["ln2"], x)
+    m, aux = moe_mlp(cfg, p["moe"], h)
+    return x + m, aux, (k, v)
+
+
+def moe_block_decode(cfg: ModelConfig, p: Params, x, cache, pos):
+    _, norm = L.make_norm(cfg)
+    h = norm(p["ln1"], x)
+    a, new_cache = L.attention_decode(cfg, p["attn"], h, cache, pos,
+                                      is_global=True)
+    x = x + a
+    h = norm(p["ln2"], x)
+    m, _ = moe_mlp(cfg, p["moe"], h)
+    return x + m, new_cache
+
+
+def forward(cfg: ModelConfig, params: Params, tokens, *, use_flash=False,
+            remat: Optional[str] = None):
+    """Returns (logits, aux_loss)."""
+    x = L.embed(cfg, params["embed"], tokens)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    if cfg.first_dense_layers:
+        def dbody(h, lp):
+            return T.block_fwd(cfg, lp, h, positions, is_global=True,
+                               use_flash=use_flash), None
+        x, _ = lax.scan(T._maybe_remat(dbody, remat), x,
+                        params["dense_layers"])
+
+    def body(h, lp):
+        h, aux, _ = moe_block_fwd(cfg, lp, h, positions, use_flash=use_flash)
+        return h, aux
+    x, auxes = lax.scan(T._maybe_remat(body, remat), x, params["moe_layers"])
+
+    _, norm = L.make_norm(cfg)
+    x = norm(params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], params["unembed"], x)
+    return logits, jnp.mean(auxes)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    n_moe = cfg.num_layers - cfg.first_dense_layers
+    c = {"moe_layers": L.init_kv_cache(cfg, batch, max_len, stack=(n_moe,))}
+    if cfg.first_dense_layers:
+        c["dense_layers"] = L.init_kv_cache(
+            cfg, batch, max_len, stack=(cfg.first_dense_layers,))
+    return c
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params, tokens, pos):
+    x = L.embed(cfg, params["embed"], tokens)
+    new_cache = {}
+    if cfg.first_dense_layers:
+        def dbody(h, inp):
+            lp, cc = inp
+            h, c2 = T.block_decode(cfg, lp, h, cc, pos, is_global=True)
+            return h, c2
+        x, dc = lax.scan(dbody, x, (params["dense_layers"],
+                                    cache["dense_layers"]))
+        new_cache["dense_layers"] = dc
+
+    def body(h, inp):
+        lp, cc = inp
+        h, c2 = moe_block_decode(cfg, lp, h, cc, pos)
+        return h, c2
+    x, mc = lax.scan(body, x, (params["moe_layers"], cache["moe_layers"]))
+    new_cache["moe_layers"] = mc
+
+    _, norm = L.make_norm(cfg)
+    x = norm(params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], params["unembed"], x)
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, max_len, *,
+            use_flash=False):
+    x = L.embed(cfg, params["embed"], tokens)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    cache = {}
+    if cfg.first_dense_layers:
+        def dbody(h, lp):
+            h, kv = T.block_prefill(cfg, lp, h, positions, is_global=True,
+                                    use_flash=use_flash)
+            return h, kv
+        x, (ks, vs) = lax.scan(dbody, x, params["dense_layers"])
+        cache["dense_layers"] = jax.vmap(
+            lambda k, v: T._fill_global(cfg, B, max_len, k, v))(ks, vs)
+
+    def body(h, lp):
+        h, _, kv = moe_block_fwd(cfg, lp, h, positions, use_flash=use_flash)
+        return h, kv
+    x, (ks, vs) = lax.scan(body, x, params["moe_layers"])
+    cache["moe_layers"] = jax.vmap(
+        lambda k, v: T._fill_global(cfg, B, max_len, k, v))(ks, vs)
+
+    _, norm = L.make_norm(cfg)
+    x = norm(params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], params["unembed"], x[:, -1:])
+    return logits, cache

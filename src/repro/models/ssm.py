@@ -1,0 +1,286 @@
+"""Mamba2 (SSD — state-space duality) trunk. [arXiv:2405.21060]
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+intra-chunk term + a `lax.scan` inter-chunk state recurrence, O(L * Q)
+total.  Decode carries (conv_state, ssm_state) — O(1) per token, no KV
+cache, which is what makes ``long_500k`` tractable for this family.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_mamba_block(cfg: ModelConfig, key, stack=()) -> Params:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h, w = cfg.ssm_heads, cfg.ssm_conv_width
+    conv_ch = di + 2 * n
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "in_proj": L._dense_init(k1, (d, 2 * di + 2 * n + h), stack),
+        "conv_w": L._dense_init(k2, (w, conv_ch), stack, in_axis_size=w),
+        "conv_b": L._zeros((conv_ch,), stack),
+        "A_log": L._zeros((h,), stack),            # A = -exp(A_log) = -1
+        "D": L._ones((h,), stack),
+        "dt_bias": L._zeros((h,), stack),
+        "gate_norm": L.init_rmsnorm(di, stack),
+        "out_proj": L._dense_init(k3, (di, d), stack, in_axis_size=di),
+        "ln": L.init_rmsnorm(d, stack),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "embed": L.init_embedding(cfg, k1),
+        "unembed": L.init_unembed(cfg, k2),
+        "layers": init_mamba_block(cfg, key, stack=(cfg.num_layers,)),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, h0=None, use_kernel: bool = False):
+    """Chunked SSD scan.
+
+    x: (b, l, h, p); dt: (b, l, h) (post-softplus); A: (h,) negative;
+    B, C: (b, l, n) (single group).  h0: optional initial state (b,h,p,n).
+    Returns (y (b, l, h, p), h_final (b, h, p, n)).
+    """
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.ssd_scan(x, dt, A, B, C, chunk=chunk, h0=h0)
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    Q = min(chunk, l)
+    orig_l = l
+    if l % Q:
+        # pad the tail: dt=0 => decay exp(0)=1 and zero state contribution
+        pad = Q - l % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        l = l + pad
+    nc = l // Q
+
+    xc = x.reshape(b, nc, Q, h, p)
+    dtc = dt.reshape(b, nc, Q, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, Q, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, Q, n).astype(jnp.float32)
+
+    dA = dtc * A.astype(jnp.float32)                  # (b, nc, Q, h)
+    cums = jnp.cumsum(dA, axis=2)                     # inclusive
+
+    # ---- intra-chunk (attention-like) term
+    seg = cums[:, :, :, None, :] - cums[:, :, None, :, :]   # (b,nc,Q,Q,h) i,j
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    Lmat = jnp.where(mask[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)
+    xdt = xc.astype(jnp.float32) * dtc[..., None]
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, Lmat, xdt)
+
+    # ---- chunk-final states
+    decay_to_end = jnp.exp(cums[:, :, -1:, :] - cums)       # (b,nc,Q,h)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", Bc, decay_to_end, xdt)
+
+    # ---- inter-chunk recurrence
+    chunk_decay = jnp.exp(cums[:, :, -1, :])                # (b,nc,h)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def body(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                                   # emit pre-chunk
+
+    h_final, prev = lax.scan(
+        body, h0.astype(jnp.float32),
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev = prev.transpose(1, 0, 2, 3, 4)                    # (b,nc,h,p,n)
+
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp", Cc, prev, jnp.exp(cums))
+    y = (y_intra + y_inter).reshape(b, l, h, p)[:, :orig_l]
+    return y.astype(x.dtype), h_final
+
+
+def _causal_conv(xBC, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv via shifted adds.
+
+    xBC: (b, l, ch); conv_w: (w, ch).  conv_state: (b, w-1, ch) history
+    prepended (decode/chunked-prefill continuity) or zeros.
+    Returns (out (b, l, ch), new_state (b, w-1, ch)).
+    """
+    b, l, ch = xBC.shape
+    w = conv_w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((b, w - 1, ch), xBC.dtype)
+    full = jnp.concatenate([conv_state.astype(xBC.dtype), xBC], axis=1)
+    out = jnp.zeros((b, l, ch), xBC.dtype)
+    for i in range(w):
+        out = out + full[:, i:i + l] * conv_w[i].astype(xBC.dtype)
+    out = out + conv_b.astype(xBC.dtype)
+    new_state = full[:, -(w - 1):] if w > 1 else conv_state
+    return out, new_state
+
+
+def _split_in_proj(cfg: ModelConfig, zxbcdt):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n:]
+    return z, xBC, dt
+
+
+def mamba_mix(cfg: ModelConfig, p: Params, x, state=None, *,
+              use_kernel: bool = False):
+    """Sequence-mode mamba2 mixer. x: (b, l, d).
+
+    state: optional dict(conv=(b,w-1,ch), ssm=(b,h,pd,n)) for continuation.
+    Returns (out (b,l,d), new_state dict).
+    """
+    b, l, d = x.shape
+    di, n, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bld,de->ble", x, p["in_proj"].astype(x.dtype))
+    z, xBC, dt = _split_in_proj(cfg, zxbcdt)
+
+    conv_in = None if state is None else state["conv"]
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_in)
+    xBC = jax.nn.silu(xBC)
+    xin = xBC[..., :di].reshape(b, l, h, pd)
+    B = xBC[..., di:di + n]
+    C = xBC[..., di + n:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    h0 = None if state is None else state["ssm"]
+    y, h_final = ssd_chunked(xin, dt, A, B, C, cfg.ssm_chunk, h0=h0,
+                             use_kernel=use_kernel)
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xin
+    y = y.reshape(b, l, di)
+    y = L.rmsnorm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, p["out_proj"].astype(x.dtype))
+    return out, {"conv": new_conv, "ssm": h_final}
+
+
+def mamba_mix_decode(cfg: ModelConfig, p: Params, x, state):
+    """Single-step mixer. x: (b, 1, d); state dict as above."""
+    b, _, d = x.shape
+    di, n, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bld,de->ble", x, p["in_proj"].astype(x.dtype))
+    z, xBC, dt = _split_in_proj(cfg, zxbcdt)
+    xBC = xBC[:, 0]                                    # (b, ch)
+
+    conv_state = state["conv"]                         # (b, w-1, ch)
+    full = jnp.concatenate(
+        [conv_state.astype(xBC.dtype), xBC[:, None]], axis=1)  # (b, w, ch)
+    conv_out = jnp.einsum("bwc,wc->bc", full, p["conv_w"].astype(xBC.dtype)) \
+        + p["conv_b"].astype(xBC.dtype)
+    new_conv = full[:, 1:]
+    xBC = jax.nn.silu(conv_out)
+    xin = xBC[..., :di].reshape(b, h, pd)
+    B = xBC[..., di:di + n].astype(jnp.float32)
+    C = xBC[..., di + n:].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))    # (b, h)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A)                                # (b, h)
+    hs = state["ssm"].astype(jnp.float32)              # (b, h, pd, n)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xin.astype(jnp.float32), B)
+    hs = hs * a[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", hs, C)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xin.astype(jnp.float32)
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = L.rmsnorm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, p["out_proj"].astype(x.dtype))
+    return out, {"conv": new_conv, "ssm": hs}
+
+
+# ---------------------------------------------------------------------------
+# blocks & trunk
+# ---------------------------------------------------------------------------
+
+def block_fwd(cfg: ModelConfig, p: Params, x, state=None, *,
+              use_kernel=False):
+    h = L.rmsnorm(p["ln"], x, cfg.norm_eps)
+    o, new_state = mamba_mix(cfg, p, h, state, use_kernel=use_kernel)
+    return x + o, new_state
+
+
+def block_decode(cfg: ModelConfig, p: Params, x, state):
+    h = L.rmsnorm(p["ln"], x, cfg.norm_eps)
+    o, new_state = mamba_mix_decode(cfg, p, h, state)
+    return x + o, new_state
+
+
+def init_state(cfg: ModelConfig, batch: int, stack=()) -> Params:
+    ch = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": L._zeros((batch, cfg.ssm_conv_width - 1, ch), stack,
+                         cfg.activation_dtype),
+        "ssm": L._zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                         cfg.ssm_state), stack, jnp.float32),
+    }
+
+
+def forward(cfg: ModelConfig, params: Params, tokens, *, use_kernel=False,
+            remat: Optional[str] = None):
+    from repro.models.transformer import _maybe_remat
+    x = L.embed(cfg, params["embed"], tokens)
+
+    def body(h, lp):
+        h, _ = block_fwd(cfg, lp, h, use_kernel=use_kernel)
+        return h, None
+    x, _ = lax.scan(_maybe_remat(body, remat), x, params["layers"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return L.unembed(cfg, params["embed"], params["unembed"], x)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    del max_len  # O(1) state — the SSM's whole point
+    return {"layers": init_state(cfg, batch, stack=(cfg.num_layers,))}
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params, tokens, pos):
+    del pos  # state is positionless
+    x = L.embed(cfg, params["embed"], tokens)
+
+    def body(h, inp):
+        lp, st = inp
+        h, st2 = block_decode(cfg, lp, h, st)
+        return h, st2
+    x, new_states = lax.scan(body, x, (params["layers"], cache["layers"]))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(cfg, params["embed"], params["unembed"], x)
+    return logits, {"layers": new_states}
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, max_len, *,
+            use_kernel=False):
+    del max_len
+    x = L.embed(cfg, params["embed"], tokens)
+
+    def body(h, lp):
+        h, st = block_fwd(cfg, lp, h, use_kernel=use_kernel)
+        return h, st
+    x, states = lax.scan(body, x, params["layers"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(cfg, params["embed"], params["unembed"], x[:, -1:])
+    return logits, {"layers": states}

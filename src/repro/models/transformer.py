@@ -1,0 +1,318 @@
+"""Dense decoder-only transformer trunk (gemma/phi/llama families).
+
+Layers are stacked and executed with ``jax.lax.scan``. Architectures
+with a local:global attention pattern (gemma2/3) scan over
+*super-blocks*: ``pattern_period - 1`` local (sliding-window) layers
+followed by one global layer; remainder local layers get their own scan.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_block(cfg: ModelConfig, key, stack=()) -> Params:
+    norm_init, _ = L.make_norm(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn": L.init_attention(cfg, k1, stack),
+        "mlp": L.init_mlp(cfg, k2, stack=stack),
+        "ln1": norm_init(cfg.d_model, stack),
+        "ln2": norm_init(cfg.d_model, stack),
+    }
+    if cfg.sandwich_norms:
+        p["ln1_post"] = norm_init(cfg.d_model, stack)
+        p["ln2_post"] = norm_init(cfg.d_model, stack)
+    return p
+
+
+def init_trunk(cfg: ModelConfig, key) -> Params:
+    nb, rem = cfg.pattern_blocks()
+    keys = jax.random.split(key, 3)
+    if cfg.pattern_period <= 1:
+        return {"layers": init_block(cfg, keys[0], stack=(nb,))}
+    p = {
+        "super": {
+            "local": init_block(cfg, keys[0], stack=(nb, cfg.pattern_period - 1)),
+            "global": init_block(cfg, keys[1], stack=(nb,)),
+        }
+    }
+    if rem:
+        p["rem_local"] = init_block(cfg, keys[2], stack=(rem,))
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    norm_init, _ = L.make_norm(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "embed": L.init_embedding(cfg, k1),
+        "unembed": L.init_unembed(cfg, k2),
+        "trunk": init_trunk(cfg, k3),
+        "final_norm": norm_init(cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def block_fwd(cfg: ModelConfig, p: Params, x, positions, *, is_global,
+              use_flash=False):
+    _, norm = L.make_norm(cfg)
+    h = norm(p["ln1"], x)
+    a, _, _ = L.attention_fwd(cfg, p["attn"], h, positions,
+                              is_global=is_global, use_flash=use_flash)
+    if cfg.sandwich_norms:
+        a = norm(p["ln1_post"], a)
+    x = x + a
+    h = norm(p["ln2"], x)
+    m = L.mlp(p["mlp"], h)
+    if cfg.sandwich_norms:
+        m = norm(p["ln2_post"], m)
+    return x + m
+
+
+def block_prefill(cfg: ModelConfig, p: Params, x, positions, *, is_global,
+                  use_flash=False):
+    """Like block_fwd but also returns (k, v) for cache construction."""
+    _, norm = L.make_norm(cfg)
+    h = norm(p["ln1"], x)
+    a, k, v = L.attention_fwd(cfg, p["attn"], h, positions,
+                              is_global=is_global, use_flash=use_flash)
+    if cfg.sandwich_norms:
+        a = norm(p["ln1_post"], a)
+    x = x + a
+    h = norm(p["ln2"], x)
+    m = L.mlp(p["mlp"], h)
+    if cfg.sandwich_norms:
+        m = norm(p["ln2_post"], m)
+    return x + m, (k, v)
+
+
+def block_decode(cfg: ModelConfig, p: Params, x, cache, pos, *, is_global):
+    _, norm = L.make_norm(cfg)
+    h = norm(p["ln1"], x)
+    a, new_cache = L.attention_decode(cfg, p["attn"], h, cache, pos,
+                                      is_global=is_global)
+    if cfg.sandwich_norms:
+        a = norm(p["ln1_post"], a)
+    x = x + a
+    h = norm(p["ln2"], x)
+    m = L.mlp(p["mlp"], h)
+    if cfg.sandwich_norms:
+        m = norm(p["ln2_post"], m)
+    return x + m, new_cache
+
+
+def _maybe_remat(fn, policy: Optional[str]):
+    if not policy or policy == "none":
+        return fn
+    if policy == "full":
+        return jax.checkpoint(fn)
+    pol = getattr(jax.checkpoint_policies, policy)
+    return jax.checkpoint(fn, policy=pol)
+
+
+# ---------------------------------------------------------------------------
+# trunk forward (train / prefill without cache)
+# ---------------------------------------------------------------------------
+
+def trunk_fwd(cfg: ModelConfig, trunk: Params, x, positions, *,
+              use_flash=False, remat: Optional[str] = None):
+    if cfg.pattern_period <= 1:
+        def body(h, lp):
+            return block_fwd(cfg, lp, h, positions, is_global=True,
+                             use_flash=use_flash), None
+        body = _maybe_remat(body, remat)
+        x, _ = lax.scan(body, x, trunk["layers"])
+        return x
+
+    def local_body(h, lp):
+        return block_fwd(cfg, lp, h, positions, is_global=False,
+                         use_flash=use_flash), None
+
+    def super_body(h, sp):
+        h, _ = lax.scan(_maybe_remat(local_body, remat), h, sp["local"])
+        h = block_fwd(cfg, sp["global"], h, positions, is_global=True,
+                      use_flash=use_flash)
+        return h, None
+
+    x, _ = lax.scan(_maybe_remat(super_body, remat), x, trunk["super"])
+    if "rem_local" in trunk:
+        x, _ = lax.scan(_maybe_remat(local_body, remat), x, trunk["rem_local"])
+    return x
+
+
+def forward(cfg: ModelConfig, params: Params, tokens, *,
+            prefix_embeds=None, use_flash=False, remat=None):
+    """Full-sequence logits. tokens: (B, S_text).
+
+    prefix_embeds: optional (B, P, d) embeddings prepended (VLM image
+    tokens); logits are returned for the full sequence.
+    """
+    x = L.embed(cfg, params["embed"], tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = trunk_fwd(cfg, params["trunk"], x, positions,
+                  use_flash=use_flash, remat=remat)
+    _, norm = L.make_norm(cfg)
+    x = norm(params["final_norm"], x)
+    return L.unembed(cfg, params["embed"], params["unembed"], x)
+
+
+# ---------------------------------------------------------------------------
+# cache layout + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    nb, rem = cfg.pattern_blocks()
+    if cfg.pattern_period <= 1:
+        return {"layers": L.init_kv_cache(cfg, batch, max_len, stack=(nb,))}
+    W = min(cfg.local_window, max_len)
+    c = {
+        "super": {
+            "local": L.init_kv_cache(cfg, batch, W,
+                                     stack=(nb, cfg.pattern_period - 1)),
+            "global": L.init_kv_cache(cfg, batch, max_len, stack=(nb,)),
+        }
+    }
+    if rem:
+        c["rem_local"] = L.init_kv_cache(cfg, batch, W, stack=(rem,))
+    return c
+
+
+def trunk_decode(cfg: ModelConfig, trunk: Params, cache: Params, x, pos):
+    """x: (B, 1, d); pos: scalar int32. Returns (x, new_cache)."""
+    if cfg.pattern_period <= 1:
+        def body(h, inp):
+            lp, c = inp
+            h, c2 = block_decode(cfg, lp, h, c, pos, is_global=True)
+            return h, c2
+        x, new_c = lax.scan(body, x, (trunk["layers"], cache["layers"]))
+        return x, {"layers": new_c}
+
+    def local_body(h, inp):
+        lp, c = inp
+        h, c2 = block_decode(cfg, lp, h, c, pos, is_global=False)
+        return h, c2
+
+    def super_body(h, inp):
+        sp, sc = inp
+        h, lc = lax.scan(local_body, h, (sp["local"], sc["local"]))
+        h, gc = block_decode(cfg, sp["global"], h, sc["global"], pos,
+                             is_global=True)
+        return h, {"local": lc, "global": gc}
+
+    x, new_super = lax.scan(super_body, x, (trunk["super"], cache["super"]))
+    new_cache = {"super": new_super}
+    if "rem_local" in trunk:
+        x, rc = lax.scan(local_body, x, (trunk["rem_local"], cache["rem_local"]))
+        new_cache["rem_local"] = rc
+    return x, new_cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params, tokens, pos):
+    """tokens: (B, 1) int32; pos: scalar int32 — position being written."""
+    x = L.embed(cfg, params["embed"], tokens)
+    x, new_cache = trunk_decode(cfg, params["trunk"], cache, x, pos)
+    _, norm = L.make_norm(cfg)
+    x = norm(params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], params["unembed"], x)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill: forward + cache construction
+# ---------------------------------------------------------------------------
+
+def _fill_global(cfg, batch, max_len, k, v):
+    S = k.shape[1]
+    cache = L.init_kv_cache(cfg, batch, max_len, dtype=k.dtype)
+    cache["k"] = lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=1)
+    cache["v"] = lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=1)
+    slots = jnp.where(jnp.arange(max_len) < S, jnp.arange(max_len), -1)
+    cache["slots"] = jnp.broadcast_to(
+        slots.astype(jnp.int32), (batch, max_len))
+    return cache
+
+
+def _fill_local(cfg, batch, max_len, k, v):
+    S = k.shape[1]
+    W = min(cfg.local_window, max_len)
+    cache = L.init_kv_cache(cfg, batch, W, dtype=k.dtype)
+    if S >= W:
+        pos = jnp.arange(S - W, S)
+        idx = pos % W
+        cache["k"] = cache["k"].at[:, idx].set(k[:, S - W:])
+        cache["v"] = cache["v"].at[:, idx].set(v[:, S - W:])
+        cache["slots"] = cache["slots"].at[:, idx].set(
+            pos.astype(jnp.int32)[None])
+    else:
+        cache["k"] = lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=1)
+        cache["v"] = lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=1)
+        cache["slots"] = cache["slots"].at[:, :S].set(
+            jnp.arange(S, dtype=jnp.int32)[None])
+    return cache
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, max_len, *,
+            prefix_embeds=None, use_flash=False):
+    """Run the prompt, return (last-token logits, cache sized max_len)."""
+    x = L.embed(cfg, params["embed"], tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    trunk = params["trunk"]
+
+    if cfg.pattern_period <= 1:
+        def body(h, lp):
+            h, kv = block_prefill(cfg, lp, h, positions, is_global=True,
+                                  use_flash=use_flash)
+            return h, kv
+        x, (ks, vs) = lax.scan(body, x, trunk["layers"])
+        cache = {"layers": jax.vmap(
+            lambda k, v: _fill_global(cfg, B, max_len, k, v))(ks, vs)}
+    else:
+        def local_body(h, lp):
+            h, kv = block_prefill(cfg, lp, h, positions, is_global=False,
+                                  use_flash=use_flash)
+            return h, kv
+
+        def super_body(h, sp):
+            h, lkv = lax.scan(local_body, h, sp["local"])
+            h, gkv = block_prefill(cfg, sp["global"], h, positions,
+                                   is_global=True, use_flash=use_flash)
+            return h, (lkv, gkv)
+
+        x, ((lks, lvs), (gks, gvs)) = lax.scan(super_body, x, trunk["super"])
+        fill_l = jax.vmap(jax.vmap(
+            lambda k, v: _fill_local(cfg, B, max_len, k, v)))
+        fill_g = jax.vmap(lambda k, v: _fill_global(cfg, B, max_len, k, v))
+        cache = {"super": {"local": fill_l(lks, lvs),
+                           "global": fill_g(gks, gvs)}}
+        if "rem_local" in trunk:
+            x, (rks, rvs) = lax.scan(local_body, x, trunk["rem_local"])
+            cache["rem_local"] = jax.vmap(
+                lambda k, v: _fill_local(cfg, B, max_len, k, v))(rks, rvs)
+
+    _, norm = L.make_norm(cfg)
+    x = norm(params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], params["unembed"], x[:, -1:])
+    return logits, cache

@@ -1,0 +1,61 @@
+"""InternVL2-style VLM backbone: stub vision frontend + dense LM trunk.
+
+[arXiv:2404.16821] The InternViT encoder is a STUB per the assignment
+carve-out: ``input_specs()`` delivers precomputed patch embeddings
+(B, num_image_tokens, image_embed_dim).  This module owns the MLP
+projector and delegates the language trunk to ``models.transformer``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+Params = dict
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = T.init_params(cfg, k1)
+    p["projector"] = {
+        "w1": L._dense_init(k2, (cfg.image_embed_dim, cfg.d_model)),
+        "w2": L._dense_init(k3, (cfg.d_model, cfg.d_model)),
+        "ln": L.init_rmsnorm(cfg.image_embed_dim),
+    }
+    return p
+
+
+def project(cfg: ModelConfig, p: Params, image_embeds):
+    """(B, N_img, image_embed_dim) -> (B, N_img, d_model)."""
+    x = image_embeds.astype(cfg.activation_dtype)
+    x = L.rmsnorm(p["projector"]["ln"], x, cfg.norm_eps)
+    h = jax.nn.gelu(jnp.einsum(
+        "bnd,de->bne", x, p["projector"]["w1"].astype(x.dtype)))
+    return jnp.einsum("bne,ef->bnf", h, p["projector"]["w2"].astype(x.dtype))
+
+
+def forward(cfg: ModelConfig, params: Params, tokens, image_embeds, *,
+            use_flash=False, remat: Optional[str] = None):
+    """tokens: (B, S_text); image_embeds prepended after projection.
+
+    Returns logits over the FULL (img + text) sequence.
+    """
+    prefix = project(cfg, params, image_embeds)
+    return T.forward(cfg, params, tokens, prefix_embeds=prefix,
+                     use_flash=use_flash, remat=remat)
+
+
+init_cache = T.init_cache
+decode_step = T.decode_step
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, max_len, *,
+            image_embeds=None, use_flash=False):
+    prefix = project(cfg, params, image_embeds)
+    return T.prefill(cfg, params, tokens, max_len, prefix_embeds=prefix,
+                     use_flash=use_flash)

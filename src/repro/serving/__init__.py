@@ -1,0 +1,10 @@
+from repro.serving.engine import (
+    EdgeServingEngine,
+    Request,
+    ServeConfig,
+    cache_batch_axes,
+    insert_slot,
+)
+
+__all__ = ["EdgeServingEngine", "Request", "ServeConfig",
+           "cache_batch_axes", "insert_slot"]

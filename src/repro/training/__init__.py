@@ -1,0 +1,6 @@
+from repro.training import checkpoint, federated, optimizer, trainer
+from repro.training.optimizer import OptimizerConfig
+from repro.training.trainer import TrainConfig, make_train_step
+
+__all__ = ["OptimizerConfig", "TrainConfig", "checkpoint", "federated",
+           "make_train_step", "optimizer", "trainer"]

@@ -1,0 +1,82 @@
+"""Checkpointing: pytree <-> .npz with path-keyed arrays + JSON metadata.
+
+Works for any params/opt-state pytree (dict-of-dicts with array leaves).
+Distributed note: callers gather to host before saving (the launcher
+does this per-process); restore re-shards via device_put with the
+step's shardings.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}{SEP}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}{SEP}"))
+    else:
+        out[prefix.rstrip(SEP)] = tree
+    return out
+
+
+def save(path: str, tree: Any, metadata: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(jax.device_get(tree))
+    arrays = {}
+    meta = {"leaves": {}, "user": metadata or {}}
+    for k, v in flat.items():
+        arr = np.asarray(v)
+        if arr.dtype == jnp.bfloat16:
+            meta["leaves"][k] = "bfloat16"
+            arr = arr.astype(np.float32)
+        arrays[k] = arr
+    np.savez(path, **arrays)
+    with open(path + ".meta.json", "w") as f:
+        json.dump(meta, f)
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shapes must match)."""
+    with np.load(path if path.endswith(".npz") else path + ".npz") as z:
+        data = {k: z[k] for k in z.files}
+    meta_path = (path[:-4] if path.endswith(".npz") else path) + ".meta.json"
+    bf16 = set()
+    if os.path.exists(meta_path):
+        with open(meta_path) as f:
+            bf16 = {k for k, v in json.load(f)["leaves"].items()
+                    if v == "bfloat16"}
+
+    flat_like = _flatten(like)
+    out = {}
+    for k, ref in flat_like.items():
+        arr = data[k]
+        if k in bf16:
+            arr = arr.astype(jnp.bfloat16)
+        if arr.shape != np.shape(ref):
+            raise ValueError(f"shape mismatch at {k}: "
+                             f"{arr.shape} vs {np.shape(ref)}")
+        out[k] = jnp.asarray(arr)
+    return _unflatten_like(like, out)
+
+
+def _unflatten_like(like: Any, flat: dict, prefix: str = "") -> Any:
+    if isinstance(like, dict):
+        return {k: _unflatten_like(like[k], flat, f"{prefix}{k}{SEP}")
+                for k in like}
+    if isinstance(like, (list, tuple)):
+        vals = [_unflatten_like(v, flat, f"{prefix}{i}{SEP}")
+                for i, v in enumerate(like)]
+        return type(like)(vals)
+    return flat[prefix.rstrip(SEP)]

@@ -1,0 +1,135 @@
+"""Collaborative learning at the consumer edge: FedAvg + DP + SecAgg.
+
+Implements the paper's Privacy pillar (Table 1) end-to-end:
+
+* **FedAvg** rounds over heterogeneous edge clients (the orchestrator
+  schedules which devices participate — see ``core.orchestrator``).
+* **Differential privacy** (McMahan et al., ICLR'18): per-client update
+  clipping + Gaussian noise on the aggregate.
+* **Secure aggregation** (Bonawitz et al.): pairwise PRG masks derived
+  from shared seeds; masks cancel exactly in the sum, so the server only
+  ever sees the aggregate.  (Key agreement itself is out of scope — the
+  seed matrix stands in for the DH exchange.)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.training import optimizer as opt
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class FedConfig:
+    num_clients: int = 8
+    clients_per_round: int = 4
+    local_steps: int = 4
+    local_lr: float = 0.05
+    # differential privacy (0 disables)
+    dp_clip: float = 0.0
+    dp_noise_multiplier: float = 0.0
+    # secure aggregation
+    secure_aggregation: bool = False
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# local training
+# ---------------------------------------------------------------------------
+
+def local_update(cfg: ModelConfig, fcfg: FedConfig, params: Params,
+                 batches: Sequence[dict]) -> Params:
+    """Run local SGD steps; return the DELTA (new - old)."""
+    p = params
+
+    @jax.jit
+    def step(p, batch):
+        grads = jax.grad(lambda q: M.loss_fn(cfg, q, batch)[0])(p)
+        return opt.sgd_update(p, grads, fcfg.local_lr)
+
+    for b in batches[: fcfg.local_steps]:
+        p = step(p, b)
+    return jax.tree.map(lambda a, b: a.astype(jnp.float32)
+                        - b.astype(jnp.float32), p, params)
+
+
+# ---------------------------------------------------------------------------
+# privacy mechanisms
+# ---------------------------------------------------------------------------
+
+def clip_update(delta: Params, clip: float) -> Params:
+    norm = opt.global_norm(delta)
+    factor = jnp.minimum(1.0, clip / (norm + 1e-12))
+    return jax.tree.map(lambda x: x * factor, delta)
+
+
+def add_gaussian_noise(tree: Params, sigma: float, key) -> Params:
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    noisy = [x + sigma * jax.random.normal(k, x.shape, jnp.float32)
+             for x, k in zip(leaves, keys)]
+    return treedef.unflatten(noisy)
+
+
+def _pair_mask(tree: Params, seed: int) -> Params:
+    leaves, treedef = jax.tree.flatten(tree)
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, len(leaves))
+    return treedef.unflatten(
+        [jax.random.normal(k, x.shape, jnp.float32)
+         for x, k in zip(leaves, keys)])
+
+
+def secagg_mask(tree: Params, client: int, others: Sequence[int],
+                round_seed: int) -> Params:
+    """Sum of pairwise masks for ``client``: +mask(i,j) if i<j else -."""
+    masked = tree
+    for other in others:
+        if other == client:
+            continue
+        i, j = min(client, other), max(client, other)
+        seed = (round_seed * 1_000_003 + i * 1009 + j) % (2 ** 31)
+        mask = _pair_mask(tree, seed)
+        sign = 1.0 if client == i else -1.0
+        masked = jax.tree.map(lambda a, m: a + sign * m, masked, mask)
+    return masked
+
+
+# ---------------------------------------------------------------------------
+# federated round
+# ---------------------------------------------------------------------------
+
+def fed_round(cfg: ModelConfig, fcfg: FedConfig, params: Params,
+              client_batches: dict[int, Sequence[dict]], round_idx: int,
+              *, key=None) -> tuple[Params, dict]:
+    """One FedAvg round over the given clients' local data."""
+    key = key if key is not None else jax.random.PRNGKey(fcfg.seed + round_idx)
+    clients = sorted(client_batches)
+    deltas = {}
+    for c in clients:
+        d = local_update(cfg, fcfg, params, client_batches[c])
+        if fcfg.dp_clip:
+            d = clip_update(d, fcfg.dp_clip)
+        if fcfg.secure_aggregation:
+            d = secagg_mask(d, c, clients, round_seed=fcfg.seed + round_idx)
+        deltas[c] = d
+
+    # server only ever computes the SUM (SecAgg masks cancel here)
+    total = jax.tree.map(lambda *xs: sum(xs), *deltas.values())
+    avg = jax.tree.map(lambda x: x / len(clients), total)
+
+    if fcfg.dp_clip and fcfg.dp_noise_multiplier:
+        sigma = fcfg.dp_noise_multiplier * fcfg.dp_clip / len(clients)
+        avg = add_gaussian_noise(avg, sigma, key)
+
+    new_params = jax.tree.map(
+        lambda p, d: (p.astype(jnp.float32) + d).astype(p.dtype), params, avg)
+    update_norm = float(opt.global_norm(avg))
+    return new_params, {"clients": clients, "update_norm": update_norm}

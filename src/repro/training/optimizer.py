@@ -1,0 +1,170 @@
+"""Optimizers: AdamW with optional 8-bit (block-quantized) moments.
+
+No external deps (optax is not available offline) — implemented directly.
+The 8-bit moment store is a sustainability/memory lever (DESIGN.md
+§Sustainable-AI): it quarters optimizer HBM, which is what decides
+whether the trillion-parameter paper-table MoE fits the mesh at all
+(EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+BLOCK = 256  # quantization block size for 8-bit moments
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    learning_rate: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    moments_dtype: str = "float32"  # "float32" | "int8"
+
+
+def lr_schedule(cfg: OptimizerConfig, step):
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(math.pi * prog))
+    frac = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.learning_rate * warm * frac
+
+
+# ---------------------------------------------------------------------------
+# 8-bit block quantization for moment tensors
+# ---------------------------------------------------------------------------
+
+def _q8_encode(x: jnp.ndarray):
+    """SHAPE-PRESERVING block quantization along the last axis.
+
+    q keeps the parameter's shape (padded on the last axis to a BLOCK
+    multiple) so the optimizer-state sharding can MIRROR the parameter
+    sharding exactly — a flattened layout forces XLA to reshard/
+    replicate f32 moments of every update (the 1T-MoE pathology:
+    2.4 TB/chip temps).  scale is one f32 per BLOCK of the last axis.
+    """
+    *lead, last = x.shape
+    pad = (-last) % BLOCK
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * len(lead) + [(0, pad)])
+    blocks = x.reshape(*lead, (last + pad) // BLOCK, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return {"q": q.reshape(*lead, last + pad),
+            "scale": scale.astype(jnp.float32)}
+
+
+def _q8_decode(enc, shape, size) -> jnp.ndarray:
+    del size
+    *lead, last = shape
+    padded = enc["q"].shape[-1]
+    blocks = enc["q"].reshape(*lead, padded // BLOCK, BLOCK)
+    out = (blocks.astype(jnp.float32) * enc["scale"]).reshape(*lead, padded)
+    return out[..., :last]
+
+
+def _moment_init(p, dtype: str):
+    if dtype == "int8":
+        return _q8_encode(jnp.zeros_like(p, jnp.float32))
+    return jnp.zeros_like(p, jnp.float32)
+
+
+def _moment_read(m, dtype: str, like=None, *, sqrt_domain: bool = False):
+    if dtype == "int8":
+        x = _q8_decode(m, like.shape, like.size)
+        return jnp.square(x) if sqrt_domain else x
+    return m
+
+
+def _moment_write(x, dtype: str, *, sqrt_domain: bool = False):
+    """sqrt_domain: the SECOND moment must be stored as sqrt(v) — linear
+    int8 quantization of v crushes small entries within a block to zero
+    and 1/sqrt(v) explodes (measured: loss 6.7 -> diverged).  In the
+    sqrt domain the same 127 levels track the f32 trajectory exactly
+    (EXPERIMENTS.md §Perf, Hillclimb 3 coda)."""
+    if dtype == "int8":
+        return _q8_encode(jnp.sqrt(x) if sqrt_domain else x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def init_opt_state(cfg: OptimizerConfig, params: Params):
+    is_q8_leaf = lambda x: isinstance(x, dict) and "q" in x
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: _moment_init(p, cfg.moments_dtype), params),
+        "v": jax.tree.map(lambda p: _moment_init(p, cfg.moments_dtype), params),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(cfg: OptimizerConfig, grads: Params, opt_state, params: Params):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip else jnp.float32(1.0)
+
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    dt = cfg.moments_dtype
+    is_q8 = lambda x: isinstance(x, dict) and "q" in x
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m_f = _moment_read(m, dt, like=g)
+        v_f = _moment_read(v, dt, like=g, sqrt_domain=True)
+        m_f = b1 * m_f + (1.0 - b1) * g
+        v_f = b2 * v_f + (1.0 - b2) * jnp.square(g)
+        mhat = m_f / bc1
+        vhat = v_f / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        new_p = p32 - lr * (delta + cfg.weight_decay * p32)
+        return (new_p.astype(p.dtype), _moment_write(m_f, dt),
+                _moment_write(v_f, dt, sqrt_domain=True))
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def sgd_update(params: Params, grads: Params, lr: float):
+    """Plain SGD (used by federated local steps)."""
+    return jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32)
+                      - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)

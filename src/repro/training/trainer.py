@@ -1,0 +1,100 @@
+"""Training loop: train_step factory with grad accumulation + remat.
+
+``make_train_step`` returns a pure function suitable for ``jax.jit``
+(and for ``.lower().compile()`` in the multi-pod dry-run).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.training import optimizer as opt
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: opt.OptimizerConfig = opt.OptimizerConfig()
+    microbatches: int = 1          # grad accumulation steps
+    remat: Optional[str] = "nothing_saveable"  # jax.checkpoint policy name
+    use_flash: bool = False
+    use_kernel: bool = False
+    accum_dtype: str = "float32"   # grad-accumulator dtype (bf16 halves
+                                   # the accumulator HBM at 1T scale)
+
+
+def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, key):
+    params = M.init_params(cfg, key)
+    return {"params": params,
+            "opt": opt.init_opt_state(tcfg.optimizer, params)}
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """(state, batch) -> (state, metrics).  batch leaves: (B, ...)."""
+
+    def loss(params, batch):
+        return M.loss_fn(cfg, params, batch, use_flash=tcfg.use_flash,
+                         use_kernel=tcfg.use_kernel, remat=tcfg.remat)
+
+    grad_fn = jax.value_and_grad(loss, has_aux=True)
+
+    def single(params, batch):
+        (l, metrics), grads = grad_fn(params, batch)
+        return l, metrics, grads
+
+    def accumulated(params, batch):
+        n = tcfg.microbatches
+        micro = jax.tree.map(
+            lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+        adt = jnp.dtype(tcfg.accum_dtype)
+
+        def body(carry, mb):
+            acc, lsum = carry
+            (l, metrics), grads = grad_fn(params, mb)
+            acc = jax.tree.map(lambda a, g: a + g.astype(adt), acc, grads)
+            return (acc, lsum + l), metrics
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
+        (grads, lsum), metrics = lax.scan(body, (zeros, 0.0), micro)
+        grads = jax.tree.map(lambda g: g / n, grads)
+        metrics = jax.tree.map(lambda x: x[-1], metrics)
+        return lsum / n, metrics, grads
+
+    def train_step(state, batch):
+        fn = single if tcfg.microbatches <= 1 else accumulated
+        l, metrics, grads = fn(state["params"], batch)
+        new_params, new_opt, opt_metrics = opt.adamw_update(
+            tcfg.optimizer, grads, state["opt"], state["params"])
+        metrics = dict(metrics, loss=l, **opt_metrics)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def train_loop(cfg: ModelConfig, tcfg: TrainConfig, data_iter, num_steps: int,
+               *, key=None, state=None, log_every: int = 10,
+               callback=None):
+    """Eager CPU-scale loop used by examples/tests (single device)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if state is None:
+        state = init_train_state(cfg, tcfg, key)
+    step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=0)
+    history = []
+    for i in range(num_steps):
+        batch = next(data_iter)
+        state, metrics = step_fn(state, batch)
+        if i % log_every == 0 or i == num_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": i, **m})
+            if callback:
+                callback(i, m)
+    return state, history

@@ -1,0 +1,10 @@
+# NOTE: deliberately NO XLA_FLAGS here — smoke tests and benchmarks must
+# see the host's real single CPU device.  Only launch/dryrun.py forces
+# the 512-device placeholder topology (before any jax import).
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

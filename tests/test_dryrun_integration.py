@@ -1,0 +1,45 @@
+"""Launch-path integration: run the REAL dry-run in a subprocess (it
+must force 512 host devices before jax init, which cannot happen inside
+this test process) for a cheap (arch, shape) and check the record."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_dryrun(args, timeout=420):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True, text=True, timeout=timeout, env=env,
+        cwd=REPO)
+
+
+@pytest.mark.parametrize("mesh", ["single", "multi"])
+def test_dryrun_compiles_and_reports(tmp_path, mesh):
+    out = tmp_path / "rec.jsonl"
+    r = _run_dryrun(["--arch", "mamba2-370m", "--shape", "decode_32k",
+                     "--mesh", mesh, "--out", str(out)])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    rec = json.loads(out.read_text().splitlines()[0])
+    assert rec["status"] == "ok"
+    assert rec["chips"] == (512 if mesh == "multi" else 256)
+    for term in ("compute_s", "memory_s", "collective_s"):
+        assert rec[term] >= 0.0
+    assert rec["bottleneck"] in ("compute", "memory", "collective")
+    assert rec["hlo_flops_per_chip"] > 0
+    assert "CompiledMemoryStats" in rec["memory_analysis"]
+
+
+def test_dryrun_documented_skip(tmp_path):
+    out = tmp_path / "rec.jsonl"
+    r = _run_dryrun(["--arch", "phi3-medium-14b", "--shape", "long_500k",
+                     "--mesh", "single", "--out", str(out)])
+    assert r.returncode == 0
+    rec = json.loads(out.read_text().splitlines()[0])
+    assert rec["status"] == "skipped"
+    assert "full-attention" in rec["reason"]

@@ -1,0 +1,119 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles.
+
+Kernels run in interpret=True on CPU — the kernel body (BlockSpec
+indexing included) executes for real.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.quant_matmul import quantize_weights
+
+
+# ---------------------------------------------------------------------------
+# quant_matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(32, 64, 128), (64, 256, 128),
+                                   (128, 128, 512), (8, 512, 256)])
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize("xdtype", [jnp.float32, jnp.bfloat16])
+def test_quant_matmul_sweep(m, k, n, bits, xdtype):
+    key = jax.random.PRNGKey(m * n + bits)
+    x = jax.random.normal(key, (m, k), xdtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32) * 0.05
+    wq, scale = quantize_weights(w, bits)
+    out = ops.quant_matmul(x, wq, scale)
+    expect = ref.quant_matmul_ref(x, wq, scale)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        rtol=0.05, atol=0.05)
+
+
+def test_quantize_weights_bounds():
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+    for bits in (8, 4):
+        q, s = quantize_weights(w, bits)
+        lim = 2 ** (bits - 1)
+        assert int(jnp.max(q)) <= lim - 1 and int(jnp.min(q)) >= -lim
+        err = jnp.abs(q * s[None] - w).max()
+        assert float(err) <= float(s.max())  # within one quantization step
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,h,kv,hd", [(64, 4, 2, 32), (128, 4, 4, 64),
+                                       (32, 8, 1, 128), (256, 2, 2, 64)])
+@pytest.mark.parametrize("window,softcap", [(0, 0.0), (16, 0.0),
+                                            (0, 50.0), (32, 30.0)])
+def test_flash_attention_sweep(s, h, kv, hd, window, softcap):
+    key = jax.random.PRNGKey(s + h)
+    q = jax.random.normal(key, (2, s, h, hd), jnp.float32) * 0.5
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, s, kv, hd)) * 0.5
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, s, kv, hd)) * 0.5
+    out = ops.flash_attention(q, k, v, scale=hd ** -0.5, window=window,
+                              softcap=softcap)
+    expect = ref.flash_attention_ref(q, k, v, scale=hd ** -0.5,
+                                     window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 64, 4, 64), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 2, 64), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 64, 2, 64), dtype)
+    out = ops.flash_attention(q, k, v, scale=0.125)
+    expect = ref.flash_attention_ref(q, k, v, scale=0.125)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("l,h,p,n,chunk", [(64, 4, 16, 8, 16),
+                                           (128, 2, 32, 16, 32),
+                                           (48, 4, 16, 8, 16),  # ragged tail
+                                           (32, 8, 64, 32, 8)])
+def test_ssd_scan_sweep(l, h, p, n, chunk):
+    key = jax.random.PRNGKey(l + h)
+    x = jax.random.normal(key, (2, l, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (2, l, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (h,)) * 0.3)
+    B = jax.random.normal(jax.random.PRNGKey(3), (2, l, n))
+    C = jax.random.normal(jax.random.PRNGKey(4), (2, l, n))
+    y, hf = ops.ssd_scan(x, dt, A, B, C, chunk=chunk)
+    yr, hr = ref.ssd_scan_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hr),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_scan_initial_state():
+    """Continuation: scan(second half, h0=state(first half)) == full."""
+    key = jax.random.PRNGKey(7)
+    l, h, p, n = 64, 2, 16, 8
+    x = jax.random.normal(key, (1, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (1, l, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (h,)) * 0.3)
+    B = jax.random.normal(jax.random.PRNGKey(3), (1, l, n))
+    C = jax.random.normal(jax.random.PRNGKey(4), (1, l, n))
+    y_full, h_full = ops.ssd_scan(x, dt, A, B, C, chunk=16)
+    _, h1 = ops.ssd_scan(x[:, :32], dt[:, :32], A, B[:, :32], C[:, :32],
+                         chunk=16)
+    y2, h2 = ops.ssd_scan(x[:, 32:], dt[:, 32:], A, B[:, 32:], C[:, 32:],
+                          chunk=16, h0=h1)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y_full[:, 32:]),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full),
+                               rtol=1e-3, atol=1e-3)

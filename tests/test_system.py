@@ -1,0 +1,85 @@
+"""End-to-end behaviour tests: the full EdgeAI-Hub story in one place —
+train -> checkpoint -> deploy -> serve -> schedule -> federate."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import InputShape, get_config, get_smoke_config
+from repro.core import trustzones as tz
+from repro.core.hub import EdgeAIHub
+from repro.core.orchestrator import TaskSpec
+from repro.data import DataConfig, data_iterator
+from repro.models import model as M
+from repro.serving import EdgeServingEngine, Request, ServeConfig
+from repro.training import checkpoint as ckpt
+from repro.training import federated as fed
+from repro.training.optimizer import OptimizerConfig
+from repro.training.trainer import TrainConfig, train_loop
+
+
+def test_end_to_end_train_checkpoint_serve(tmp_path):
+    cfg = get_smoke_config("gemma3-1b")
+    shape = InputShape("t", 64, 8, "train")
+    tcfg = TrainConfig(optimizer=OptimizerConfig(
+        learning_rate=3e-3, warmup_steps=5, total_steps=40), remat=None)
+    it = data_iterator(cfg, shape, DataConfig(branching=2))
+    state, hist = train_loop(cfg, tcfg, it, 30, log_every=10)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+    path = os.path.join(tmp_path, "m.npz")
+    ckpt.save(path, state["params"])
+    params = ckpt.restore(path, state["params"])
+
+    eng = EdgeServingEngine(cfg, params,
+                            ServeConfig(max_slots=2, max_len=96,
+                                        prefill_buckets=(8,)))
+    for uid in range(4):
+        eng.submit(Request(uid=uid,
+                           prompt=np.arange(4 + uid, dtype=np.int32),
+                           max_new_tokens=6))
+    done = eng.run_until_drained()
+    assert len(done) == 4
+
+
+def test_end_to_end_hub_day():
+    hub = EdgeAIHub.create(policy="edf")
+    full = get_config("gemma3-1b")
+    for i in range(8):
+        hub.submit(TaskSpec(kind="stream", model=full, batch=1, seq=256,
+                            priority=5, deadline_rel=0.25, arrival=i * 0.05,
+                            source_device="living-room-tv"))
+    hub.submit(TaskSpec(kind="inference", model=full, batch=16, seq=1024,
+                        priority=0, deadline_rel=30.0,
+                        source_device="alice-phone",
+                        data=tz.DataItem("gallery", "household", "alice")))
+    hub.orchestrator.fail_device("vacuum")
+    report = hub.run()
+    assert report["completed"] == 9
+    assert report["miss_rate"] <= 0.25
+
+
+def test_end_to_end_private_federation():
+    cfg = get_smoke_config("gemma3-1b")
+    shape = InputShape("fl", 32, 4, "train")
+    hub = EdgeAIHub.create()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    client_data = {
+        n: [next(data_iterator(cfg, shape, DataConfig(seed=i, branching=2)))]
+        for i, n in enumerate(["alice-phone", "living-room-tv",
+                               "bob-old-phone"])}
+    item = tz.DataItem("alice-voice", "personal", "alice")
+    new_params, info = hub.federated_round(
+        cfg, fed.FedConfig(local_steps=2, local_lr=0.3, dp_clip=1.0,
+                           dp_noise_multiplier=0.01,
+                           secure_aggregation=True),
+        params, client_data, item, round_idx=0)
+    # owner gate: bob-old-phone excluded from alice's personal data
+    assert len(info["clients"]) == 2
+    changed = any(
+        not np.allclose(np.asarray(a, np.float32),
+                        np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(params),
+                        jax.tree.leaves(new_params)))
+    assert changed
