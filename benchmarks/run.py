@@ -13,6 +13,7 @@ from benchmarks import (
     memory_traffic,
     quant_serving,
     scheduler_qoe,
+    serving_throughput,
     split_inference,
     train_vs_infer_mem,
 )
@@ -25,6 +26,7 @@ SUITES = {
     "split": split_inference,
     "earlyexit": early_exit,
     "qoe": scheduler_qoe,
+    "serving": serving_throughput,
 }
 
 

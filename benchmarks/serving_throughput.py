@@ -1,0 +1,115 @@
+"""Serving-path benchmark: tokens/sec and time-to-first-token under
+mixed prompt-length multi-tenant traffic (the EdgeAI-Hub QoE numbers).
+
+Workload: short chat turns, medium instructions and long documents in
+one queue — prompt lengths deliberately NOT bucket-aligned, so this
+exercises padded exact admission AND chunked (catch-up) prefill.
+Derived values: aggregate generated tokens/sec, p50/p99 TTFT (submit ->
+first generated token, queueing included).
+
+  PYTHONPATH=src python -m benchmarks.serving_throughput [--requests N]
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.serving import EdgeServingEngine, Request, ServeConfig
+
+ARCH = "gemma3-1b"
+# (lo, hi) prompt-length bands of the traffic mix — 9..97 crosses every
+# bucket boundary below and the largest band exceeds the largest bucket
+_BANDS = ((4, 12), (20, 40), (70, 100))
+_SCFG = ServeConfig(max_slots=4, max_len=192, prefill_buckets=(16, 32, 64),
+                    policy="priority")
+
+
+def _workload(n_requests: int, vocab: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for uid in range(n_requests):
+        lo, hi = _BANDS[uid % len(_BANDS)]
+        n = int(rng.integers(lo, hi + 1))
+        reqs.append(Request(
+            uid=uid,
+            prompt=rng.integers(0, vocab, n, dtype=np.int32),
+            max_new_tokens=16,
+            priority=uid % 3))
+    return reqs
+
+
+def run(n_requests: int = 12, seed: int = 0) -> dict:
+    cfg = get_smoke_config(ARCH)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = EdgeServingEngine(cfg, params, _SCFG)
+
+    # warm the jit caches with the IDENTICAL workload: prefill variants
+    # are cached per (bucket, batch, extras), and admission grouping is
+    # deterministic, so replaying the same requests guarantees every
+    # variant the measured run needs is already compiled — TTFT then
+    # measures serving latency, not XLA compile time
+    for r in _workload(n_requests, cfg.vocab_size, seed=seed):
+        eng.submit(r)
+    eng.run_until_drained()
+    eng.completed.clear()
+    eng.steps = 0
+
+    reqs = _workload(n_requests, cfg.vocab_size, seed=seed)
+    t_submit = {}
+    t_first = {}
+    t0 = time.perf_counter()
+    for r in reqs:
+        eng.submit(r)
+        t_submit[r.uid] = time.perf_counter()
+    while eng.queue or eng.active.any():
+        eng.step()
+        now = time.perf_counter()
+        for r in reqs:
+            if r.uid not in t_first and r.generated:
+                t_first[r.uid] = now
+    elapsed = time.perf_counter() - t0
+
+    toks = sum(len(r.generated) for r in eng.completed)
+    ttft_ms = np.asarray(
+        [(t_first[u] - t_submit[u]) * 1e3 for u in t_first])
+    return {
+        "requests": len(eng.completed),
+        "decode_steps": eng.steps,
+        "tokens": toks,
+        "elapsed_s": elapsed,
+        "tok_per_s": toks / elapsed,
+        "ttft_p50_ms": float(np.percentile(ttft_ms, 50)),
+        "ttft_p99_ms": float(np.percentile(ttft_ms, 99)),
+    }
+
+
+def bench():
+    r = run()
+    us = r["elapsed_s"] * 1e6
+    return [
+        ("serving.tok_per_s", us, r["tok_per_s"]),
+        ("serving.ttft_p50_ms", us, r["ttft_p50_ms"]),
+        ("serving.ttft_p99_ms", us, r["ttft_p99_ms"]),
+    ]
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    out = run(args.requests, args.seed)
+    out = {k: (round(v, 3) if isinstance(v, float) else v)
+           for k, v in out.items()}
+    print(json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

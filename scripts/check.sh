@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# Tier-1 gate: compat status, fast import sweep, then the test suite.
+# The import sweep catches AxisType-style JAX version breaks in seconds
+# instead of surfacing them as collection errors three minutes in.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== compat ==" >&2
+python scripts/diagnose.py --compat >&2
+
+echo "== import sweep ==" >&2
+python - <<'PY'
+import importlib
+MODULES = [
+    "repro.compat",
+    "repro.configs",
+    "repro.core",
+    "repro.data",
+    "repro.kernels",
+    "repro.launch",
+    "repro.models",
+    "repro.serving",
+    "repro.training",
+]
+for mod in MODULES:
+    importlib.import_module(mod)
+    print(f"  ok {mod}")
+PY
+
+echo "== tier-1 tests ==" >&2
+python -m pytest -x -q

@@ -5,7 +5,9 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 ops by bytes / flops / collective bytes (trip-scaled, per chip).
 
   PYTHONPATH=src python scripts/diagnose.py <arch> <shape> [top]
+  PYTHONPATH=src python scripts/diagnose.py --compat   # JAX/shim status
 """
+import json
 import sys
 
 from repro.configs import INPUT_SHAPES, get_config
@@ -19,6 +21,10 @@ from repro.training import trainer as tr
 
 
 def main():
+    from repro.compat import report
+    print("compat:", json.dumps(report()))
+    if "--compat" in sys.argv or len(sys.argv) < 3:
+        return
     arch, shape_name = sys.argv[1], sys.argv[2]
     top = int(sys.argv[3]) if len(sys.argv) > 3 else 10
     preset_name = sys.argv[4] if len(sys.argv) > 4 else "baseline"

@@ -1,0 +1,167 @@
+"""JAX version-portability layer.
+
+Policy (see also ROADMAP.md §Open items)
+----------------------------------------
+* Minimum supported JAX: 0.4.30 (first release with ``jax.tree.map`` and
+  the ``jax.sharding`` module layout this repo relies on).
+* Anything newer than the minimum is OPTIONAL: modern symbols are probed
+  with guarded imports at module load and shimmed when absent.  Code in
+  this repo must import version-sensitive sharding/mesh symbols from
+  ``repro.compat`` — never from ``jax``/``jax.sharding`` directly — so a
+  version break surfaces HERE, once, instead of scattered ImportErrors.
+* To add a shim: probe the modern symbol in a try/except ImportError (or
+  a signature check), provide a fallback with the same call surface, and
+  record the result in ``_SHIMS`` so ``report()`` (surfaced by
+  ``scripts/diagnose.py`` and ``scripts/check.sh``) shows what is active.
+
+Shimmed surface
+---------------
+``AxisType``          enum (jax>=0.6 ``jax.sharding.AxisType``); a
+                      stand-in enum with ``Auto``/``Explicit``/``Manual``
+                      members on older versions.
+``make_mesh(...)``    ``jax.make_mesh`` accepting ``axis_types`` — the
+                      kwarg is dropped where unsupported (axis types only
+                      change tracing-time sharding inference, not the
+                      mesh itself).
+``abstract_mesh(shape, names)``
+                      version-stable ``AbstractMesh`` constructor: newer
+                      JAX takes ``(axis_sizes, axis_names)``, 0.4.x takes
+                      a ``((name, size), ...)`` tuple.
+``Mesh / NamedSharding / PartitionSpec / AbstractMesh``
+                      re-exports so callers have one import site.
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+
+import jax
+from jax.sharding import (  # noqa: F401  (re-exports)
+    AbstractMesh,
+    Mesh,
+    NamedSharding,
+    PartitionSpec,
+)
+
+JAX_VERSION: tuple = tuple(
+    int(p) for p in jax.__version__.split(".")[:3] if p.isdigit())
+MIN_SUPPORTED: tuple = (0, 4, 30)
+
+_SHIMS: dict = {}  # name -> "native" | "shimmed"
+
+
+# ---------------------------------------------------------------------------
+# AxisType
+# ---------------------------------------------------------------------------
+
+try:
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+    _SHIMS["AxisType"] = "native"
+except ImportError:
+    class AxisType(enum.Enum):
+        """Stand-in for ``jax.sharding.AxisType`` (jax >= 0.6).
+
+        On versions without explicit axis types every mesh axis already
+        behaves as ``Auto``, so carrying the enum value is enough for
+        call-site compatibility.
+        """
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+    _SHIMS["AxisType"] = "shimmed"
+
+
+# ---------------------------------------------------------------------------
+# make_mesh
+# ---------------------------------------------------------------------------
+
+def _native_make_mesh_kwargs() -> set:
+    if not hasattr(jax, "make_mesh"):
+        return set()
+    try:
+        return set(inspect.signature(jax.make_mesh).parameters)
+    except (TypeError, ValueError):
+        return set()
+
+
+_MAKE_MESH_KWARGS = _native_make_mesh_kwargs()
+_SHIMS["make_mesh"] = (
+    "native" if "axis_types" in _MAKE_MESH_KWARGS else "shimmed")
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` that tolerates missing ``axis_types`` support."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if axis_types is not None and "axis_types" in _MAKE_MESH_KWARGS:
+        kwargs["axis_types"] = axis_types
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+    # pre-0.4.35 fallback: build the device ndarray by hand
+    from jax.experimental import mesh_utils
+    devs = mesh_utils.create_device_mesh(tuple(axis_shapes), devices=devices)
+    return Mesh(devs, tuple(axis_names))
+
+
+# ---------------------------------------------------------------------------
+# AbstractMesh
+# ---------------------------------------------------------------------------
+
+def _abstract_mesh_convention() -> str:
+    """'modern' = AbstractMesh(axis_sizes, axis_names);
+    'legacy' = AbstractMesh(((name, size), ...))."""
+    try:
+        params = list(inspect.signature(AbstractMesh).parameters)
+    except (TypeError, ValueError):
+        return "modern"
+    return "legacy" if params and params[0] == "shape_tuple" else "modern"
+
+
+_ABSTRACT_CONVENTION = _abstract_mesh_convention()
+_SHIMS["abstract_mesh"] = (
+    "native" if _ABSTRACT_CONVENTION == "modern" else "shimmed")
+
+
+def abstract_mesh(axis_shapes, axis_names) -> AbstractMesh:
+    """Version-stable ``AbstractMesh((16, 16), ("data", "model"))``."""
+    if _ABSTRACT_CONVENTION == "modern":
+        return AbstractMesh(tuple(axis_shapes), tuple(axis_names))
+    return AbstractMesh(tuple(zip(axis_names, axis_shapes)))
+
+
+# ---------------------------------------------------------------------------
+# compiled-artifact introspection
+# ---------------------------------------------------------------------------
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict on every version.
+
+    JAX <= 0.4.x returns a one-element list of per-program dicts; newer
+    versions return the dict directly.  Either way ``{}`` when XLA
+    provides nothing.
+    """
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
+_SHIMS["cost_analysis"] = "normalized"
+
+
+# ---------------------------------------------------------------------------
+# diagnostics
+# ---------------------------------------------------------------------------
+
+def report() -> dict:
+    """Machine-readable shim status (printed by scripts/diagnose.py)."""
+    return {
+        "jax_version": jax.__version__,
+        "min_supported": ".".join(map(str, MIN_SUPPORTED)),
+        "supported": JAX_VERSION >= MIN_SUPPORTED,
+        "shims": dict(_SHIMS),
+    }

@@ -47,15 +47,28 @@ class AITask:
                 and self.finish_time > self.deadline + 1e-9)
 
 
-def _rank(policy: str, task: AITask, now: float):
+def admission_rank(policy: str, *, priority: int = 0, arrival: float = 0.0,
+                   deadline: Optional[float] = None, uid: int = 0):
+    """QoE ordering key (lower sorts first) — the ONE policy definition
+    shared by this discrete-event scheduler and the serving engine's
+    admission queue (serving.engine), so simulated schedules and the
+    real continuous-batching runtime agree on who goes next.
+    """
     if policy == "fifo":
-        return (task.arrival, task.uid)
+        return (arrival, uid)
     if policy == "priority":
-        return (-task.priority, task.arrival, task.uid)
+        return (-priority, arrival, uid)
     if policy == "edf":
-        dl = task.deadline if task.deadline is not None else math.inf
-        return (dl, -task.priority, task.uid)
+        dl = deadline if deadline is not None else math.inf
+        return (dl, -priority, uid)
     raise ValueError(policy)
+
+
+def _rank(policy: str, task: AITask, now: float):
+    del now  # rank is currently time-invariant; kept for call-site compat
+    return admission_rank(policy, priority=task.priority,
+                          arrival=task.arrival, deadline=task.deadline,
+                          uid=task.uid)
 
 
 @dataclass

@@ -1,7 +1,12 @@
 """Serving launcher: EdgeAI-Hub engine with batched requests.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b \
-      --requests 8 --max-new 16
+      --requests 8 --max-new 16 --policy edf --top-k 4
+
+Traffic is a mixed prompt-length workload (some prompts exceed the
+largest prefill bucket to exercise chunked admission); per-request
+sampling params and QoE metadata (priority/deadline) ride on each
+Request.  Reports tokens/sec and TTFT percentiles.
 """
 from __future__ import annotations
 
@@ -26,6 +31,13 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="0 disables top-k filtering")
+    ap.add_argument("--policy", choices=("fifo", "priority", "edf"),
+                    default="priority",
+                    help="QoE admission ordering (core.scheduler)")
+    ap.add_argument("--min-prompt", type=int, default=4)
+    ap.add_argument("--max-prompt", type=int, default=24)
     ap.add_argument("--params", default=None,
                     help="checkpoint from launch.train (else random init)")
     args = ap.parse_args()
@@ -38,13 +50,16 @@ def main() -> None:
         params = ckpt.restore(args.params, params)
 
     scfg = ServeConfig(max_slots=args.slots, max_len=args.max_len,
-                       temperature=args.temperature)
+                       temperature=args.temperature, top_k=args.top_k,
+                       policy=args.policy)
     eng = EdgeServingEngine(cfg, params, scfg)
 
     rng = np.random.default_rng(0)
     t0 = time.time()
+    t_submit, t_first = {}, {}
+    reqs = []
     for uid in range(args.requests):
-        n = int(rng.integers(4, 12))
+        n = int(rng.integers(args.min_prompt, args.max_prompt + 1))
         extras = {}
         if cfg.family == "vlm":
             extras["image_embeds"] = rng.normal(
@@ -53,18 +68,35 @@ def main() -> None:
         if cfg.family == "encdec":
             extras["audio_embeds"] = rng.normal(
                 0, 0.1, (cfg.encoder_seq, cfg.d_model)).astype(np.float32)
-        eng.submit(Request(uid=uid,
-                           prompt=rng.integers(0, cfg.vocab_size, n,
-                                               dtype=np.int32),
-                           max_new_tokens=args.max_new,
-                           priority=uid % 3, extras=extras))
-    done = eng.run_until_drained()
+        req = Request(uid=uid,
+                      prompt=rng.integers(0, cfg.vocab_size, n,
+                                          dtype=np.int32),
+                      max_new_tokens=args.max_new,
+                      priority=uid % 3,
+                      deadline=float(uid) if args.policy == "edf" else None,
+                      extras=extras)
+        reqs.append(req)
+        eng.submit(req)
+        t_submit[uid] = time.time()
+
+    while eng.queue or eng.active.any():
+        eng.step()
+        now = time.time()
+        for r in reqs:
+            if r.uid not in t_first and r.generated:
+                t_first[r.uid] = now
+    done = eng.completed
     dt = time.time() - t0
     toks = sum(len(r.generated) for r in done)
+    ttft = sorted((t_first[u] - t_submit[u]) * 1e3 for u in t_first)
     print(json.dumps({
         "requests": len(done), "decode_steps": eng.steps,
         "tokens": toks, "elapsed_s": round(dt, 2),
         "tok_per_s": round(toks / dt, 1),
+        "ttft_p50_ms": round(ttft[len(ttft) // 2], 1),
+        "ttft_p99_ms": round(ttft[min(len(ttft) - 1,
+                                      int(0.99 * len(ttft)))], 1),
+        "policy": args.policy,
     }))
     for r in done[:3]:
         print(f"  req {r.uid}: {list(map(int, r.generated[:10]))}...")

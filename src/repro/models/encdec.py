@@ -161,11 +161,13 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params, tokens, pos):
 
 
 def prefill(cfg: ModelConfig, params: Params, tokens, max_len, *,
-            audio_embeds=None, use_flash=False):
+            audio_embeds=None, use_flash=False, true_len=None):
     """Encode audio, run the prompt tokens, build decode cache."""
-    from repro.models.transformer import _fill_global
+    from repro.models.transformer import (_fill_global, broadcast_true_len,
+                                          gather_last)
     enc_out = encode(cfg, params, audio_embeds)
     B, Sq = tokens.shape
+    n = broadcast_true_len(true_len, B)
     x = L.embed(cfg, params["embed"], tokens)
     x = x + params["pos_table"][:Sq].astype(x.dtype)[None]
     positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
@@ -177,9 +179,11 @@ def prefill(cfg: ModelConfig, params: Params, tokens, max_len, *,
 
     x, (ks, vs, cks, cvs) = lax.scan(body, x, params["decoder"])
     cache = {
-        "self": jax.vmap(lambda k, v: _fill_global(cfg, B, max_len, k, v))(ks, vs),
+        "self": jax.vmap(
+            lambda k, v: _fill_global(cfg, B, max_len, k, v, n))(ks, vs),
         "cross_k": cks,
         "cross_v": cvs,
     }
+    x = x[:, -1:] if n is None else gather_last(x, n)
     x = L.layernorm(params["dec_ln"], x, cfg.norm_eps)
-    return L.unembed(cfg, params["embed"], {}, x[:, -1:]), cache
+    return L.unembed(cfg, params["embed"], {}, x), cache

@@ -117,15 +117,16 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params, tokens, pos):
 
 
 def prefill(cfg: ModelConfig, params: Params, tokens, max_len, *,
-            use_flash=False, use_kernel=False):
+            use_flash=False, use_kernel=False, true_len=None):
     x = L.embed(cfg, params["embed"], tokens)
     B, Sq, _ = x.shape
+    n = T.broadcast_true_len(true_len, B)
     positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
     shared = params["shared_attn"]
     W = min(max_len, cfg.local_window)
 
     def mamba_body(h, lp):
-        h, st = S.block_fwd(cfg, lp, h, use_kernel=use_kernel)
+        h, st = S.block_fwd(cfg, lp, h, use_kernel=use_kernel, true_len=n)
         return h, st
 
     def super_body(h, mp):
@@ -136,11 +137,12 @@ def prefill(cfg: ModelConfig, params: Params, tokens, max_len, *,
 
     x, (mst, (ks, vs)) = lax.scan(super_body, x, params["mamba"])
     fill = jax.vmap(lambda k, v: T._fill_local(
-        cfg.replace(local_window=W), B, max_len, k, v))
+        cfg.replace(local_window=W), B, max_len, k, v, n))
     cache = {"mamba": mst, "attn": fill(ks, vs)}
     if "rem_mamba" in params:
         x, rst = lax.scan(mamba_body, x, params["rem_mamba"])
         cache["rem_mamba"] = rst
+    x = x[:, -1:] if n is None else T.gather_last(x, n)
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    logits = L.unembed(cfg, params["embed"], params["unembed"], x[:, -1:])
+    logits = L.unembed(cfg, params["embed"], params["unembed"], x)
     return logits, cache

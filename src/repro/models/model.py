@@ -112,26 +112,37 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
 
 
 def prefill(cfg: ModelConfig, params: Params, batch: dict, max_len: int, *,
-            use_flash: bool = False, use_kernel: bool = False):
+            use_flash: bool = False, use_kernel: bool = False,
+            true_len=None):
+    """Run the prompt and build the decode cache.
+
+    ``true_len``: optional int | (B,) int32 — the true number of TEXT
+    tokens per row when ``batch["tokens"]`` is right-padded (bucketed
+    serving prefill).  Every family then returns logits at the true last
+    prompt token and keeps pad positions out of the decode state, making
+    padded prefill bit-exact with an unpadded one.
+    """
     tokens = batch["tokens"]
     if cfg.family == "encdec":
         return encdec.prefill(cfg, params, tokens, max_len,
                               audio_embeds=batch["audio_embeds"],
-                              use_flash=use_flash)
+                              use_flash=use_flash, true_len=true_len)
     if cfg.family == "vlm":
         return vlm.prefill(cfg, params, tokens, max_len,
                            image_embeds=batch["image_embeds"],
-                           use_flash=use_flash)
+                           use_flash=use_flash, true_len=true_len)
     if cfg.family == "ssm":
         return ssm.prefill(cfg, params, tokens, max_len,
-                           use_kernel=use_kernel)
+                           use_kernel=use_kernel, true_len=true_len)
     if cfg.family == "hybrid":
         return hybrid.prefill(cfg, params, tokens, max_len,
-                              use_flash=use_flash, use_kernel=use_kernel)
+                              use_flash=use_flash, use_kernel=use_kernel,
+                              true_len=true_len)
     if cfg.family == "moe":
-        return moe.prefill(cfg, params, tokens, max_len, use_flash=use_flash)
+        return moe.prefill(cfg, params, tokens, max_len, use_flash=use_flash,
+                           true_len=true_len)
     return transformer.prefill(cfg, params, tokens, max_len,
-                               use_flash=use_flash)
+                               use_flash=use_flash, true_len=true_len)
 
 
 def decode_step(cfg: ModelConfig, params: Params, cache, tokens, pos):

@@ -47,8 +47,10 @@ def capacity(cfg: ModelConfig, n_tokens: int) -> int:
     return max(c, 1)
 
 
-def moe_mlp(cfg: ModelConfig, p: Params, x):
+def moe_mlp(cfg: ModelConfig, p: Params, x, token_mask=None):
     """x: (B, S, d) -> (out (B, S, d), aux_loss scalar f32).
+    ``token_mask``: optional (B, S) bool — False marks padding tokens
+    excluded from expert capacity (see ``_moe_tokens``).
 
     cfg.moe_rowwise: dispatch each sequence independently (vmap over
     batch) — the expert buffers then carry the batch dim and shard over
@@ -58,16 +60,28 @@ def moe_mlp(cfg: ModelConfig, p: Params, x):
     trade-off (slightly higher dropping variance).
     """
     B, S, d = x.shape
+    if token_mask is not None:
+        token_mask = token_mask.reshape(B, S)
     if cfg.moe_rowwise:
-        out, aux = jax.vmap(lambda row: _moe_tokens(cfg, p, row))(
-            x.reshape(B, S, d))
+        out, aux = jax.vmap(
+            lambda row, m: _moe_tokens(cfg, p, row, m))(
+                x.reshape(B, S, d),
+                (jnp.ones((B, S), bool) if token_mask is None
+                 else token_mask))
         return out.reshape(B, S, d), jnp.mean(aux)
-    out, aux = _moe_tokens(cfg, p, x.reshape(B * S, d))
+    flat_mask = None if token_mask is None else token_mask.reshape(B * S)
+    out, aux = _moe_tokens(cfg, p, x.reshape(B * S, d), flat_mask)
     return out.reshape(B, S, d), aux
 
 
-def _moe_tokens(cfg: ModelConfig, p: Params, xf):
-    """Capacity-based top-k dispatch over a flat token set xf: (N, d)."""
+def _moe_tokens(cfg: ModelConfig, p: Params, xf, token_mask=None):
+    """Capacity-based top-k dispatch over a flat token set xf: (N, d).
+
+    ``token_mask``: optional (N,) bool — False rows (padding) are routed
+    to a sentinel expert id E so they never occupy real expert capacity
+    (a pad stealing a capacity slot would silently drop a REAL token and
+    change its output — padded prefill must be exact).
+    """
     N, d = xf.shape
     E, k = cfg.num_experts, cfg.num_experts_per_tok
     c = capacity(cfg, N)
@@ -77,6 +91,9 @@ def _moe_tokens(cfg: ModelConfig, p: Params, xf):
     probs = jax.nn.softmax(logits, axis=-1)                    # (N, E)
     gate, eidx = lax.top_k(probs, k)                           # (N, k)
     gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+    if token_mask is not None:
+        eidx = jnp.where(token_mask[:, None], eidx, E)
+        gate = gate * token_mask[:, None].astype(gate.dtype)
 
     # load-balancing auxiliary loss (Switch): E * <f_e> . <p_e>
     me = jnp.mean(probs, axis=0)                               # (E,)
@@ -158,14 +175,14 @@ def init_params(cfg: ModelConfig, key) -> Params:
 
 
 def moe_block_fwd(cfg: ModelConfig, p: Params, x, positions, *,
-                  use_flash=False):
+                  use_flash=False, token_mask=None):
     _, norm = L.make_norm(cfg)
     h = norm(p["ln1"], x)
     a, k, v = L.attention_fwd(cfg, p["attn"], h, positions, is_global=True,
                               use_flash=use_flash)
     x = x + a
     h = norm(p["ln2"], x)
-    m, aux = moe_mlp(cfg, p["moe"], h)
+    m, aux = moe_mlp(cfg, p["moe"], h, token_mask=token_mask)
     return x + m, aux, (k, v)
 
 
@@ -240,9 +257,12 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params, tokens, pos):
 
 
 def prefill(cfg: ModelConfig, params: Params, tokens, max_len, *,
-            use_flash=False):
+            use_flash=False, true_len=None):
     x = L.embed(cfg, params["embed"], tokens)
     B, S, _ = x.shape
+    n = T.broadcast_true_len(true_len, B)
+    token_mask = (None if n is None else
+                  jnp.arange(S, dtype=jnp.int32)[None, :] < n[:, None])
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     cache = {}
     if cfg.first_dense_layers:
@@ -252,16 +272,18 @@ def prefill(cfg: ModelConfig, params: Params, tokens, max_len, *,
             return h, kv
         x, (ks, vs) = lax.scan(dbody, x, params["dense_layers"])
         cache["dense_layers"] = jax.vmap(
-            lambda k, v: T._fill_global(cfg, B, max_len, k, v))(ks, vs)
+            lambda k, v: T._fill_global(cfg, B, max_len, k, v, n))(ks, vs)
 
     def body(h, lp):
-        h, _, kv = moe_block_fwd(cfg, lp, h, positions, use_flash=use_flash)
+        h, _, kv = moe_block_fwd(cfg, lp, h, positions, use_flash=use_flash,
+                                 token_mask=token_mask)
         return h, kv
     x, (ks, vs) = lax.scan(body, x, params["moe_layers"])
     cache["moe_layers"] = jax.vmap(
-        lambda k, v: T._fill_global(cfg, B, max_len, k, v))(ks, vs)
+        lambda k, v: T._fill_global(cfg, B, max_len, k, v, n))(ks, vs)
 
     _, norm = L.make_norm(cfg)
+    x = x[:, -1:] if n is None else T.gather_last(x, n)
     x = norm(params["final_norm"], x)
-    logits = L.unembed(cfg, params["embed"], params["unembed"], x[:, -1:])
+    logits = L.unembed(cfg, params["embed"], params["unembed"], x)
     return logits, cache

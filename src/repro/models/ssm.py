@@ -119,11 +119,14 @@ def ssd_chunked(x, dt, A, B, C, chunk: int, h0=None, use_kernel: bool = False):
     return y.astype(x.dtype), h_final
 
 
-def _causal_conv(xBC, conv_w, conv_b, conv_state=None):
+def _causal_conv(xBC, conv_w, conv_b, conv_state=None, true_len=None):
     """Depthwise causal conv via shifted adds.
 
     xBC: (b, l, ch); conv_w: (w, ch).  conv_state: (b, w-1, ch) history
     prepended (decode/chunked-prefill continuity) or zeros.
+    ``true_len``: optional (b,) — with right-padded input the returned
+    state window ends at each row's true boundary (positions
+    [n-w+1, n)), not at the pad tail.
     Returns (out (b, l, ch), new_state (b, w-1, ch)).
     """
     b, l, ch = xBC.shape
@@ -135,7 +138,14 @@ def _causal_conv(xBC, conv_w, conv_b, conv_state=None):
     for i in range(w):
         out = out + full[:, i:i + l] * conv_w[i].astype(xBC.dtype)
     out = out + conv_b.astype(xBC.dtype)
-    new_state = full[:, -(w - 1):] if w > 1 else conv_state
+    if w <= 1:
+        return out, conv_state
+    if true_len is None:
+        return out, full[:, -(w - 1):]
+    # position p lives at full[:, p + w - 1]; window [n-w+1, n) starts
+    # at full index n, and negative positions land in the zero prefix
+    idx = true_len[:, None] + jnp.arange(w - 1, dtype=jnp.int32)[None, :]
+    new_state = jnp.take_along_axis(full, idx[..., None], axis=1)
     return out, new_state
 
 
@@ -148,10 +158,14 @@ def _split_in_proj(cfg: ModelConfig, zxbcdt):
 
 
 def mamba_mix(cfg: ModelConfig, p: Params, x, state=None, *,
-              use_kernel: bool = False):
+              use_kernel: bool = False, true_len=None):
     """Sequence-mode mamba2 mixer. x: (b, l, d).
 
     state: optional dict(conv=(b,w-1,ch), ssm=(b,h,pd,n)) for continuation.
+    ``true_len``: optional (b,) int32 — positions >= true_len are
+    right-padding: their dt is forced to 0, which makes them exact
+    no-ops on the recurrence (decay exp(0·A)=1, zero state update), and
+    the conv state is taken at the true boundary.
     Returns (out (b,l,d), new_state dict).
     """
     b, l, d = x.shape
@@ -160,7 +174,8 @@ def mamba_mix(cfg: ModelConfig, p: Params, x, state=None, *,
     z, xBC, dt = _split_in_proj(cfg, zxbcdt)
 
     conv_in = None if state is None else state["conv"]
-    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_in)
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_in,
+                                 true_len=true_len)
     xBC = jax.nn.silu(xBC)
     xin = xBC[..., :di].reshape(b, l, h, pd)
     B = xBC[..., di:di + n]
@@ -168,6 +183,9 @@ def mamba_mix(cfg: ModelConfig, p: Params, x, state=None, *,
 
     dt = jax.nn.softplus(dt.astype(jnp.float32)
                          + p["dt_bias"].astype(jnp.float32))
+    if true_len is not None:
+        tmask = jnp.arange(l, dtype=jnp.int32)[None, :] < true_len[:, None]
+        dt = jnp.where(tmask[..., None], dt, 0.0)
     A = -jnp.exp(p["A_log"].astype(jnp.float32))
     h0 = None if state is None else state["ssm"]
     y, h_final = ssd_chunked(xin, dt, A, B, C, cfg.ssm_chunk, h0=h0,
@@ -218,9 +236,10 @@ def mamba_mix_decode(cfg: ModelConfig, p: Params, x, state):
 # ---------------------------------------------------------------------------
 
 def block_fwd(cfg: ModelConfig, p: Params, x, state=None, *,
-              use_kernel=False):
+              use_kernel=False, true_len=None):
     h = L.rmsnorm(p["ln"], x, cfg.norm_eps)
-    o, new_state = mamba_mix(cfg, p, h, state, use_kernel=use_kernel)
+    o, new_state = mamba_mix(cfg, p, h, state, use_kernel=use_kernel,
+                             true_len=true_len)
     return x + o, new_state
 
 
@@ -273,14 +292,17 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params, tokens, pos):
 
 
 def prefill(cfg: ModelConfig, params: Params, tokens, max_len, *,
-            use_kernel=False):
+            use_kernel=False, true_len=None):
     del max_len
+    from repro.models.transformer import broadcast_true_len, gather_last
     x = L.embed(cfg, params["embed"], tokens)
+    n = broadcast_true_len(true_len, x.shape[0])
 
     def body(h, lp):
-        h, st = block_fwd(cfg, lp, h, use_kernel=use_kernel)
+        h, st = block_fwd(cfg, lp, h, use_kernel=use_kernel, true_len=n)
         return h, st
     x, states = lax.scan(body, x, params["layers"])
+    x = x[:, -1:] if n is None else gather_last(x, n)
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    logits = L.unembed(cfg, params["embed"], params["unembed"], x[:, -1:])
+    logits = L.unembed(cfg, params["embed"], params["unembed"], x)
     return logits, {"layers": states}

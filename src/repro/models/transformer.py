@@ -241,21 +241,65 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params, tokens, pos):
 # prefill: forward + cache construction
 # ---------------------------------------------------------------------------
 
-def _fill_global(cfg, batch, max_len, k, v):
+def broadcast_true_len(true_len, batch: int):
+    """``true_len`` (int | (B,) int32 | None) -> (B,) int32 | None."""
+    if true_len is None:
+        return None
+    return jnp.broadcast_to(jnp.asarray(true_len, jnp.int32), (batch,))
+
+
+def gather_last(x, n):
+    """x: (B, S, d); n: (B,) true lengths -> (B, 1, d) at index n-1."""
+    idx = jnp.maximum(n - 1, 0).astype(jnp.int32)[:, None, None]
+    return jnp.take_along_axis(x, idx, axis=1)
+
+
+def _fill_global(cfg, batch, max_len, k, v, n=None):
+    """Dense decode cache from prefill K/V.
+
+    ``n``: optional (B,) true sequence lengths — positions >= n are
+    right-padding whose K/V must never be attended: their ``slots``
+    entries are set to -1 (invalid), which masks them in
+    ``attention_decode`` until the decode loop overwrites them in
+    sequence order.
+    """
     S = k.shape[1]
     cache = L.init_kv_cache(cfg, batch, max_len, dtype=k.dtype)
     cache["k"] = lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=1)
     cache["v"] = lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=1)
-    slots = jnp.where(jnp.arange(max_len) < S, jnp.arange(max_len), -1)
-    cache["slots"] = jnp.broadcast_to(
-        slots.astype(jnp.int32), (batch, max_len))
+    pos = jnp.arange(max_len, dtype=jnp.int32)
+    if n is None:
+        slots = jnp.broadcast_to(jnp.where(pos < S, pos, -1),
+                                 (batch, max_len))
+    else:
+        slots = jnp.where(pos[None, :] < n[:, None], pos[None, :], -1)
+        slots = jnp.broadcast_to(slots, (batch, max_len))
+    cache["slots"] = slots.astype(jnp.int32)
     return cache
 
 
-def _fill_local(cfg, batch, max_len, k, v):
+def _fill_local(cfg, batch, max_len, k, v, n=None):
+    """Sliding-window ring cache from prefill K/V.
+
+    With ``n`` given, the ring holds positions [n-W, n) of each row —
+    padded positions must not evict true context (a right-padded row
+    whose pads landed in the ring would decode with an empty window).
+    """
     S = k.shape[1]
     W = min(cfg.local_window, max_len)
     cache = L.init_kv_cache(cfg, batch, W, dtype=k.dtype)
+    if n is not None:
+        # ring slot j holds the largest position p <= n-1 with p % W == j
+        j = jnp.arange(W, dtype=jnp.int32)
+        p = j[None, :] + ((n[:, None] - 1 - j[None, :]) // W) * W  # (B, W)
+        valid = (p >= 0) & (p < n[:, None])
+        idx = jnp.clip(p, 0, S - 1)
+        take = lambda src: jnp.take_along_axis(
+            src, idx[..., None, None], axis=1)
+        cache["k"] = jnp.where(valid[..., None, None], take(k), 0)
+        cache["v"] = jnp.where(valid[..., None, None], take(v), 0)
+        cache["slots"] = jnp.where(valid, p, -1)
+        return cache
     if S >= W:
         pos = jnp.arange(S - W, S)
         idx = pos % W
@@ -272,12 +316,23 @@ def _fill_local(cfg, batch, max_len, k, v):
 
 
 def prefill(cfg: ModelConfig, params: Params, tokens, max_len, *,
-            prefix_embeds=None, use_flash=False):
-    """Run the prompt, return (last-token logits, cache sized max_len)."""
+            prefix_embeds=None, use_flash=False, true_len=None):
+    """Run the prompt, return (last-token logits, cache sized max_len).
+
+    ``true_len``: optional int | (B,) int32 — true TEXT token count per
+    row when ``tokens`` is right-padded to a prefill bucket.  Logits are
+    then taken at each row's true last token (offset by the prefix
+    length for VLM image tokens), and pad positions are marked invalid
+    in the caches, so padded prefill is EXACT, not approximate.
+    """
     x = L.embed(cfg, params["embed"], tokens)
+    P = 0
     if prefix_embeds is not None:
+        P = prefix_embeds.shape[1]
         x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
     B, S, _ = x.shape
+    n = broadcast_true_len(true_len, B)
+    n_full = None if n is None else n + P
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     trunk = params["trunk"]
 
@@ -288,7 +343,7 @@ def prefill(cfg: ModelConfig, params: Params, tokens, max_len, *,
             return h, kv
         x, (ks, vs) = lax.scan(body, x, trunk["layers"])
         cache = {"layers": jax.vmap(
-            lambda k, v: _fill_global(cfg, B, max_len, k, v))(ks, vs)}
+            lambda k, v: _fill_global(cfg, B, max_len, k, v, n_full))(ks, vs)}
     else:
         def local_body(h, lp):
             h, kv = block_prefill(cfg, lp, h, positions, is_global=False,
@@ -303,16 +358,19 @@ def prefill(cfg: ModelConfig, params: Params, tokens, max_len, *,
 
         x, ((lks, lvs), (gks, gvs)) = lax.scan(super_body, x, trunk["super"])
         fill_l = jax.vmap(jax.vmap(
-            lambda k, v: _fill_local(cfg, B, max_len, k, v)))
-        fill_g = jax.vmap(lambda k, v: _fill_global(cfg, B, max_len, k, v))
+            lambda k, v: _fill_local(cfg, B, max_len, k, v, n_full)))
+        fill_g = jax.vmap(
+            lambda k, v: _fill_global(cfg, B, max_len, k, v, n_full))
         cache = {"super": {"local": fill_l(lks, lvs),
                            "global": fill_g(gks, gvs)}}
         if "rem_local" in trunk:
             x, (rks, rvs) = lax.scan(local_body, x, trunk["rem_local"])
             cache["rem_local"] = jax.vmap(
-                lambda k, v: _fill_local(cfg, B, max_len, k, v))(rks, rvs)
+                lambda k, v: _fill_local(cfg, B, max_len, k, v, n_full))(
+                    rks, rvs)
 
     _, norm = L.make_norm(cfg)
+    x = x[:, -1:] if n_full is None else gather_last(x, n_full)
     x = norm(params["final_norm"], x)
-    logits = L.unembed(cfg, params["embed"], params["unembed"], x[:, -1:])
+    logits = L.unembed(cfg, params["embed"], params["unembed"], x)
     return logits, cache

@@ -55,7 +55,9 @@ decode_step = T.decode_step
 
 
 def prefill(cfg: ModelConfig, params: Params, tokens, max_len, *,
-            image_embeds=None, use_flash=False):
+            image_embeds=None, use_flash=False, true_len=None):
+    """``true_len`` counts TEXT tokens only; ``T.prefill`` offsets by the
+    image-token prefix internally."""
     prefix = project(cfg, params, image_embeds)
     return T.prefill(cfg, params, tokens, max_len, prefix_embeds=prefix,
-                     use_flash=use_flash)
+                     use_flash=use_flash, true_len=true_len)

@@ -1,10 +1,50 @@
+"""EdgeAI-Hub serving runtime — continuous batching for one model.
+
+Admission semantics (the contract tests rely on)
+------------------------------------------------
+* **Exact padded prefill.** Prompts are right-padded to the smallest
+  ``ServeConfig.prefill_buckets`` entry that fits and prefilled batched
+  per bucket.  ``model.prefill(..., true_len=)`` makes the padding
+  semantically invisible: admission logits come from the true last
+  prompt token, pad positions never enter the KV/ring/SSM state, and
+  the slot position starts at ``prefix + true_len`` (prefix = VLM image
+  tokens) — NOT at the bucket size.  A non-bucket-aligned prompt decodes
+  token-for-token identically to an unpadded single-request run
+  (``tests/test_decode_consistency.py::test_padded_admission_matches_reference``).
+  One carve-out: MoE expert *capacity* is derived from the static
+  (padded, batched) token count, so under capacity pressure the set of
+  dropped tokens can differ from an unpadded run — pads never steal
+  capacity slots (they route to a sentinel expert), but the capacity
+  bound itself is shape-derived.  With ``capacity_factor`` high enough
+  that nothing drops, MoE is bit-exact like every other family.
+* **Chunked prefill.** Prompts longer than the largest bucket prefill
+  their first ``max(prefill_buckets)`` tokens, then catch up through the
+  shared batched decode wave (teacher-forced, one prompt token per step,
+  sampled outputs discarded) — long-prompt admission never stalls the
+  other tenants in the batch.
+* **QoE admission order.** The queue is ranked by
+  ``core.scheduler.admission_rank`` (fifo | priority | edf via
+  ``ServeConfig.policy``) — the same policy definition the hub's
+  discrete-event scheduler simulates.
+* **Per-request sampling.** ``Request.temperature`` / ``Request.top_k``
+  override engine defaults inside the jitted decode step.
+* **KV-preserving preemption.** ``preempt()`` extracts the slot's cache
+  and decode position onto ``Request.saved_state``; re-submission
+  reinserts them — no re-prefill, bit-identical continuation.
+
+JAX version compatibility: all version-sensitive jax.sharding / mesh
+symbols are imported via ``repro.compat`` (see its module docstring for
+the shim policy); ``scripts/check.sh`` runs an import sweep that
+catches version breaks at import time.
+"""
 from repro.serving.engine import (
     EdgeServingEngine,
     Request,
     ServeConfig,
     cache_batch_axes,
+    extract_slot,
     insert_slot,
 )
 
 __all__ = ["EdgeServingEngine", "Request", "ServeConfig",
-           "cache_batch_axes", "insert_slot"]
+           "cache_batch_axes", "extract_slot", "insert_slot"]

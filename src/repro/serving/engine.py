@@ -2,13 +2,38 @@
 
 The EdgeAI-Hub's inference runtime: fixed-slot batched decode with
 per-slot positions (the per-sequence ``pos`` vector threads through
-``attention_decode``), slot-level admission (prefill one request, insert
-its cache into the batch along the discovered batch axes) and eviction
-on EOS / length / preemption.  The hub's scheduler (core.scheduler)
-decides WHICH queued request is admitted; this module executes it.
+``attention_decode``), batched bucketed admission, and eviction on
+EOS / length / preemption.  The hub's scheduler policy
+(``core.scheduler.admission_rank``) decides WHO is admitted next; this
+module executes it.
+
+Admission semantics (exact, see ``model.prefill(true_len=...)``)
+----------------------------------------------------------------
+* Prompts are right-padded to the smallest prefill bucket that fits and
+  prefilled in one batch per bucket.  ``true_len`` makes the padding
+  semantically invisible: admission logits are taken at the true last
+  prompt token and pad positions never enter the decode state, so a
+  5-token prompt in a 16-token bucket decodes bit-identically to an
+  unpadded run.  Slot position starts at ``prefix + true_len`` (prefix =
+  VLM image tokens), NOT at the bucket size.  (MoE caveat: expert
+  capacity is computed from the static padded/batched shape, so token
+  DROPPING under capacity pressure can differ from an unpadded run —
+  see ``serving/__init__`` and ``moe._moe_tokens``.)
+* Prompts longer than the largest bucket are chunked: the first
+  ``max(prefill_buckets)`` tokens go through bucketed prefill, the rest
+  catch up through the shared batched decode wave (one prompt token per
+  step, teacher-forced, sampled outputs discarded until the prompt is
+  consumed).  Catch-up requests ride the same decode batch as running
+  requests, so long-prompt admission never stalls other tenants.
+* Preemption (``preempt``) extracts the slot's KV/SSM cache and decode
+  position onto the request; re-admission reinserts them directly —
+  no re-prefill, no lost context.
+* Sampling is per-request: ``Request.temperature`` / ``Request.top_k``
+  override the engine-wide defaults inside the jitted decode step.
 """
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Any, Callable, Optional
@@ -19,6 +44,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
+
+# NOTE: repro.core.scheduler is imported lazily in _rank —
+# core/__init__ pulls in hub.py, which imports this module back.
 
 Params = Any
 _SENTINEL_B = 7777
@@ -43,16 +71,29 @@ def insert_slot(cache, one, slot: int, axes):
         cache, one, axes)
 
 
+def extract_slot(cache, slot: int, axes):
+    """Slice a batch=1 cache out of batched ``cache`` at ``slot``
+    (inverse of ``insert_slot`` — KV-preserving preemption)."""
+    return jax.tree.map(
+        lambda full, ax: jax.lax.dynamic_slice_in_dim(full, slot, 1, axis=ax),
+        cache, axes)
+
+
 @dataclass
 class Request:
     uid: int
     prompt: np.ndarray                  # (prompt_len,) int32
     max_new_tokens: int = 32
     priority: int = 0                   # higher = more urgent (QoE)
+    deadline: Optional[float] = None    # for the "edf" admission policy
+    temperature: Optional[float] = None  # None -> ServeConfig.temperature
+    top_k: Optional[int] = None          # None -> ServeConfig.top_k
     extras: dict = field(default_factory=dict)  # image/audio embeds
     # filled by the engine:
     generated: list = field(default_factory=list)
     done: bool = False
+    arrival: Optional[float] = None     # submission stamp (engine-set)
+    saved_state: Optional[dict] = None  # KV snapshot from preemption
 
 
 @dataclass(frozen=True)
@@ -60,8 +101,10 @@ class ServeConfig:
     max_slots: int = 4
     max_len: int = 256
     temperature: float = 0.0            # 0 => greedy
+    top_k: int = 0                      # 0 disables top-k filtering
     eos_id: int = -1                    # -1 disables EOS stopping
     prefill_buckets: tuple = (16, 32, 64, 128)
+    policy: str = "priority"            # fifo | priority | edf (QoE)
     seed: int = 0
 
 
@@ -75,20 +118,48 @@ class EdgeServingEngine:
         B, T = scfg.max_slots, scfg.max_len
         self.cache = M.init_cache(cfg, B, T)
         self.axes = cache_batch_axes(cfg, T)
-        self.tokens = jnp.zeros((B, 1), jnp.int32)
-        self.pos = jnp.zeros((B,), jnp.int32)
+        self.tokens = np.zeros((B, 1), np.int32)
+        self.pos = np.zeros((B,), np.int32)
+        self.temps = np.zeros((B,), np.float32)
+        self.topks = np.zeros((B,), np.int32)
         self.active = np.zeros((B,), bool)
         self.slot_req: list[Optional[Request]] = [None] * B
+        self.pending: list[Optional[np.ndarray]] = [None] * B
         self.queue: list[Request] = []
         self._key = jax.random.PRNGKey(scfg.seed)
-        self._decode = jax.jit(self._decode_fn)
-        self._prefills: dict[int, Callable] = {}
+        self._rng = np.random.default_rng(scfg.seed)   # admission sampling
+        self._arrival = itertools.count()
+        # specialized on the static any_topk flag: the all-greedy /
+        # temperature-only path must not pay an O(B·V log V) vocab sort
+        # per decoded token (at most two variants ever compile)
+        self._decode = jax.jit(self._decode_fn,
+                               static_argnames=("any_topk",))
+        self._prefills: dict[tuple, Callable] = {}
         self.steps = 0
         self.completed: list[Request] = []
 
+    @property
+    def _prefix(self) -> int:
+        return self.cfg.num_image_tokens if self.cfg.family == "vlm" else 0
+
+    # ------------------------------------------------------------------
+    # admission
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        limit = self.scfg.max_len - 1 - self._prefix
+        if req.saved_state is None and len(req.prompt) > limit:
+            raise ValueError(
+                f"prompt length {len(req.prompt)} exceeds max_len budget "
+                f"{limit} (max_len={self.scfg.max_len})")
+        if req.arrival is None:
+            req.arrival = float(next(self._arrival))
         self.queue.append(req)
+
+    def _rank(self, req: Request):
+        from repro.core.scheduler import admission_rank
+        return admission_rank(self.scfg.policy, priority=req.priority,
+                              arrival=req.arrival, deadline=req.deadline,
+                              uid=req.uid)
 
     def _bucket(self, n: int) -> int:
         for b in self.scfg.prefill_buckets:
@@ -96,53 +167,143 @@ class EdgeServingEngine:
                 return b
         return self.scfg.prefill_buckets[-1]
 
-    def _prefill_fn(self, bucket: int):
-        if bucket not in self._prefills:
+    def _prefill_fn(self, bucket: int, m: int, extras_sig: tuple):
+        """Jitted batched prefill, cached per (bucket, batch, extras)."""
+        key = (bucket, m, extras_sig)
+        if key not in self._prefills:
             cfg, scfg = self.cfg, self.scfg
 
             def fn(params, batch, true_len):
-                logits, cache = M.prefill(cfg, params, batch, scfg.max_len)
-                return logits, cache
+                return M.prefill(cfg, params, batch, scfg.max_len,
+                                 true_len=true_len)
 
-            self._prefills[bucket] = jax.jit(fn)
-        return self._prefills[bucket]
+            self._prefills[key] = jax.jit(fn)
+        return self._prefills[key]
 
-    def _admit(self, req: Request, slot: int) -> None:
-        n = len(req.prompt)
-        bucket = self._bucket(n)
-        # left-pad-free: pad right with repeats of last token, position
-        # masking below keeps semantics exact for causal decode
-        prompt = np.full((bucket,), req.prompt[-1], np.int32)
-        prompt[:n] = req.prompt
-        batch = {"tokens": jnp.asarray(prompt)[None]}
-        for k, v in req.extras.items():
-            batch[k] = jnp.asarray(v)[None]
-        logits, cache1 = self._prefill_fn(bucket)(
-            self.params, batch, n)
-        # pick logits of the true last prompt token
-        # (prefill returns last-position logits; for padded prompts we
-        #  re-run decode masking — bucket == n is exact; else approximate
-        #  admission at position n)
-        self.cache = insert_slot(self.cache, cache1, slot, self.axes)
-        prefix = (self.cfg.num_image_tokens
-                  if self.cfg.family == "vlm" else 0)
-        self.pos = self.pos.at[slot].set(prefix + bucket)
-        next_tok = int(jnp.argmax(logits[0, -1]))
-        self.tokens = self.tokens.at[slot, 0].set(next_tok)
-        req.generated.append(next_tok)
+    def _sample_first(self, req: Request, logits: np.ndarray) -> int:
+        """First generated token, from the admission logits (host-side,
+        engine-rng — deterministic for a fixed ServeConfig.seed)."""
+        temp = (self.scfg.temperature if req.temperature is None
+                else req.temperature)
+        top_k = self.scfg.top_k if req.top_k is None else req.top_k
+        if temp <= 0:
+            return int(np.argmax(logits))
+        lg = logits.astype(np.float64)
+        if top_k and top_k > 0:
+            thresh = np.sort(lg)[::-1][min(top_k, lg.size) - 1]
+            lg = np.where(lg < thresh, -np.inf, lg)
+        lg = lg / temp
+        lg -= lg.max()
+        p = np.exp(lg)
+        p /= p.sum()
+        return int(self._rng.choice(lg.size, p=p))
+
+    def _place(self, req: Request, slot: int) -> None:
+        """Common slot bookkeeping after cache insertion."""
+        self.temps[slot] = (self.scfg.temperature if req.temperature is None
+                            else req.temperature)
+        self.topks[slot] = self.scfg.top_k if req.top_k is None else req.top_k
         self.active[slot] = True
         self.slot_req[slot] = req
 
+    def _admit_resumed(self, req: Request, slot: int) -> None:
+        st = req.saved_state
+        req.saved_state = None
+        self.cache = insert_slot(self.cache, st["cache"], slot, self.axes)
+        self.pos[slot] = st["pos"]
+        self.tokens[slot, 0] = st["last_tok"]
+        self.pending[slot] = st["pending"]
+        self._place(req, slot)
+
+    def _admit_batch(self) -> None:
+        """Admit queued requests into every free slot, batching prefill
+        per bucket (one compile + one device call per bucket group)."""
+        if not self.queue:
+            return
+        free = [s for s in range(self.scfg.max_slots) if not self.active[s]]
+        if not free:
+            return
+        self.queue.sort(key=self._rank)
+        taken, self.queue = self.queue[:len(free)], self.queue[len(free):]
+
+        fresh: dict[tuple, list] = {}   # group key -> [(req, slot)]
+        for req, slot in zip(taken, free):
+            if req.saved_state is not None:
+                self._admit_resumed(req, slot)
+                continue
+            n1 = min(len(req.prompt), self.scfg.prefill_buckets[-1])
+            bucket = self._bucket(n1)
+            sig = tuple(sorted(
+                (k, np.asarray(v).shape) for k, v in req.extras.items()))
+            fresh.setdefault((bucket, sig), []).append((req, slot))
+
+        for (bucket, sig), group in fresh.items():
+            self._admit_group(bucket, sig, group)
+
+    def _admit_group(self, bucket: int, extras_sig: tuple, group) -> None:
+        m = len(group)
+        prompts = np.zeros((m, bucket), np.int32)
+        true_len = np.zeros((m,), np.int32)
+        for i, (req, _) in enumerate(group):
+            n1 = min(len(req.prompt), bucket)
+            # pad value is irrelevant (true_len masks it) — repeat last tok
+            prompts[i] = req.prompt[n1 - 1]
+            prompts[i, :n1] = req.prompt[:n1]
+            true_len[i] = n1
+        batch = {"tokens": jnp.asarray(prompts)}
+        for k, _ in extras_sig:
+            batch[k] = jnp.asarray(
+                np.stack([np.asarray(r.extras[k]) for r, _ in group]))
+        logits, cache_m = self._prefill_fn(bucket, m, extras_sig)(
+            self.params, batch, jnp.asarray(true_len))
+        logits_host = np.asarray(logits[:, -1], np.float32)   # (m, V)
+        for i, (req, slot) in enumerate(group):
+            row = jax.tree.map(
+                lambda leaf, ax: jax.lax.dynamic_slice_in_dim(
+                    leaf, i, 1, axis=ax), cache_m, self.axes)
+            self.cache = insert_slot(self.cache, row, slot, self.axes)
+            n1 = int(true_len[i])
+            self.pos[slot] = self._prefix + n1
+            remainder = np.asarray(req.prompt[n1:], np.int32)
+            if remainder.size:
+                # chunked prefill: catch up through the decode wave
+                self.pending[slot] = remainder[1:]
+                self.tokens[slot, 0] = int(remainder[0])
+            else:
+                self.pending[slot] = None
+                tok = self._sample_first(req, logits_host[i])
+                req.generated.append(tok)
+                hit_eos = (self.scfg.eos_id >= 0
+                           and tok == self.scfg.eos_id)
+                if len(req.generated) >= req.max_new_tokens or hit_eos:
+                    # the admission token already completed the request
+                    # — never occupy a slot or spend a decode step
+                    req.done = True
+                    self.completed.append(req)
+                    continue
+                self.tokens[slot, 0] = tok
+            self._place(req, slot)
+
     # ------------------------------------------------------------------
-    def _decode_fn(self, params, cache, tokens, pos, key):
+    # decode
+    # ------------------------------------------------------------------
+    def _decode_fn(self, params, cache, tokens, pos, temps, topks, key,
+                   any_topk: bool = False):
         logits, new_cache = M.decode_step(self.cfg, params, cache,
                                           tokens, pos)
-        logits = logits[:, -1, :]
-        if self.scfg.temperature > 0:
-            nxt = jax.random.categorical(
-                key, logits / self.scfg.temperature, axis=-1)
-        else:
-            nxt = jnp.argmax(logits, axis=-1)
+        logits = logits[:, -1, :].astype(jnp.float32)          # (B, V)
+        greedy = jnp.argmax(logits, axis=-1)
+        masked = logits
+        if any_topk:
+            V = logits.shape[-1]
+            desc = jnp.sort(logits, axis=-1)[:, ::-1]
+            kth = jnp.take_along_axis(
+                desc, jnp.clip(topks - 1, 0, V - 1)[:, None], axis=1)
+            masked = jnp.where((topks > 0)[:, None] & (logits < kth),
+                               -jnp.inf, logits)
+        scaled = masked / jnp.maximum(temps, 1e-6)[:, None]
+        sampled = jax.random.categorical(key, scaled, axis=-1)
+        nxt = jnp.where(temps > 0, sampled, greedy)
         return nxt.astype(jnp.int32), new_cache
 
     def step(self) -> int:
@@ -150,52 +311,68 @@ class EdgeServingEngine:
 
         Returns the number of active slots that were stepped.
         """
-        # admission (highest priority first — QoE ordering)
-        self.queue.sort(key=lambda r: -r.priority)
-        for slot in range(self.scfg.max_slots):
-            if not self.queue:
-                break
-            if not self.active[slot]:
-                self._admit(self.queue.pop(0), slot)
-
+        self._admit_batch()
         n_active = int(self.active.sum())
         if n_active == 0:
             return 0
 
         self._key, sub = jax.random.split(self._key)
-        nxt, self.cache = self._decode(self.params, self.cache,
-                                       self.tokens, self.pos, sub)
-        self.pos = self.pos + jnp.asarray(self.active, jnp.int32)
-        self.tokens = jnp.where(jnp.asarray(self.active)[:, None],
-                                nxt[:, None], self.tokens)
+        any_topk = bool((self.topks[self.active] > 0).any())
+        nxt, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.tokens),
+            jnp.asarray(self.pos), jnp.asarray(self.temps),
+            jnp.asarray(self.topks), sub, any_topk=any_topk)
         nxt_host = np.asarray(nxt)
         for slot in range(self.scfg.max_slots):
             if not self.active[slot]:
                 continue
+            self.pos[slot] += 1
             req = self.slot_req[slot]
+            pend = self.pending[slot]
+            out_of_room = int(self.pos[slot]) >= self.scfg.max_len - 1
+            if pend is not None and pend.size:
+                # still consuming the prompt: teacher-force the next
+                # prompt token, discard the sampled one
+                self.tokens[slot, 0] = int(pend[0])
+                self.pending[slot] = pend[1:]
+                if out_of_room:
+                    self._finish(slot, req)
+                continue
+            self.pending[slot] = None
             tok = int(nxt_host[slot])
+            self.tokens[slot, 0] = tok
             req.generated.append(tok)
             hit_eos = (self.scfg.eos_id >= 0 and tok == self.scfg.eos_id)
-            out_of_room = int(self.pos[slot]) >= self.scfg.max_len - 1
             if (len(req.generated) >= req.max_new_tokens or hit_eos
                     or out_of_room):
-                req.done = True
-                self.completed.append(req)
-                self.active[slot] = False
-                self.slot_req[slot] = None
+                self._finish(slot, req)
         self.steps += 1
         return n_active
 
+    def _finish(self, slot: int, req: Request) -> None:
+        req.done = True
+        self.completed.append(req)
+        self.active[slot] = False
+        self.slot_req[slot] = None
+        self.pending[slot] = None
+
+    # ------------------------------------------------------------------
     def preempt(self, slot: int) -> Optional[Request]:
-        """Evict a running request (scheduler-driven preemption); it can
-        be re-submitted later (prompt + generated so far)."""
+        """Evict a running request (scheduler-driven preemption), taking
+        its KV/SSM cache with it — re-submission resumes decode exactly
+        where it stopped, with NO re-prefill."""
         req = self.slot_req[slot]
         if req is None:
             return None
+        req.saved_state = {
+            "cache": extract_slot(self.cache, slot, self.axes),
+            "pos": int(self.pos[slot]),
+            "last_tok": int(self.tokens[slot, 0]),
+            "pending": self.pending[slot],
+        }
         self.active[slot] = False
         self.slot_req[slot] = None
-        req.prompt = np.concatenate(
-            [req.prompt, np.asarray(req.generated, np.int32)])
+        self.pending[slot] = None
         return req
 
     def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:

@@ -1,0 +1,107 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+Test modules import ``given``/``settings``/``st`` from here instead of
+from ``hypothesis`` directly.  With hypothesis available the real thing
+is re-exported unchanged; without it, a tiny fixed-seed sampler with the
+same decorator surface runs each property against ``max_examples``
+pseudo-random examples.  The fallback seed is derived from the test
+function's name, so failures reproduce exactly across runs and machines
+(no shrinking — offline determinism is the point, not minimality).
+
+Supported strategy surface (everything this suite uses):
+``st.integers``, ``st.floats``, ``st.booleans``, ``st.sampled_from``,
+``st.lists``, ``st.tuples``.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            lo, hi = float(min_value), float(max_value)
+
+            def draw(rng):
+                # hit the endpoints occasionally — they are the usual
+                # property-breaking values
+                r = rng.random()
+                if r < 0.05:
+                    return lo
+                if r < 0.10:
+                    return hi
+                return float(lo + (hi - lo) * rng.random())
+            return _Strategy(draw)
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(len(elements)))])
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elem.draw(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*elems):
+            return _Strategy(lambda rng: tuple(e.draw(rng) for e in elems))
+
+    st = _St()
+
+    def given(*strategies, **kw_strategies):
+        def decorate(fn):
+            # NOT functools.wraps: pytest would follow __wrapped__ to the
+            # original signature and demand fixtures named after the
+            # strategy parameters.  The wrapper must look zero-arg.
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+                seed = zlib.crc32(fn.__qualname__.encode("utf-8"))
+                rng = np.random.default_rng(seed)
+                for _ in range(n):
+                    ex_args = tuple(s.draw(rng) for s in strategies)
+                    ex_kwargs = {k: s.draw(rng)
+                                 for k, s in kw_strategies.items()}
+                    fn(*args, *ex_args, **{**kwargs, **ex_kwargs})
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper.hypothesis_fallback = True
+            return wrapper
+        return decorate
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+        """Accepts (and ignores) deadline/suppress_* kwargs."""
+        def decorate(fn):
+            fn._max_examples = max_examples
+            return fn
+        return decorate

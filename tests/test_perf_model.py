@@ -1,6 +1,6 @@
 """Performance controller: roofline estimators + historical EWMA."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.core.perf_model import (

@@ -111,6 +111,92 @@ def test_insert_slot_axes_discovery(setup):
     assert float(k[0, 0, 0].sum()) == 0.0
 
 
+def test_preempt_preserves_kv(setup):
+    """Preemption carries the slot's cache onto the request: resumed
+    decode is token-for-token identical to an uninterrupted run, the
+    prompt is untouched, and NO new prefill is compiled on resume."""
+    cfg, params = setup
+    scfg = ServeConfig(max_slots=1, max_len=64, prefill_buckets=(8, 16))
+
+    eng0 = EdgeServingEngine(cfg, params, scfg)
+    eng0.submit(_req(0, max_new_tokens=8))
+    baseline = [tuple(r.generated) for r in eng0.run_until_drained()][0]
+
+    eng = EdgeServingEngine(cfg, params, scfg)
+    eng.submit(_req(0, max_new_tokens=8))
+    eng.step()
+    eng.step()
+    req = eng.preempt(0)
+    assert req is not None and req.saved_state is not None
+    assert len(req.prompt) == 6            # prompt NOT rewritten
+    n_prefills = len(eng._prefills)
+    eng.submit(req)                        # resumes from saved KV
+    done = eng.run_until_drained()
+    assert len(eng._prefills) == n_prefills  # no re-prefill happened
+    assert tuple(done[-1].generated) == baseline
+
+
+def test_per_request_sampling_params(setup):
+    """Request.temperature/top_k override the engine default: top_k=1
+    forces greedy even at high temperature, so both requests must agree
+    with a pure-greedy engine."""
+    cfg, params = setup
+    scfg = ServeConfig(max_slots=2, max_len=64, prefill_buckets=(8,),
+                       temperature=5.0)   # engine default: very hot
+    eng = EdgeServingEngine(cfg, params, scfg)
+    eng.submit(_req(0, max_new_tokens=6, temperature=0.0))
+    eng.submit(_req(1, max_new_tokens=6, temperature=5.0, top_k=1))
+    by_uid = {r.uid: r.generated for r in eng.run_until_drained()}
+
+    ref = EdgeServingEngine(cfg, params,
+                            ServeConfig(max_slots=2, max_len=64,
+                                        prefill_buckets=(8,)))
+    ref.submit(_req(0, max_new_tokens=6))
+    ref.submit(_req(1, max_new_tokens=6))
+    ref_by_uid = {r.uid: r.generated for r in ref.run_until_drained()}
+    assert by_uid[0] == ref_by_uid[0]
+    assert by_uid[1] == ref_by_uid[1]
+
+
+def test_batched_admission_single_prefill(setup):
+    """Same-bucket requests admitted in one step share ONE batched
+    prefill call (and one compile)."""
+    cfg, params = setup
+    eng = EdgeServingEngine(cfg, params,
+                            ServeConfig(max_slots=4, max_len=64,
+                                        prefill_buckets=(8,)))
+    for uid in range(4):
+        eng.submit(_req(uid, max_new_tokens=3))
+    eng.step()
+    assert int(eng.active.sum()) == 4
+    assert len(eng._prefills) == 1         # one (bucket=8, m=4) compile
+    eng.run_until_drained()
+    assert len(eng.completed) == 4
+
+
+def test_edf_admission_policy(setup):
+    """ServeConfig.policy='edf' orders admission by deadline via the
+    shared core.scheduler.admission_rank."""
+    cfg, params = setup
+    eng = EdgeServingEngine(cfg, params,
+                            ServeConfig(max_slots=1, max_len=64,
+                                        prefill_buckets=(8,), policy="edf"))
+    eng.submit(_req(0, max_new_tokens=2, deadline=9.0))
+    eng.submit(_req(1, max_new_tokens=2, deadline=1.0))
+    eng.submit(_req(2, max_new_tokens=2, deadline=5.0))
+    done = eng.run_until_drained()
+    assert [r.uid for r in done] == [1, 2, 0]  # earliest deadline first
+
+
+def test_rejects_oversized_prompt(setup):
+    cfg, params = setup
+    eng = EdgeServingEngine(cfg, params,
+                            ServeConfig(max_slots=1, max_len=32,
+                                        prefill_buckets=(8,)))
+    with pytest.raises(ValueError):
+        eng.submit(_req(0, n=40))
+
+
 @pytest.mark.parametrize("arch", ["mamba2-370m", "granite-moe-1b-a400m",
                                   "whisper-base"])
 def test_engine_other_families(arch):
