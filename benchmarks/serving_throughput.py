@@ -5,9 +5,19 @@ Workload: short chat turns, medium instructions and long documents in
 one queue — prompt lengths deliberately NOT bucket-aligned, so this
 exercises padded exact admission AND chunked (catch-up) prefill.
 Derived values: aggregate generated tokens/sec, p50/p99 TTFT (submit ->
-first generated token, queueing included).
+first generated token, queueing included), plus the paged-KV admission
+numbers: peak concurrent requests and peak pool pages in flight, and a
+same-KV-byte-budget demo showing the paged engine admitting more
+concurrent tenants than ``max_slots`` dense strips would allow.
 
   PYTHONPATH=src python -m benchmarks.serving_throughput [--requests N]
+      [--write-baseline PATH] [--check PATH]
+
+``--check`` compares against a committed baseline JSON: deterministic
+fields (requests/tokens/decode_steps/concurrency) must match exactly —
+any drift means the serving path changed behaviour — and tok_per_s must
+stay above ``MIN_THROUGHPUT_RATIO`` x baseline (loose, to absorb shared
+-CI timing noise while still catching order-of-magnitude regressions).
 """
 from __future__ import annotations
 
@@ -26,6 +36,14 @@ ARCH = "gemma3-1b"
 _BANDS = ((4, 12), (20, 40), (70, 100))
 _SCFG = ServeConfig(max_slots=4, max_len=192, prefill_buckets=(16, 32, 64),
                     policy="priority")
+# perf-regression gate: fail --check below this fraction of baseline
+# tok_per_s.  The committed baseline is machine-specific wall-clock, so
+# the floor is overridable for slower hardware:
+#   SERVING_BASELINE_MIN_RATIO=0.1 bash scripts/check.sh   (0 disables)
+MIN_THROUGHPUT_RATIO = 0.25
+# deterministic fields a baseline comparison must reproduce exactly
+EXACT_FIELDS = ("requests", "decode_steps", "tokens", "peak_active",
+                "demo_dense_slots", "demo_paged_concurrent")
 
 
 def _workload(n_requests: int, vocab: int, seed: int = 0):
@@ -40,6 +58,32 @@ def _workload(n_requests: int, vocab: int, seed: int = 0):
             max_new_tokens=16,
             priority=uid % 3))
     return reqs
+
+
+def _admission_demo(cfg, params, seed: int = 0) -> dict:
+    """Same-KV-byte-budget concurrency: a dense engine fits exactly
+    ``dense_slots`` strips in the budget; the paged engine spends the
+    SAME pages on actual tokens in flight and runs more tenants at
+    once on mixed-length traffic."""
+    dense_slots, max_len, bs = 2, 128, 16
+    budget_blocks = dense_slots * (max_len // bs)
+    eng = EdgeServingEngine(cfg, params, ServeConfig(
+        max_slots=8, max_len=max_len, prefill_buckets=(16, 32),
+        kv_block_size=bs, kv_pool_blocks=budget_blocks))
+    rng = np.random.default_rng(seed)
+    for uid in range(8):
+        eng.submit(Request(uid=uid,
+                           prompt=rng.integers(0, cfg.vocab_size,
+                                               int(rng.integers(4, 14)),
+                                               dtype=np.int32),
+                           max_new_tokens=8))
+    eng.run_until_drained()
+    return {
+        "demo_dense_slots": dense_slots,
+        "demo_budget_blocks": budget_blocks,
+        "demo_paged_concurrent": int(eng.peak_active),
+        "demo_peak_pool_used": int(eng.peak_pool_used),
+    }
 
 
 def run(n_requests: int = 12, seed: int = 0) -> dict:
@@ -57,6 +101,12 @@ def run(n_requests: int = 12, seed: int = 0) -> dict:
     eng.run_until_drained()
     eng.completed.clear()
     eng.steps = 0
+    eng.peak_active = 0
+    eng.peak_pool_used = 0
+    # warmup advanced the sampling state (engine PRNG key + admission
+    # rng); re-seed so a temperature>0 measured run samples exactly the
+    # tokens a cold engine would — the benchmark is replay-deterministic
+    eng.reset_rng()
 
     reqs = _workload(n_requests, cfg.vocab_size, seed=seed)
     t_submit = {}
@@ -66,7 +116,7 @@ def run(n_requests: int = 12, seed: int = 0) -> dict:
         eng.submit(r)
         t_submit[r.uid] = time.perf_counter()
     while eng.queue or eng.active.any():
-        eng.step()
+        eng.drain_step()   # step() + pool-wedge recovery (never spins)
         now = time.perf_counter()
         for r in reqs:
             if r.uid not in t_first and r.generated:
@@ -76,7 +126,7 @@ def run(n_requests: int = 12, seed: int = 0) -> dict:
     toks = sum(len(r.generated) for r in eng.completed)
     ttft_ms = np.asarray(
         [(t_first[u] - t_submit[u]) * 1e3 for u in t_first])
-    return {
+    out = {
         "requests": len(eng.completed),
         "decode_steps": eng.steps,
         "tokens": toks,
@@ -84,7 +134,43 @@ def run(n_requests: int = 12, seed: int = 0) -> dict:
         "tok_per_s": toks / elapsed,
         "ttft_p50_ms": float(np.percentile(ttft_ms, 50)),
         "ttft_p99_ms": float(np.percentile(ttft_ms, 99)),
+        "peak_active": int(eng.peak_active),
+        "peak_pool_used": int(eng.peak_pool_used),
+        "pool_blocks": eng.pool.num_blocks if eng.paged else 0,
     }
+    out.update(_admission_demo(cfg, params, seed))
+    return out
+
+
+def compare_baseline(result: dict, baseline: dict,
+                     min_ratio: float = None) -> list[str]:
+    """Regression findings (empty list = pass).  The deterministic
+    EXACT_FIELDS must match bit-for-bit (serving behaviour changed if
+    not); the wall-clock floor only has to clear ``min_ratio`` x the
+    baseline — set 0 to skip it on hardware unlike the baseline's."""
+    import os
+    if min_ratio is None:
+        min_ratio = float(os.environ.get("SERVING_BASELINE_MIN_RATIO",
+                                         MIN_THROUGHPUT_RATIO))
+    problems = []
+    # token streams are bit-stable per backend but not ACROSS backends
+    # (bf16 matmul order can flip a greedy argmax tie): on hardware
+    # unlike the baseline author's, skip the exact fields or regenerate
+    # the baseline with --write-baseline
+    skip_exact = os.environ.get("SERVING_BASELINE_SKIP_EXACT", "") == "1"
+    for k in () if skip_exact else EXACT_FIELDS:
+        if result.get(k) != baseline.get(k):
+            problems.append(
+                f"{k}: got {result.get(k)!r}, baseline {baseline.get(k)!r} "
+                "(behaviour drift; if only the backend changed, set "
+                "SERVING_BASELINE_SKIP_EXACT=1 or regenerate the baseline)")
+    floor = baseline["tok_per_s"] * min_ratio
+    if result["tok_per_s"] < floor:
+        problems.append(
+            f"tok_per_s {result['tok_per_s']:.1f} < {floor:.1f} "
+            f"({min_ratio}x baseline {baseline['tok_per_s']:.1f}; "
+            f"override with SERVING_BASELINE_MIN_RATIO)")
+    return problems
 
 
 def bench():
@@ -94,21 +180,41 @@ def bench():
         ("serving.tok_per_s", us, r["tok_per_s"]),
         ("serving.ttft_p50_ms", us, r["ttft_p50_ms"]),
         ("serving.ttft_p99_ms", us, r["ttft_p99_ms"]),
+        ("serving.peak_active", us, r["peak_active"]),
     ]
 
 
 def main() -> None:
     import argparse
     import json
+    import sys
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--write-baseline", metavar="PATH",
+                    help="write result JSON to PATH (perf baseline)")
+    ap.add_argument("--check", metavar="PATH",
+                    help="compare against a baseline JSON; non-zero exit "
+                         "on regression")
     args = ap.parse_args()
     out = run(args.requests, args.seed)
-    out = {k: (round(v, 3) if isinstance(v, float) else v)
-           for k, v in out.items()}
-    print(json.dumps(out))
+    rounded = {k: (round(v, 3) if isinstance(v, float) else v)
+               for k, v in out.items()}
+    print(json.dumps(rounded))
+    if args.write_baseline:
+        with open(args.write_baseline, "w") as f:
+            json.dump(rounded, f, indent=1, sort_keys=True)
+            f.write("\n")
+    if args.check:
+        with open(args.check) as f:
+            baseline = json.load(f)
+        problems = compare_baseline(out, baseline)
+        if problems:
+            for p in problems:
+                print(f"REGRESSION: {p}", file=sys.stderr)
+            sys.exit(1)
+        print(f"baseline check ok ({args.check})", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -28,5 +28,9 @@ for mod in MODULES:
     print(f"  ok {mod}")
 PY
 
+echo "== serving perf baseline ==" >&2
+python -m benchmarks.serving_throughput --requests 12 \
+    --check benchmarks/serving_baseline.json >&2
+
 echo "== tier-1 tests ==" >&2
 python -m pytest -x -q

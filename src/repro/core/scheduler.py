@@ -47,6 +47,20 @@ class AITask:
                 and self.finish_time > self.deadline + 1e-9)
 
 
+def quantile_higher(values, q: float) -> float:
+    """Ceil-based sample quantile: ``sorted(values)[ceil(q*(n-1))]`` —
+    identical to ``np.percentile(values, 100*q, method="higher")``.
+
+    The previous p99 used ``int(0.99*n) - 1``, which is biased LOW for
+    small samples (n=2 reported the *minimum* latency as "p99"); a tail
+    quantile must round up, never down.
+    """
+    if not values:
+        raise ValueError("quantile of empty sample")
+    s = sorted(values)
+    return s[min(len(s) - 1, math.ceil(q * (len(s) - 1)))]
+
+
 def admission_rank(policy: str, *, priority: int = 0, arrival: float = 0.0,
                    deadline: Optional[float] = None, uid: int = 0):
     """QoE ordering key (lower sorts first) — the ONE policy definition
@@ -177,7 +191,7 @@ class EdgeScheduler:
         return {
             "completed": len(done),
             "mean_wait_s": sum(waits) / len(done),
-            "p99_latency_s": sorted(lats)[max(0, int(0.99 * len(lats)) - 1)],
+            "p99_latency_s": quantile_higher(lats, 0.99),
             "mean_latency_s": sum(lats) / len(done),
             "deadline_misses": len(misses),
             "miss_rate": len(misses) / len(done),

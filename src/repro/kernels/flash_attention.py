@@ -73,6 +73,108 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                             / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
 
 
+def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale: float, softcap: float,
+                  bs: int, n_blk: int):
+    """Paged-attention decode read: one query token per sequence against
+    KV pages selected by the scalar-prefetched block table.
+
+    Grid (B, H, n_blk); the innermost dimension walks the LOGICAL blocks
+    of one sequence while the BlockSpec index_map streams in the
+    PHYSICAL page ``block_tables[b, j]`` — the gather never
+    materialises; unallocated (-1) entries are clipped to page 0 by the
+    index_map and masked here.
+    """
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(bt_ref[b, j] >= 0)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # (1, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)        # (bs, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)       # (1, bs)
+        t = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        mask = t < len_ref[b]
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...][:, 0]                     # (1,)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = (l_scr[...][:, 0] * alpha + jnp.sum(p, axis=1))[:, None]
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new[:, None]
+
+    @pl.when(j == n_blk - 1)
+    def _finalize():
+        l = l_scr[...][:, 0]
+        o_ref[0, ...] = (acc_scr[...]
+                         / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "softcap", "interpret"))
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                    scale: float, softcap: float = 0.0,
+                    interpret: bool = False):
+    """Paged single-token decode attention (GQA).
+
+    q: (B, H, hd); k_pages/v_pages: (num_blocks, bs, K, hd) shared page
+    pool; block_tables: (B, n_blk) int32 physical page per logical block
+    (-1 = unallocated); lengths: (B,) valid context per row.  The block
+    table and lengths ride the scalar-prefetch channel so the page
+    lookup happens in the BlockSpec index_map (the vLLM-on-TPU layout).
+    Returns (B, H, hd).
+    """
+    B, H, hd = q.shape
+    nB, bs, Kh, _ = k_pages.shape
+    n_blk = block_tables.shape[1]
+    G = H // Kh
+    qt = q.reshape(B, H, 1, hd)
+    bt = block_tables.astype(jnp.int32)
+    ln = lengths.astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, H, n_blk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, hd),
+                         lambda b, h, j, bt_r, ln_r: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, h, j, bt_r, ln_r, G=G:
+                         (jnp.maximum(bt_r[b, j], 0), 0, h // G, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, h, j, bt_r, ln_r, G=G:
+                         (jnp.maximum(bt_r[b, j], 0), 0, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd),
+                               lambda b, h, j, bt_r, ln_r: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, scale=scale, softcap=softcap,
+                          bs=bs, n_blk=n_blk),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(bt, ln, qt, k_pages, v_pages)
+    return out
+
+
 def _pick_block(n: int, pref=(512, 256, 128, 64, 32, 16, 8)) -> int:
     for c in pref:
         if n % c == 0 and c <= n:

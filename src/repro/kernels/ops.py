@@ -31,6 +31,13 @@ def flash_attention(q, k, v, *, scale, window: int = 0, softcap: float = 0.0):
                                softcap=softcap, interpret=_interpret())
 
 
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *, scale,
+                    softcap: float = 0.0):
+    return _fa.paged_attention(q, k_pages, v_pages, block_tables, lengths,
+                               scale=scale, softcap=softcap,
+                               interpret=_interpret())
+
+
 def ssd_scan(x, dt, A, B, C, *, chunk: int = 128, h0=None):
     return _ssd.ssd_scan(x, dt, A, B, C, chunk=chunk, h0=h0,
                          interpret=_interpret())

@@ -41,6 +41,35 @@ def flash_attention_ref(q, k, v, *, scale, window: int = 0,
     return out.reshape(B, S, H, hd).astype(q.dtype)
 
 
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
+                        scale, softcap: float = 0.0):
+    """Gather-based paged-attention decode read (the obvious way).
+
+    q (B,H,hd) one query token per sequence; k_pages/v_pages
+    (num_blocks, bs, K, hd) shared page pool; block_tables (B, n_blk)
+    int32 physical ids (-1 = unallocated); lengths (B,) valid context
+    token counts — row b attends logical positions [0, lengths[b]).
+    Returns (B, H, hd).
+    """
+    Bq, H, hd = q.shape
+    nB, bs, Kh, _ = k_pages.shape
+    G = H // Kh
+    bt = jnp.clip(block_tables, 0, nB - 1)
+    kg = k_pages[bt].reshape(Bq, -1, Kh, hd).astype(jnp.float32)
+    vg = v_pages[bt].reshape(Bq, -1, Kh, hd).astype(jnp.float32)
+    qg = q.reshape(Bq, Kh, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, kg) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    t = jnp.arange(kg.shape[1])
+    valid = (t[None, :] < lengths[:, None]) \
+        & jnp.repeat(block_tables >= 0, bs, axis=1)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, vg)
+    return out.reshape(Bq, H, hd).astype(q.dtype)
+
+
 def ssd_scan_ref(x, dt, A, B, C, h0=None):
     """Naive sequential SSD recurrence (the definition, O(L) steps).
 

@@ -160,6 +160,52 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params, tokens, pos):
     return L.unembed(cfg, params["embed"], {}, x), new_cache
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     num_blocks: int, block_size: int) -> Params:
+    """Decoder self-attention KV is paged; cross K/V stays dense (it is
+    encoder-length, written once at prefill and never grows)."""
+    del max_len
+    Ld = cfg.num_layers
+    return {
+        "self": L.init_kv_pages(cfg, num_blocks, block_size, stack=(Ld,)),
+        "cross_k": L._zeros((Ld, batch, cfg.encoder_seq, cfg.num_kv_heads,
+                             cfg.head_dim), (), cfg.activation_dtype),
+        "cross_v": L._zeros((Ld, batch, cfg.encoder_seq, cfg.num_kv_heads,
+                             cfg.head_dim), (), cfg.activation_dtype),
+    }
+
+
+def decode_step_paged(cfg: ModelConfig, params: Params, cache: Params,
+                      tokens, pos, block_tables):
+    """Paged twin of ``decode_step``: self-attn KV via block tables."""
+    B = tokens.shape[0]
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    x = L.embed(cfg, params["embed"], tokens)
+    x = x + params["pos_table"][pos_b].astype(x.dtype)[:, None, :]
+
+    def body(h, inp):
+        lp, sc, ck, cv = inp
+        a, sc2 = L.attention_decode_paged(
+            cfg, lp["self_attn"], L.layernorm(lp["ln1"], h, cfg.norm_eps),
+            sc, pos, block_tables)
+        h = h + a
+        c, _ = L.attention_decode(cfg, lp["cross_attn"],
+                                  L.layernorm(lp["ln2"], h, cfg.norm_eps),
+                                  sc, pos, is_global=True,
+                                  cross_kv=(ck.astype(h.dtype),
+                                            cv.astype(h.dtype)))
+        h = h + c
+        m = L.gelu_mlp(lp["mlp"], L.layernorm(lp["ln3"], h, cfg.norm_eps))
+        return h + m, sc2
+
+    x, new_self = lax.scan(
+        body, x,
+        (params["decoder"], cache["self"], cache["cross_k"], cache["cross_v"]))
+    new_cache = dict(cache, self=new_self)
+    x = L.layernorm(params["dec_ln"], x, cfg.norm_eps)
+    return L.unembed(cfg, params["embed"], {}, x), new_cache
+
+
 def prefill(cfg: ModelConfig, params: Params, tokens, max_len, *,
             audio_embeds=None, use_flash=False, true_len=None):
     """Encode audio, run the prompt tokens, build decode cache."""

@@ -116,6 +116,22 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params, tokens, pos):
     return logits, new_cache
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     num_blocks: int, block_size: int) -> Params:
+    """The shared attention block decodes as a ``local_window`` ring
+    (see module docstring) and SSM state is O(1): nothing here uses
+    ``max_len`` strips, so there are no pages to carve out — the paged
+    cache IS the dense cache and pool demand is zero."""
+    del num_blocks, block_size
+    return init_cache(cfg, batch, max_len)
+
+
+def decode_step_paged(cfg: ModelConfig, params: Params, cache: Params,
+                      tokens, pos, block_tables):
+    del block_tables  # ring + SSM state only; nothing paged
+    return decode_step(cfg, params, cache, tokens, pos)
+
+
 def prefill(cfg: ModelConfig, params: Params, tokens, max_len, *,
             use_flash=False, use_kernel=False, true_len=None):
     x = L.embed(cfg, params["embed"], tokens)

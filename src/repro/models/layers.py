@@ -350,6 +350,31 @@ def _blockwise_inner(qg, k, v, scale, softcap, chunk, q_offset=0):
     return out.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, K, G, hd)
 
 
+def _decode_project(cfg: ModelConfig, params, x, pos, *, is_global: bool):
+    """Shared q/k/v projection + RoPE for the single-token decode paths.
+
+    x: (B, 1, d); pos: (B,) int32.  Returns (q (B,1,H,hd),
+    knew (B,1,K,hd), vnew (B,1,K,hd)) — identical math for the dense and
+    paged caches, so both decode variants stay bit-for-bit equal.
+    """
+    q = jnp.einsum("bsd,dhq->bshq", x, params["wq"].astype(x.dtype))
+    if cfg.use_qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+
+    knew = jnp.einsum("bsd,dkq->bskq", x, params["wk"].astype(x.dtype))
+    vnew = jnp.einsum("bsd,dkq->bskq", x, params["wv"].astype(x.dtype))
+    if cfg.use_qk_norm:
+        knew = rmsnorm(params["k_norm"], knew, cfg.norm_eps)
+
+    if not cfg.use_abs_pos:
+        theta = (cfg.rope_theta_global
+                 if (is_global and cfg.rope_theta_global) else cfg.rope_theta)
+        posb = pos[:, None]
+        q = apply_rope(q, posb, theta)
+        knew = apply_rope(knew, posb, theta)
+    return q, knew, vnew
+
+
 def attention_decode(cfg: ModelConfig, params, x, cache, pos, *,
                      is_global: bool, cross_kv=None):
     """Single-token decode. x: (B, 1, d); pos: (B,) int32 per-sequence
@@ -368,11 +393,10 @@ def attention_decode(cfg: ModelConfig, params, x, cache, pos, *,
     G = H // K
     scale = cfg.attn_scale if cfg.attn_scale is not None else hd ** -0.5
 
-    q = jnp.einsum("bsd,dhq->bshq", x, params["wq"].astype(x.dtype))
-    if cfg.use_qk_norm:
-        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
-
     if cross_kv is not None:
+        q = jnp.einsum("bsd,dhq->bshq", x, params["wq"].astype(x.dtype))
+        if cfg.use_qk_norm:
+            q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
         k, v = cross_kv
         qg = q.reshape(B, 1, K, G, hd)
         T = k.shape[1]
@@ -383,17 +407,7 @@ def attention_decode(cfg: ModelConfig, params, x, cache, pos, *,
                        params["wo"].astype(x.dtype))
         return o, cache
 
-    knew = jnp.einsum("bsd,dkq->bskq", x, params["wk"].astype(x.dtype))
-    vnew = jnp.einsum("bsd,dkq->bskq", x, params["wv"].astype(x.dtype))
-    if cfg.use_qk_norm:
-        knew = rmsnorm(params["k_norm"], knew, cfg.norm_eps)
-
-    if not cfg.use_abs_pos:
-        theta = (cfg.rope_theta_global
-                 if (is_global and cfg.rope_theta_global) else cfg.rope_theta)
-        posb = pos[:, None]
-        q = apply_rope(q, posb, theta)
-        knew = apply_rope(knew, posb, theta)
+    q, knew, vnew = _decode_project(cfg, params, x, pos, is_global=is_global)
 
     T = cache["k"].shape[1]
     slot = pos % T  # global caches have T == max seq, so slot == pos there
@@ -427,6 +441,79 @@ def init_kv_cache(cfg: ModelConfig, batch: int, length: int, stack=(),
         "v": _zeros((batch, length, K, hd), stack, dtype),
         "slots": jnp.full(tuple(stack) + (batch, length), -1, jnp.int32),
     }
+
+
+def init_kv_pages(cfg: ModelConfig, num_blocks: int, block_size: int,
+                  stack=(), dtype=None):
+    """Paged KV pool for GLOBAL attention layers.
+
+    Physical pages of ``block_size`` tokens shared by every slot; there
+    is NO batch axis — ownership lives entirely in the engine's block
+    tables (``serving.kv_pool``).  No ``slots`` array either: validity
+    is derived from (block_table, pos) at decode time.
+    """
+    dtype = dtype or cfg.activation_dtype
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": _zeros((num_blocks, block_size, K, hd), stack, dtype),
+        "v": _zeros((num_blocks, block_size, K, hd), stack, dtype),
+    }
+
+
+def attention_decode_paged(cfg: ModelConfig, params, x, cache, pos,
+                           block_tables):
+    """Single-token decode against a paged KV pool (GLOBAL layers only —
+    local ring-window layers stay dense at W, SSM state is O(1)).
+
+    x: (B, 1, d); pos: (B,) int32 write positions.
+    cache: dict(k=(num_blocks, bs, K, hd), v=...) — the shared page pool
+    (per-layer once the surrounding scan strips the stack axis).
+    block_tables: (B, n_blk) int32 physical page ids per logical block,
+    -1 = unallocated.  Logical capacity n_blk * bs equals the engine's
+    ``max_len``, so the gathered K/V tensor has the same shape, values
+    and mask as the dense path — decode is bit-for-bit identical; only
+    HBM residency shrinks from ``max_slots x max_len`` strips to pages
+    actually in flight.
+
+    The new token's K/V is scattered into page ``block_tables[b,
+    pos//bs]`` at offset ``pos % bs``; rows whose table entry is -1
+    (inactive or stalled slots) drop the write so a freed-and-reused
+    page can never be corrupted by a stale slot.
+    """
+    B, S, d = x.shape
+    assert S == 1
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // K
+    scale = cfg.attn_scale if cfg.attn_scale is not None else hd ** -0.5
+
+    q, knew, vnew = _decode_project(cfg, params, x, pos, is_global=True)
+
+    nB, bs = cache["k"].shape[0], cache["k"].shape[1]
+    blk, off = pos // bs, pos % bs
+    phys = block_tables[jnp.arange(B), blk]
+    wphys = jnp.where(phys >= 0, phys, nB)       # nB is OOB => dropped
+    kc = cache["k"].at[wphys, off].set(
+        knew[:, 0].astype(cache["k"].dtype), mode="drop")
+    vc = cache["v"].at[wphys, off].set(
+        vnew[:, 0].astype(cache["v"].dtype), mode="drop")
+
+    # gather the logical view: (B, n_blk*bs, K, hd)
+    bt = jnp.clip(block_tables, 0, nB - 1)
+    kg = kc[bt].reshape(B, -1, K, hd)
+    vg = vc[bt].reshape(B, -1, K, hd)
+    t = jnp.arange(block_tables.shape[1] * bs, dtype=jnp.int32)
+    allocated = jnp.repeat(block_tables >= 0, bs, axis=1)
+    valid = allocated & (t[None, :] <= pos[:, None])
+    mask = valid[:, None, None, None, :]          # (B,1,1,1,L)
+
+    qg = q.reshape(B, 1, K, G, hd)
+    out = attention_weights_and_out(qg, kg.astype(x.dtype),
+                                    vg.astype(x.dtype), mask, scale=scale,
+                                    softcap=cfg.attn_logit_softcap)
+    o = jnp.einsum("bshq,hqd->bsd", out.reshape(B, 1, H, hd),
+                   params["wo"].astype(x.dtype))
+    return o, {"k": kc, "v": vc}
 
 
 # ---------------------------------------------------------------------------

@@ -9,6 +9,9 @@ Every family exposes the same five entry points, dispatched on
     init_cache(cfg, batch_size, max_len)       -> cache pytree
     prefill(cfg, params, batch, max_len)       -> (logits, cache)
     decode_step(cfg, params, cache, toks, pos) -> (logits, cache)
+    init_paged_cache(cfg, b, max_len, nB, bs)  -> cache w/ paged global KV
+    decode_step_paged(cfg, params, cache,
+                      toks, pos, block_tables) -> (logits, cache)
 
 ``batch`` is a dict: always ``tokens``/``targets``; plus
 ``image_embeds`` (vlm) or ``audio_embeds`` (encdec) stub-frontend
@@ -111,6 +114,17 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
     return family_module(cfg).init_cache(cfg, batch_size, max_len)
 
 
+def init_paged_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+                     num_blocks: int, block_size: int):
+    """Decode cache with GLOBAL attention KV in a shared page pool of
+    ``num_blocks`` x ``block_size`` tokens (no batch axis on pool
+    leaves); local ring windows, SSM state and cross K/V stay dense.
+    Serve with ``decode_step_paged``; see ``serving.kv_pool``.
+    """
+    return family_module(cfg).init_paged_cache(cfg, batch_size, max_len,
+                                               num_blocks, block_size)
+
+
 def prefill(cfg: ModelConfig, params: Params, batch: dict, max_len: int, *,
             use_flash: bool = False, use_kernel: bool = False,
             true_len=None):
@@ -147,6 +161,16 @@ def prefill(cfg: ModelConfig, params: Params, batch: dict, max_len: int, *,
 
 def decode_step(cfg: ModelConfig, params: Params, cache, tokens, pos):
     return family_module(cfg).decode_step(cfg, params, cache, tokens, pos)
+
+
+def decode_step_paged(cfg: ModelConfig, params: Params, cache, tokens, pos,
+                      block_tables):
+    """``decode_step`` against ``init_paged_cache``: global-layer KV is
+    read/written through ``block_tables`` (B, n_blk) int32 (-1 =
+    unallocated).  Token-for-token identical to the dense path when the
+    tables cover the same logical positions."""
+    return family_module(cfg).decode_step_paged(cfg, params, cache, tokens,
+                                                pos, block_tables)
 
 
 # ---------------------------------------------------------------------------

@@ -197,6 +197,18 @@ def moe_block_decode(cfg: ModelConfig, p: Params, x, cache, pos):
     return x + m, new_cache
 
 
+def moe_block_decode_paged(cfg: ModelConfig, p: Params, x, cache, pos,
+                           block_tables):
+    _, norm = L.make_norm(cfg)
+    h = norm(p["ln1"], x)
+    a, new_cache = L.attention_decode_paged(cfg, p["attn"], h, cache, pos,
+                                            block_tables)
+    x = x + a
+    h = norm(p["ln2"], x)
+    m, _ = moe_mlp(cfg, p["moe"], h)
+    return x + m, new_cache
+
+
 def forward(cfg: ModelConfig, params: Params, tokens, *, use_flash=False,
             remat: Optional[str] = None):
     """Returns (logits, aux_loss)."""
@@ -246,6 +258,45 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params, tokens, pos):
     def body(h, inp):
         lp, cc = inp
         h, c2 = moe_block_decode(cfg, lp, h, cc, pos)
+        return h, c2
+    x, mc = lax.scan(body, x, (params["moe_layers"], cache["moe_layers"]))
+    new_cache["moe_layers"] = mc
+
+    _, norm = L.make_norm(cfg)
+    x = norm(params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], params["unembed"], x)
+    return logits, new_cache
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     num_blocks: int, block_size: int) -> Params:
+    """All MoE attention layers are global: every KV cache is paged."""
+    del batch, max_len
+    n_moe = cfg.num_layers - cfg.first_dense_layers
+    c = {"moe_layers": L.init_kv_pages(cfg, num_blocks, block_size,
+                                       stack=(n_moe,))}
+    if cfg.first_dense_layers:
+        c["dense_layers"] = L.init_kv_pages(
+            cfg, num_blocks, block_size, stack=(cfg.first_dense_layers,))
+    return c
+
+
+def decode_step_paged(cfg: ModelConfig, params: Params, cache: Params,
+                      tokens, pos, block_tables):
+    x = L.embed(cfg, params["embed"], tokens)
+    new_cache = {}
+    if cfg.first_dense_layers:
+        def dbody(h, inp):
+            lp, cc = inp
+            h, c2 = T.block_decode_paged(cfg, lp, h, cc, pos, block_tables)
+            return h, c2
+        x, dc = lax.scan(dbody, x, (params["dense_layers"],
+                                    cache["dense_layers"]))
+        new_cache["dense_layers"] = dc
+
+    def body(h, inp):
+        lp, cc = inp
+        h, c2 = moe_block_decode_paged(cfg, lp, h, cc, pos, block_tables)
         return h, c2
     x, mc = lax.scan(body, x, (params["moe_layers"], cache["moe_layers"]))
     new_cache["moe_layers"] = mc

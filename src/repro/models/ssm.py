@@ -277,6 +277,20 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
     return {"layers": init_state(cfg, batch, stack=(cfg.num_layers,))}
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     num_blocks: int, block_size: int) -> Params:
+    """SSM state is O(1) — there are no KV pages to allocate; the paged
+    cache is the dense one and the engine's pool sees zero demand."""
+    del num_blocks, block_size
+    return init_cache(cfg, batch, max_len)
+
+
+def decode_step_paged(cfg: ModelConfig, params: Params, cache: Params,
+                      tokens, pos, block_tables):
+    del block_tables  # no attention, nothing paged
+    return decode_step(cfg, params, cache, tokens, pos)
+
+
 def decode_step(cfg: ModelConfig, params: Params, cache: Params, tokens, pos):
     del pos  # state is positionless
     x = L.embed(cfg, params["embed"], tokens)

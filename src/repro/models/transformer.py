@@ -118,6 +118,24 @@ def block_decode(cfg: ModelConfig, p: Params, x, cache, pos, *, is_global):
     return x + m, new_cache
 
 
+def block_decode_paged(cfg: ModelConfig, p: Params, x, cache, pos,
+                       block_tables):
+    """``block_decode`` for a GLOBAL layer whose KV lives in the paged
+    pool (``layers.attention_decode_paged``)."""
+    _, norm = L.make_norm(cfg)
+    h = norm(p["ln1"], x)
+    a, new_cache = L.attention_decode_paged(cfg, p["attn"], h, cache, pos,
+                                            block_tables)
+    if cfg.sandwich_norms:
+        a = norm(p["ln1_post"], a)
+    x = x + a
+    h = norm(p["ln2"], x)
+    m = L.mlp(p["mlp"], h)
+    if cfg.sandwich_norms:
+        m = norm(p["ln2_post"], m)
+    return x + m, new_cache
+
+
 def _maybe_remat(fn, policy: Optional[str]):
     if not policy or policy == "none":
         return fn
@@ -197,6 +215,29 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
     return c
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     num_blocks: int, block_size: int) -> Params:
+    """Like ``init_cache`` but GLOBAL layers get a shared page pool
+    (no batch axis) instead of per-slot ``max_len`` strips; local
+    ring-window layers stay dense at W."""
+    nb, rem = cfg.pattern_blocks()
+    if cfg.pattern_period <= 1:
+        return {"layers": L.init_kv_pages(cfg, num_blocks, block_size,
+                                          stack=(nb,))}
+    W = min(cfg.local_window, max_len)
+    c = {
+        "super": {
+            "local": L.init_kv_cache(cfg, batch, W,
+                                     stack=(nb, cfg.pattern_period - 1)),
+            "global": L.init_kv_pages(cfg, num_blocks, block_size,
+                                      stack=(nb,)),
+        }
+    }
+    if rem:
+        c["rem_local"] = L.init_kv_cache(cfg, batch, W, stack=(rem,))
+    return c
+
+
 def trunk_decode(cfg: ModelConfig, trunk: Params, cache: Params, x, pos):
     """x: (B, 1, d); pos: scalar int32. Returns (x, new_cache)."""
     if cfg.pattern_period <= 1:
@@ -231,6 +272,51 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params, tokens, pos):
     """tokens: (B, 1) int32; pos: scalar int32 — position being written."""
     x = L.embed(cfg, params["embed"], tokens)
     x, new_cache = trunk_decode(cfg, params["trunk"], cache, x, pos)
+    _, norm = L.make_norm(cfg)
+    x = norm(params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], params["unembed"], x)
+    return logits, new_cache
+
+
+def trunk_decode_paged(cfg: ModelConfig, trunk: Params, cache: Params, x,
+                       pos, block_tables):
+    """``trunk_decode`` against ``init_paged_cache``: global layers read
+    and write KV pages via the (B, n_blk) block table; local ring layers
+    are unchanged."""
+    if cfg.pattern_period <= 1:
+        def body(h, inp):
+            lp, c = inp
+            h, c2 = block_decode_paged(cfg, lp, h, c, pos, block_tables)
+            return h, c2
+        x, new_c = lax.scan(body, x, (trunk["layers"], cache["layers"]))
+        return x, {"layers": new_c}
+
+    def local_body(h, inp):
+        lp, c = inp
+        h, c2 = block_decode(cfg, lp, h, c, pos, is_global=False)
+        return h, c2
+
+    def super_body(h, inp):
+        sp, sc = inp
+        h, lc = lax.scan(local_body, h, (sp["local"], sc["local"]))
+        h, gc = block_decode_paged(cfg, sp["global"], h, sc["global"], pos,
+                                   block_tables)
+        return h, {"local": lc, "global": gc}
+
+    x, new_super = lax.scan(super_body, x, (trunk["super"], cache["super"]))
+    new_cache = {"super": new_super}
+    if "rem_local" in trunk:
+        x, rc = lax.scan(local_body, x, (trunk["rem_local"], cache["rem_local"]))
+        new_cache["rem_local"] = rc
+    return x, new_cache
+
+
+def decode_step_paged(cfg: ModelConfig, params: Params, cache: Params,
+                      tokens, pos, block_tables):
+    """Paged twin of ``decode_step``; ``block_tables``: (B, n_blk) int32."""
+    x = L.embed(cfg, params["embed"], tokens)
+    x, new_cache = trunk_decode_paged(cfg, params["trunk"], cache, x, pos,
+                                      block_tables)
     _, norm = L.make_norm(cfg)
     x = norm(params["final_norm"], x)
     logits = L.unembed(cfg, params["embed"], params["unembed"], x)

@@ -52,6 +52,8 @@ def forward(cfg: ModelConfig, params: Params, tokens, image_embeds, *,
 
 init_cache = T.init_cache
 decode_step = T.decode_step
+init_paged_cache = T.init_paged_cache      # LM trunk owns all KV layers
+decode_step_paged = T.decode_step_paged
 
 
 def prefill(cfg: ModelConfig, params: Params, tokens, max_len, *,

@@ -2,6 +2,23 @@
 
 Admission semantics (the contract tests rely on)
 ------------------------------------------------
+* **Paged KV cache.** Global attention layers store K/V in a shared
+  pool of ``ServeConfig.kv_block_size``-token pages
+  (``serving.kv_pool.KVBlockPool`` + ``models.layers.init_kv_pages``)
+  instead of one dense ``max_len`` strip per slot; each slot's ordered
+  page list is mirrored to the device as an int32 block table consumed
+  by ``model.decode_step_paged``.  Admission is capacity-aware (enough
+  FREE PAGES, not merely a free slot), decode appends a page on block
+  boundary crossing, and on pool exhaustion a slot is preempted back to
+  the queue with its pages detached (preempt-or-queue — no deadlock;
+  ``run_until_drained`` force-reclaims a detached holder only when
+  nothing else can run).  The logical page view equals ``max_len``, so
+  paged decode is bit-for-bit identical to the dense path
+  (``ServeConfig.paged=False``) — the engine's memory ceiling drops
+  from ``max_slots x max_len`` strips to actual tokens in flight.
+  Local ring-window layers stay dense at ``W``; SSM state is O(1);
+  families with no global KV (ssm, hybrid) run dense with zero pool
+  demand.
 * **Exact padded prefill.** Prompts are right-padded to the smallest
   ``ServeConfig.prefill_buckets`` entry that fits and prefilled batched
   per bucket.  ``model.prefill(..., true_len=)`` makes the padding
@@ -25,12 +42,16 @@ Admission semantics (the contract tests rely on)
 * **QoE admission order.** The queue is ranked by
   ``core.scheduler.admission_rank`` (fifo | priority | edf via
   ``ServeConfig.policy``) — the same policy definition the hub's
-  discrete-event scheduler simulates.
+  discrete-event scheduler simulates.  Under pool pressure the feasible
+  subset is admitted in rank order (infeasible requests wait, they are
+  never dropped).
 * **Per-request sampling.** ``Request.temperature`` / ``Request.top_k``
   override engine defaults inside the jitted decode step.
-* **KV-preserving preemption.** ``preempt()`` extracts the slot's cache
-  and decode position onto ``Request.saved_state``; re-submission
-  reinserts them — no re-prefill, bit-identical continuation.
+* **KV-preserving preemption.** ``preempt()`` extracts the slot's dense
+  cache leaves and decode position onto ``Request.saved_state`` and
+  detaches its KV pages (refcounts held, zero copies); re-submission
+  restores the block table — no re-prefill, bit-identical continuation.
+  ``submit`` rejects resumed states that could not make progress.
 
 JAX version compatibility: all version-sensitive jax.sharding / mesh
 symbols are imported via ``repro.compat`` (see its module docstring for
@@ -44,7 +65,12 @@ from repro.serving.engine import (
     cache_batch_axes,
     extract_slot,
     insert_slot,
+    paged_cache_axes,
 )
+from repro.serving.kv_pool import KVBlockPool, PoolExhausted, \
+    blocks_for_tokens
 
 __all__ = ["EdgeServingEngine", "Request", "ServeConfig",
-           "cache_batch_axes", "extract_slot", "insert_slot"]
+           "cache_batch_axes", "extract_slot", "insert_slot",
+           "paged_cache_axes", "KVBlockPool", "PoolExhausted",
+           "blocks_for_tokens"]

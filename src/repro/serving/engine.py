@@ -1,4 +1,5 @@
-"""Multi-tenant serving engine with continuous batching.
+"""Multi-tenant serving engine with continuous batching over a paged KV
+cache.
 
 The EdgeAI-Hub's inference runtime: fixed-slot batched decode with
 per-slot positions (the per-sequence ``pos`` vector threads through
@@ -6,6 +7,35 @@ per-slot positions (the per-sequence ``pos`` vector threads through
 EOS / length / preemption.  The hub's scheduler policy
 (``core.scheduler.admission_rank``) decides WHO is admitted next; this
 module executes it.
+
+Paged KV (block-table decode contract)
+--------------------------------------
+GLOBAL attention layers no longer own a dense ``max_len`` strip per
+slot.  Their K/V lives in a shared pool of ``kv_block_size``-token
+pages (``models.layers.init_kv_pages``, allocated by
+``kv_pool.KVBlockPool``); each slot holds an ordered list of physical
+page ids whose device mirror is the ``(max_slots, max_len //
+kv_block_size)`` int32 ``block_tables`` array passed to
+``model.decode_step_paged`` every step (-1 = unallocated).  The engine
+maintains these invariants:
+
+* before a decode wave, every active slot's table covers its write
+  position ``pos`` (``_ensure_blocks`` appends a page on boundary
+  crossing; on pool exhaustion the slot is preempted back to the queue
+  with its pages detached — "preempt-or-queue");
+* admission is capacity-aware: a request is admitted only when enough
+  FREE POOL BLOCKS exist for its prompt (+1 decode write), not merely
+  when a slot is free;
+* ``_finish`` releases the slot's pages; ``preempt`` detaches them onto
+  ``Request.saved_state`` so resume is still re-prefill-free;
+* the logical view ``n_blk * kv_block_size == max_len`` makes paged
+  decode bit-for-bit identical to the dense path — only HBM residency
+  shrinks, from ``max_slots x max_len`` strips to tokens actually in
+  flight.
+
+Local ring-window layers stay dense at ``W`` and SSM state is O(1), so
+families with no global KV layers (ssm, hybrid) transparently run the
+dense path with zero pool demand.
 
 Admission semantics (exact, see ``model.prefill(true_len=...)``)
 ----------------------------------------------------------------
@@ -25,9 +55,13 @@ Admission semantics (exact, see ``model.prefill(true_len=...)``)
   step, teacher-forced, sampled outputs discarded until the prompt is
   consumed).  Catch-up requests ride the same decode batch as running
   requests, so long-prompt admission never stalls other tenants.
-* Preemption (``preempt``) extracts the slot's KV/SSM cache and decode
-  position onto the request; re-admission reinserts them directly —
-  no re-prefill, no lost context.
+* Preemption (``preempt``) extracts the slot's dense cache leaves and
+  decode position onto the request and detaches its KV pages;
+  re-admission reinserts them directly — no re-prefill, no page copies,
+  no lost context.
+* ``submit`` validates resumed requests too: a saved state with no room
+  left to generate (``pos + pending >= max_len - 1``) or nothing left
+  to generate is rejected instead of burning a slot.
 * Sampling is per-request: ``Request.temperature`` / ``Request.top_k``
   override the engine-wide defaults inside the jitted decode step.
 """
@@ -44,38 +78,77 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
+from repro.serving.kv_pool import KVBlockPool, PoolExhausted, \
+    blocks_for_tokens
 
 # NOTE: repro.core.scheduler is imported lazily in _rank —
 # core/__init__ pulls in hub.py, which imports this module back.
 
 Params = Any
-_SENTINEL_B = 7777
+
+# Batch-axis discovery probes: the cache is shape-evaluated at TWO
+# distinct batch sizes and the batch axis is the (unique) axis whose
+# extent changed.  This cannot collide with any other cache dimension —
+# the previous single-sentinel scheme (`shape.index(7777)`) silently
+# picked the wrong axis whenever max_len/vocab/d_model happened to
+# equal the sentinel.
+_PROBE_A, _PROBE_B = 3, 5
+
+
+def _diff_axis(a, b) -> int:
+    """Axis where the two probe shapes differ; -1 when none does (a
+    batchless shared-pool leaf)."""
+    diffs = [i for i, (p, q) in enumerate(zip(a.shape, b.shape)) if p != q]
+    if not diffs:
+        return -1
+    if len(diffs) > 1:
+        raise ValueError(
+            f"ambiguous batch axis: shapes {a.shape} / {b.shape} differ "
+            f"on {diffs}")
+    return diffs[0]
 
 
 def cache_batch_axes(cfg: ModelConfig, max_len: int):
     """Pytree of ints: which axis of each cache leaf is the batch axis.
 
-    Discovered structurally by building the cache shape with a sentinel
-    batch size — no per-family bookkeeping.
+    Discovered structurally by shape-evaluating the cache at two batch
+    sizes — no per-family bookkeeping, no sentinel collisions.
     """
-    shapes = jax.eval_shape(
-        partial(M.init_cache, cfg, _SENTINEL_B, max_len))
-    return jax.tree.map(lambda s: s.shape.index(_SENTINEL_B), shapes)
+    s1 = jax.eval_shape(partial(M.init_cache, cfg, _PROBE_A, max_len))
+    s2 = jax.eval_shape(partial(M.init_cache, cfg, _PROBE_B, max_len))
+    return jax.tree.map(_diff_axis, s1, s2)
+
+
+def paged_cache_axes(cfg: ModelConfig, max_len: int, num_blocks: int,
+                     block_size: int):
+    """Like ``cache_batch_axes`` for the paged cache: shared page-pool
+    leaves have no batch axis and map to -1."""
+    s1 = jax.eval_shape(partial(M.init_paged_cache, cfg, _PROBE_A, max_len,
+                                num_blocks, block_size))
+    s2 = jax.eval_shape(partial(M.init_paged_cache, cfg, _PROBE_B, max_len,
+                                num_blocks, block_size))
+    return jax.tree.map(_diff_axis, s1, s2)
 
 
 def insert_slot(cache, one, slot: int, axes):
-    """Insert a batch=1 cache ``one`` into batched ``cache`` at ``slot``."""
+    """Insert a batch=1 cache ``one`` into batched ``cache`` at ``slot``.
+    Pool leaves (axis -1) are left untouched — their content lives in
+    shared pages addressed by block tables, not per-slot strips."""
     return jax.tree.map(
-        lambda full, single, ax: jax.lax.dynamic_update_slice_in_dim(
+        lambda full, single, ax: full if ax < 0 else
+        jax.lax.dynamic_update_slice_in_dim(
             full, single.astype(full.dtype), slot, axis=ax),
         cache, one, axes)
 
 
 def extract_slot(cache, slot: int, axes):
     """Slice a batch=1 cache out of batched ``cache`` at ``slot``
-    (inverse of ``insert_slot`` — KV-preserving preemption)."""
+    (inverse of ``insert_slot`` — KV-preserving preemption).  Pool
+    leaves yield an empty placeholder; their pages are detached via the
+    block table instead of copied."""
     return jax.tree.map(
-        lambda full, ax: jax.lax.dynamic_slice_in_dim(full, slot, 1, axis=ax),
+        lambda full, ax: jnp.zeros((0,), full.dtype) if ax < 0 else
+        jax.lax.dynamic_slice_in_dim(full, slot, 1, axis=ax),
         cache, axes)
 
 
@@ -106,6 +179,11 @@ class ServeConfig:
     prefill_buckets: tuple = (16, 32, 64, 128)
     policy: str = "priority"            # fifo | priority | edf (QoE)
     seed: int = 0
+    # paged KV pool (tokens-in-flight memory ceiling instead of
+    # max_slots * max_len strips); paged=False restores dense strips
+    paged: bool = True
+    kv_block_size: int = 16
+    kv_pool_blocks: Optional[int] = None  # None -> max_slots*max_len/bs
 
 
 class EdgeServingEngine:
@@ -116,8 +194,42 @@ class EdgeServingEngine:
         self.params = params
         self.scfg = scfg
         B, T = scfg.max_slots, scfg.max_len
-        self.cache = M.init_cache(cfg, B, T)
-        self.axes = cache_batch_axes(cfg, T)
+        bs = scfg.kv_block_size
+        self.paged = bool(scfg.paged)
+        if self.paged:
+            if bs < 1:
+                raise ValueError(f"kv_block_size must be >= 1, got {bs}")
+            # the logical page view must tile max_len exactly (that is
+            # what makes paged == dense bit-for-bit); shrink the block
+            # size until it divides rather than reject the config
+            while T % bs:
+                bs //= 2
+            self.n_blk = T // bs
+            if scfg.kv_pool_blocks:
+                # a user-set pool is a TOKEN budget: if the block size
+                # shrank, keep blocks x block_size constant instead of
+                # silently shrinking the budget by the same factor
+                n_pool = scfg.kv_pool_blocks * scfg.kv_block_size // bs
+            else:
+                n_pool = B * self.n_blk
+            axes = paged_cache_axes(cfg, T, n_pool, bs)
+            # families with no global KV layers (ssm, hybrid ring) have
+            # zero pool demand — run them on the dense path outright
+            self.paged = any(a < 0 for a in jax.tree.leaves(axes))
+        self.block_size = bs              # effective page size
+        if self.paged:
+            self.axes = axes
+            self.pool = KVBlockPool(n_pool, bs)
+            self.cache = M.init_paged_cache(cfg, B, T, n_pool, bs)
+            self.block_tables = np.full((B, self.n_blk), -1, np.int32)
+            self.slot_blocks: list[list[int]] = [[] for _ in range(B)]
+        else:
+            self.pool = None
+            self.cache = M.init_cache(cfg, B, T)
+            self.axes = cache_batch_axes(cfg, T)
+        # batch axes of the DENSE prefill cache (row extraction source)
+        self._dense_axes = (cache_batch_axes(cfg, T) if self.paged
+                            else self.axes)
         self.tokens = np.zeros((B, 1), np.int32)
         self.pos = np.zeros((B,), np.int32)
         self.temps = np.zeros((B,), np.float32)
@@ -137,6 +249,11 @@ class EdgeServingEngine:
         self._prefills: dict[tuple, Callable] = {}
         self.steps = 0
         self.completed: list[Request] = []
+        # observability: paged-admission effectiveness + pressure events
+        self.peak_active = 0
+        self.peak_pool_used = 0
+        self.exhaust_preempts = 0
+        self.reclaims = 0
 
     @property
     def _prefix(self) -> int:
@@ -145,12 +262,47 @@ class EdgeServingEngine:
     # ------------------------------------------------------------------
     # admission
     # ------------------------------------------------------------------
+    def reset_rng(self) -> None:
+        """Re-seed the sampling state (device PRNG key + admission rng)
+        to the ServeConfig seed.  Benchmarks call this after a warmup
+        pass so a temperature>0 measured run samples the same tokens a
+        cold engine would — replay determinism."""
+        self._key = jax.random.PRNGKey(self.scfg.seed)
+        self._rng = np.random.default_rng(self.scfg.seed)
+
     def submit(self, req: Request) -> None:
         limit = self.scfg.max_len - 1 - self._prefix
-        if req.saved_state is None and len(req.prompt) > limit:
-            raise ValueError(
-                f"prompt length {len(req.prompt)} exceeds max_len budget "
-                f"{limit} (max_len={self.scfg.max_len})")
+        if req.saved_state is None:
+            if len(req.prompt) > limit:
+                raise ValueError(
+                    f"prompt length {len(req.prompt)} exceeds max_len "
+                    f"budget {limit} (max_len={self.scfg.max_len})")
+            worst = self._prefix + len(req.prompt) + req.max_new_tokens
+        else:
+            st = req.saved_state
+            pend = st.get("pending")
+            n_pend = 0 if pend is None else int(np.size(pend))
+            if len(req.generated) >= req.max_new_tokens:
+                raise ValueError(
+                    f"resumed request {req.uid} already generated "
+                    f"{len(req.generated)}/{req.max_new_tokens} tokens — "
+                    "nothing left to decode")
+            if int(st["pos"]) + n_pend >= self.scfg.max_len - 1:
+                raise ValueError(
+                    f"resumed request {req.uid} cannot make progress: "
+                    f"pos {int(st['pos'])} + pending {n_pend} >= "
+                    f"max_len-1 ({self.scfg.max_len - 1}); it would burn "
+                    "a prefill-free slot and finish with zero new tokens")
+            worst = (int(st["pos"]) + n_pend + 1
+                     + req.max_new_tokens - len(req.generated))
+        if self.paged:
+            need = blocks_for_tokens(min(worst, self.scfg.max_len),
+                                     self.block_size)
+            if need > self.pool.num_blocks:
+                raise ValueError(
+                    f"request {req.uid} may need {need} KV blocks but the "
+                    f"pool holds only {self.pool.num_blocks} "
+                    f"(kv_pool_blocks); it could never finish")
         if req.arrival is None:
             req.arrival = float(next(self._arrival))
         self.queue.append(req)
@@ -198,6 +350,49 @@ class EdgeServingEngine:
         p /= p.sum()
         return int(self._rng.choice(lg.size, p=p))
 
+    # -- paged-pool bookkeeping ----------------------------------------
+    def _blocks_needed(self, req: Request) -> int:
+        """New pool blocks this request needs to be admitted NOW (the
+        prompt's pages + one covering the first decode write; resumed
+        requests already hold pages for [0, pos))."""
+        if not self.paged:
+            return 0
+        bs = self.block_size
+        if req.saved_state is not None:
+            held = len(req.saved_state.get("blocks", ()))
+            return max(0, blocks_for_tokens(
+                int(req.saved_state["pos"]) + 1, bs) - held)
+        n1 = min(len(req.prompt), self.scfg.prefill_buckets[-1])
+        return blocks_for_tokens(self._prefix + n1 + 1, bs)
+
+    def _set_table(self, slot: int, blocks: list[int]) -> None:
+        self.slot_blocks[slot] = blocks
+        self.block_tables[slot, :] = -1
+        self.block_tables[slot, :len(blocks)] = blocks
+
+    def _release_slot_blocks(self, slot: int) -> None:
+        self.pool.free(self.slot_blocks[slot])
+        self._set_table(slot, [])
+
+    def _insert_admitted(self, eng, row, ax, slot: int, phys):
+        """Merge a freshly prefilled batch=1 dense cache ``row`` into
+        the engine cache: dense leaves land in ``slot``; pool leaves
+        scatter the row's global KV strip into the allocated pages
+        (``phys``: (n_blk,) physical ids, pool-size padded => dropped).
+        """
+        if isinstance(eng, dict):
+            return {k: self._insert_admitted(eng[k], row[k], ax[k], slot,
+                                             phys)
+                    for k in eng}
+        if ax < 0:
+            # eng: (stk, nB, bs, K, hd); row strip: (stk, 1, T, K, hd)
+            stk, _, bs = eng.shape[0], eng.shape[1], eng.shape[2]
+            blocks = row[:, 0].reshape(stk, -1, bs, *row.shape[3:])
+            return eng.at[:, phys].set(blocks.astype(eng.dtype),
+                                       mode="drop")
+        return jax.lax.dynamic_update_slice_in_dim(
+            eng, row.astype(eng.dtype), slot, axis=ax)
+
     def _place(self, req: Request, slot: int) -> None:
         """Common slot bookkeeping after cache insertion."""
         self.temps[slot] = (self.scfg.temperature if req.temperature is None
@@ -207,8 +402,14 @@ class EdgeServingEngine:
         self.slot_req[slot] = req
 
     def _admit_resumed(self, req: Request, slot: int) -> None:
+        need = self._blocks_needed(req)   # same formula the scan reserved
         st = req.saved_state
         req.saved_state = None
+        if self.paged:
+            blocks = list(st.get("blocks", ()))
+            if need:  # feasibility pre-checked by the admission scan
+                blocks += self.pool.alloc(need)
+            self._set_table(slot, blocks)
         self.cache = insert_slot(self.cache, st["cache"], slot, self.axes)
         self.pos[slot] = st["pos"]
         self.tokens[slot, 0] = st["last_tok"]
@@ -216,18 +417,36 @@ class EdgeServingEngine:
         self._place(req, slot)
 
     def _admit_batch(self) -> None:
-        """Admit queued requests into every free slot, batching prefill
-        per bucket (one compile + one device call per bucket group)."""
+        """Admit queued requests into free slots, batching prefill per
+        bucket (one compile + one device call per bucket group).
+
+        Capacity-aware: a request is taken only if the pool can cover
+        its prompt pages + first decode write.  Requests that don't fit
+        right now are skipped, NOT dropped — they wait for pages to
+        free (best-effort packing under memory pressure; admission
+        order within the feasible set still follows admission_rank)."""
         if not self.queue:
             return
         free = [s for s in range(self.scfg.max_slots) if not self.active[s]]
         if not free:
             return
         self.queue.sort(key=self._rank)
-        taken, self.queue = self.queue[:len(free)], self.queue[len(free):]
+        avail = self.pool.num_free if self.paged else 0
+        taken, kept = [], []
+        for req in self.queue:
+            if not free:
+                kept.append(req)
+                continue
+            need = self._blocks_needed(req)
+            if self.paged and need > avail:
+                kept.append(req)
+                continue
+            avail -= need
+            taken.append((req, free.pop(0)))
+        self.queue = kept
 
         fresh: dict[tuple, list] = {}   # group key -> [(req, slot)]
-        for req, slot in zip(taken, free):
+        for req, slot in taken:
             if req.saved_state is not None:
                 self._admit_resumed(req, slot)
                 continue
@@ -258,29 +477,40 @@ class EdgeServingEngine:
             self.params, batch, jnp.asarray(true_len))
         logits_host = np.asarray(logits[:, -1], np.float32)   # (m, V)
         for i, (req, slot) in enumerate(group):
-            row = jax.tree.map(
-                lambda leaf, ax: jax.lax.dynamic_slice_in_dim(
-                    leaf, i, 1, axis=ax), cache_m, self.axes)
-            self.cache = insert_slot(self.cache, row, slot, self.axes)
             n1 = int(true_len[i])
-            self.pos[slot] = self._prefix + n1
             remainder = np.asarray(req.prompt[n1:], np.int32)
-            if remainder.size:
-                # chunked prefill: catch up through the decode wave
-                self.pending[slot] = remainder[1:]
-                self.tokens[slot, 0] = int(remainder[0])
-            else:
-                self.pending[slot] = None
+            tok = None
+            if not remainder.size:
                 tok = self._sample_first(req, logits_host[i])
                 req.generated.append(tok)
                 hit_eos = (self.scfg.eos_id >= 0
                            and tok == self.scfg.eos_id)
                 if len(req.generated) >= req.max_new_tokens or hit_eos:
                     # the admission token already completed the request
-                    # — never occupy a slot or spend a decode step
+                    # — never occupy a slot, a page or a decode step
                     req.done = True
                     self.completed.append(req)
                     continue
+            row = jax.tree.map(
+                lambda leaf, ax: jax.lax.dynamic_slice_in_dim(
+                    leaf, i, 1, axis=ax), cache_m, self._dense_axes)
+            if self.paged:
+                blocks = self.pool.alloc(self._blocks_needed(req))
+                self._set_table(slot, blocks)
+                phys = np.full((self.n_blk,), self.pool.num_blocks,
+                               np.int32)
+                phys[:len(blocks)] = blocks
+                self.cache = self._insert_admitted(
+                    self.cache, row, self.axes, slot, jnp.asarray(phys))
+            else:
+                self.cache = insert_slot(self.cache, row, slot, self.axes)
+            self.pos[slot] = self._prefix + n1
+            if remainder.size:
+                # chunked prefill: catch up through the decode wave
+                self.pending[slot] = remainder[1:]
+                self.tokens[slot, 0] = int(remainder[0])
+            else:
+                self.pending[slot] = None
                 self.tokens[slot, 0] = tok
             self._place(req, slot)
 
@@ -288,9 +518,14 @@ class EdgeServingEngine:
     # decode
     # ------------------------------------------------------------------
     def _decode_fn(self, params, cache, tokens, pos, temps, topks, key,
-                   any_topk: bool = False):
-        logits, new_cache = M.decode_step(self.cfg, params, cache,
-                                          tokens, pos)
+                   block_tables=None, any_topk: bool = False):
+        if block_tables is None:
+            logits, new_cache = M.decode_step(self.cfg, params, cache,
+                                              tokens, pos)
+        else:
+            logits, new_cache = M.decode_step_paged(self.cfg, params, cache,
+                                                    tokens, pos,
+                                                    block_tables)
         logits = logits[:, -1, :].astype(jnp.float32)          # (B, V)
         greedy = jnp.argmax(logits, axis=-1)
         masked = logits
@@ -306,22 +541,53 @@ class EdgeServingEngine:
         nxt = jnp.where(temps > 0, sampled, greedy)
         return nxt.astype(jnp.int32), new_cache
 
+    def _ensure_blocks(self) -> None:
+        """Guarantee every active slot's table covers its write
+        position ``pos``.  Crossing a block boundary appends one page;
+        if the pool is exhausted the slot is preempted back to the
+        queue (pages detached) — preempt-or-queue, never a deadlock
+        spin.  Best-ranked slots get first pick of the remaining pages.
+        """
+        bs = self.block_size
+        needy = [s for s in range(self.scfg.max_slots)
+                 if self.active[s]
+                 and int(self.pos[s]) // bs >= len(self.slot_blocks[s])]
+        needy.sort(key=lambda s: self._rank(self.slot_req[s]))
+        for s in needy:
+            j = int(self.pos[s]) // bs
+            try:
+                blk = self.pool.alloc(1)
+            except PoolExhausted:
+                req = self.preempt(s)
+                self.exhaust_preempts += 1
+                self.queue.append(req)   # resumes when a page frees
+                continue
+            self.slot_blocks[s].extend(blk)
+            self.block_tables[s, j] = blk[0]
+
     def step(self) -> int:
         """Admit queued requests into free slots, then one decode wave.
 
         Returns the number of active slots that were stepped.
         """
         self._admit_batch()
+        if self.paged:
+            self._ensure_blocks()
         n_active = int(self.active.sum())
         if n_active == 0:
             return 0
+        self.peak_active = max(self.peak_active, n_active)
+        if self.paged:
+            self.peak_pool_used = max(self.peak_pool_used,
+                                      self.pool.num_used)
 
         self._key, sub = jax.random.split(self._key)
         any_topk = bool((self.topks[self.active] > 0).any())
+        tables = (jnp.asarray(self.block_tables) if self.paged else None)
         nxt, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(self.tokens),
             jnp.asarray(self.pos), jnp.asarray(self.temps),
-            jnp.asarray(self.topks), sub, any_topk=any_topk)
+            jnp.asarray(self.topks), sub, tables, any_topk=any_topk)
         nxt_host = np.asarray(nxt)
         for slot in range(self.scfg.max_slots):
             if not self.active[slot]:
@@ -355,12 +621,16 @@ class EdgeServingEngine:
         self.active[slot] = False
         self.slot_req[slot] = None
         self.pending[slot] = None
+        if self.paged:
+            self._release_slot_blocks(slot)
 
     # ------------------------------------------------------------------
     def preempt(self, slot: int) -> Optional[Request]:
         """Evict a running request (scheduler-driven preemption), taking
-        its KV/SSM cache with it — re-submission resumes decode exactly
-        where it stopped, with NO re-prefill."""
+        its dense cache leaves and decode position with it; its KV pages
+        stay in the pool, DETACHED onto the request — re-submission
+        restores the block table and resumes decode exactly where it
+        stopped, with NO re-prefill and no page copies."""
         req = self.slot_req[slot]
         if req is None:
             return None
@@ -370,12 +640,71 @@ class EdgeServingEngine:
             "last_tok": int(self.tokens[slot, 0]),
             "pending": self.pending[slot],
         }
+        if self.paged:
+            req.saved_state["blocks"] = self.slot_blocks[slot]
+            self._set_table(slot, [])
         self.active[slot] = False
         self.slot_req[slot] = None
         self.pending[slot] = None
         return req
 
+    # ------------------------------------------------------------------
+    def _drop_saved(self, req: Request) -> None:
+        """Forced reclaim under pool exhaustion: release the detached
+        pages and rebuild the request as a fresh catch-up prompt
+        (original prompt + tokens generated so far).  Re-prefill IS
+        required for this one request — the escape hatch that keeps
+        ``run_until_drained`` live when detached holders own every page.
+        The exact context is replayed, but prefill and decode logits
+        only agree to bf16 tolerance, so a greedy tie can flip: the
+        contract here is liveness + correct token budget, not the
+        bit-exactness the detach/resume path guarantees."""
+        st = req.saved_state
+        req.saved_state = None
+        self.pool.free(st.get("blocks", ()))
+        # fold only the not-yet-folded suffix of generated into the
+        # replay prompt: a request reclaimed twice must not see its
+        # first batch of generated tokens duplicated in the context
+        folded = getattr(req, "_folded_generated", 0)
+        fresh = req.generated[folded:]
+        if fresh:
+            req.prompt = np.concatenate(
+                [np.asarray(req.prompt, np.int32),
+                 np.asarray(fresh, np.int32)])
+            req._folded_generated = len(req.generated)
+
+    def _reclaim(self) -> None:
+        holders = [r for r in self.queue
+                   if r.saved_state is not None
+                   and r.saved_state.get("blocks")]
+        if not holders:
+            raise RuntimeError(
+                "serving pool wedged: no active slots, queue non-empty, "
+                "and no detached pages to reclaim (pool misconfigured?)")
+        victim = max(holders, key=self._rank)   # worst-ranked holder
+        self._drop_saved(victim)
+        self.reclaims += 1
+
+    def drain_step(self) -> int:
+        """One ``step()`` plus the pool-wedge recovery — the unit of
+        progress ``run_until_drained`` iterates.  External drain loops
+        that need per-step observability (benchmarks capturing TTFT)
+        must use this, not bare ``step()``, or a pool wedged by
+        detached holders spins them forever."""
+        stepped = self.step()
+        if (stepped == 0 and self.paged and self.queue
+                and not self.active.any()):
+            # requests requeued by _ensure_blocks mid-step (after this
+            # step's admission pass) may need zero new pages — give
+            # admission one more look before reclaiming
+            self._admit_batch()
+            if not self.active.any():
+                # every queued request is blocked on pool pages held
+                # by detached requests: force-reclaim the worst one
+                self._reclaim()
+        return stepped
+
     def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
         while (self.queue or self.active.any()) and self.steps < max_steps:
-            self.step()
+            self.drain_step()
         return self.completed

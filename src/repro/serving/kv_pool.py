@@ -1,0 +1,106 @@
+"""Paged KV-cache block pool for the serving engine.
+
+The dense engine reserved one ``max_len``-long KV strip per slot, so
+HBM — not compute — capped concurrency at ``max_slots`` regardless of
+how short the resident requests actually were.  This module provides the
+block-granular allocator that converts that ceiling into *actual tokens
+in flight*: physical KV pages of ``block_size`` tokens live in one
+shared pool (``models.layers.init_kv_pages``), and each request owns an
+ordered list of block ids — its *block table* — mapping logical token
+blocks to physical pages.
+
+Host-side bookkeeping only: the pool tracks free ids and refcounts; the
+device-side page tensors are owned by the engine's cache pytree and are
+indexed by the block tables this allocator hands out.
+
+Semantics
+---------
+* ``alloc(n)`` pops ``n`` ids off a LIFO free list (fixed-size blocks
+  mean reuse is fragmentation-free by construction) with refcount 1, or
+  raises :class:`PoolExhausted` without side effects.
+* ``free(ids)`` decrements refcounts and returns ids whose count hits
+  zero to the free list.
+* ``incref(ids)`` supports shared pages (detached preempted requests,
+  future prefix sharing): a page is reclaimed only when every owner has
+  released it.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class PoolExhausted(RuntimeError):
+    """Raised by ``alloc`` when fewer free blocks exist than requested."""
+
+
+def blocks_for_tokens(n_tokens: int, block_size: int) -> int:
+    """Number of ``block_size``-token pages covering ``n_tokens``."""
+    if n_tokens <= 0:
+        return 0
+    return -(-n_tokens // block_size)
+
+
+class KVBlockPool:
+    """Fixed-size KV page allocator with refcounts (host-side)."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks <= 0 or block_size <= 0:
+            raise ValueError("num_blocks and block_size must be positive")
+        self.num_blocks = int(num_blocks)
+        self.block_size = int(block_size)
+        # LIFO: freshly freed pages are reused first (cache-warm reuse)
+        self._free: list[int] = list(range(self.num_blocks - 1, -1, -1))
+        self._refcount = np.zeros(self.num_blocks, np.int32)
+
+    # ------------------------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def refcount(self, block_id: int) -> int:
+        return int(self._refcount[block_id])
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    # ------------------------------------------------------------------
+    def alloc(self, n: int) -> list[int]:
+        """Claim ``n`` blocks (refcount 1 each) or raise PoolExhausted.
+
+        All-or-nothing: on failure the pool is untouched, so admission
+        can probe feasibility without cleanup.
+        """
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            raise PoolExhausted(
+                f"need {n} blocks, only {len(self._free)} of "
+                f"{self.num_blocks} free")
+        ids = [self._free.pop() for _ in range(n)]
+        self._refcount[ids] += 1
+        return ids
+
+    def incref(self, block_ids) -> None:
+        for b in block_ids:
+            if self._refcount[b] <= 0:
+                raise ValueError(f"incref on unallocated block {b}")
+            self._refcount[b] += 1
+
+    def free(self, block_ids) -> None:
+        """Release one reference per id; zero-ref pages return to the
+        free list (in order, so tests can assert deterministic reuse)."""
+        for b in block_ids:
+            if self._refcount[b] <= 0:
+                raise ValueError(f"double free of block {b}")
+            self._refcount[b] -= 1
+            if self._refcount[b] == 0:
+                self._free.append(int(b))
+
+    # ------------------------------------------------------------------
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (f"KVBlockPool(blocks={self.num_blocks}, "
+                f"block_size={self.block_size}, free={self.num_free})")

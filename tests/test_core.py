@@ -32,6 +32,30 @@ def test_fifo_order():
     assert [t.uid for t in done] == [0, 1, 2]
 
 
+def test_qoe_p99_is_ceil_quantile():
+    """Regression: the old p99 index ``int(0.99*n) - 1`` was biased LOW
+    for small samples (n=2 reported the MINIMUM latency as "p99").  The
+    tail quantile must match np.percentile(..., method='higher')."""
+    import numpy as np
+    from repro.core.scheduler import quantile_higher
+
+    rng = np.random.default_rng(0)
+    for n in range(1, 12):
+        vals = rng.uniform(0.1, 9.0, n).tolist()
+        expect = float(np.percentile(vals, 99, method="higher"))
+        assert quantile_higher(vals, 0.99) == pytest.approx(expect), n
+
+    # end-to-end: two sequential tasks — p99 latency is the LONGER one
+    s = EdgeScheduler("fifo")
+    for t in _tasks([1.0, 3.0]):
+        s.submit(t)
+    s.run()
+    rep = s.qoe_report()
+    assert rep["p99_latency_s"] == pytest.approx(4.0)  # 1.0 wait + 3.0
+    with pytest.raises(ValueError):
+        quantile_higher([], 0.99)
+
+
 def test_priority_preemption():
     s = EdgeScheduler("priority")
     low = AITask(uid=0, kind="inference", duration_s=10.0, device="d",

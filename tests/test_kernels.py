@@ -117,3 +117,69 @@ def test_ssd_scan_initial_state():
                                rtol=1e-3, atol=1e-3)
     np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full),
                                rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# paged attention (decode read)
+# ---------------------------------------------------------------------------
+
+def _paged_case(seed, B, H, kv, hd, nB, bs, n_blk):
+    """Random pool + permuted (non-identity) block tables + ragged
+    lengths, so physical page order really differs from logical order."""
+    rng = np.random.default_rng(seed)
+    q = jax.random.normal(jax.random.PRNGKey(seed), (B, H, hd),
+                          jnp.float32) * 0.5
+    kp = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                           (nB, bs, kv, hd)) * 0.5
+    vp = jax.random.normal(jax.random.PRNGKey(seed + 2),
+                           (nB, bs, kv, hd)) * 0.5
+    bt = np.full((B, n_blk), -1, np.int32)
+    lengths = np.zeros((B,), np.int32)
+    perm = rng.permutation(nB)
+    used = 0
+    for b in range(B):
+        n = int(rng.integers(1, n_blk * bs + 1))
+        lengths[b] = n
+        k = -(-n // bs)
+        bt[b, :k] = perm[used:used + k]
+        used += k
+    return q, kp, vp, jnp.asarray(bt), jnp.asarray(lengths)
+
+
+@pytest.mark.parametrize("B,H,kv,hd,nB,bs,n_blk",
+                         [(3, 4, 2, 32, 12, 8, 4),
+                          (2, 8, 8, 64, 10, 16, 2),
+                          (4, 4, 1, 128, 20, 8, 4)])
+@pytest.mark.parametrize("softcap", [0.0, 30.0])
+def test_paged_attention_matches_ref(B, H, kv, hd, nB, bs, n_blk, softcap):
+    q, kp, vp, bt, ln = _paged_case(B * 7 + H, B, H, kv, hd, nB, bs, n_blk)
+    out = ops.paged_attention(q, kp, vp, bt, ln, scale=hd ** -0.5,
+                              softcap=softcap)
+    exp = ref.paged_attention_ref(q, kp, vp, bt, ln, scale=hd ** -0.5,
+                                  softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_paged_ref_matches_contiguous_attention():
+    """The gather-based paged reference on an IDENTITY table equals
+    masked dense attention over the same contiguous K/V — ties the
+    paged oracle back to the existing flash oracle."""
+    B, S, H, kv, hd, bs = 2, 32, 4, 2, 32, 8
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, 1, H, hd)) * 0.5
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, kv, hd)) * 0.5
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, kv, hd)) * 0.5
+    # chop row 0's K/V into pages 0..3, row 1's into 4..7
+    kp = k.reshape(B * S // bs, bs, kv, hd)
+    vp = v.reshape(B * S // bs, bs, kv, hd)
+    bt = jnp.asarray(np.arange(B * S // bs, dtype=np.int32).reshape(B, -1))
+    ln = jnp.full((B,), S, jnp.int32)
+    out = ref.paged_attention_ref(q[:, 0], kp, vp, bt, ln, scale=hd ** -0.5)
+    # independent oracle: explicit full softmax over the contiguous K/V
+    qg = q[:, 0].reshape(B, kv, H // kv, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k.astype(jnp.float32)) * hd ** -0.5
+    p = jax.nn.softmax(s, axis=-1)
+    expect = jnp.einsum("bkgt,btkd->bkgd", p,
+                        v.astype(jnp.float32)).reshape(B, H, hd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-3, atol=2e-3)

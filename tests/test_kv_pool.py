@@ -1,0 +1,227 @@
+"""Paged KV-cache: block pool unit tests + engine capacity semantics.
+
+The pool tests are pure host-side allocator checks; the engine tests
+assert the tentpole property — the memory ceiling is tokens in flight,
+not ``max_slots x max_len`` strips — and that exhaustion degrades into
+preempt-or-queue instead of deadlock or divergence.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.serving import (EdgeServingEngine, KVBlockPool, PoolExhausted,
+                           Request, ServeConfig, blocks_for_tokens)
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+
+def test_alloc_free_roundtrip():
+    pool = KVBlockPool(8, 16)
+    a = pool.alloc(3)
+    assert len(a) == len(set(a)) == 3
+    assert pool.num_free == 5 and pool.num_used == 3
+    pool.free(a)
+    assert pool.num_free == 8 and pool.num_used == 0
+
+
+def test_alloc_exhaustion_is_atomic():
+    pool = KVBlockPool(4, 16)
+    pool.alloc(3)
+    with pytest.raises(PoolExhausted):
+        pool.alloc(2)           # only 1 free
+    assert pool.num_free == 1   # failed alloc takes nothing
+    assert len(pool.alloc(1)) == 1
+
+
+def test_refcount_shared_pages():
+    pool = KVBlockPool(4, 16)
+    (b,) = pool.alloc(1)
+    pool.incref([b])
+    assert pool.refcount(b) == 2
+    pool.free([b])
+    assert pool.num_free == 3   # still held by the second owner
+    pool.free([b])
+    assert pool.num_free == 4
+    with pytest.raises(ValueError):
+        pool.free([b])          # double free
+    with pytest.raises(ValueError):
+        pool.incref([b])        # incref on unallocated
+
+
+def test_fragmentation_free_reuse():
+    """Interleaved alloc/free can never strand capacity: whatever the
+    churn pattern, a full-pool allocation still succeeds afterwards."""
+    pool = KVBlockPool(6, 16)
+    rng = np.random.default_rng(0)
+    held = []
+    for _ in range(200):
+        if held and (pool.num_free == 0 or rng.random() < 0.5):
+            pool.free([held.pop(rng.integers(len(held)))])
+        else:
+            held.extend(pool.alloc(1))
+    pool.free(held)
+    assert sorted(pool.alloc(6)) == list(range(6))  # every page usable
+
+
+def test_blocks_for_tokens():
+    assert blocks_for_tokens(0, 16) == 0
+    assert blocks_for_tokens(1, 16) == 1
+    assert blocks_for_tokens(16, 16) == 1
+    assert blocks_for_tokens(17, 16) == 2
+
+
+# ---------------------------------------------------------------------------
+# engine capacity semantics
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("gemma3-1b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _req(uid, n=5, **kw):
+    rng = np.random.default_rng(uid)
+    return Request(uid=uid, prompt=rng.integers(0, 64, n, dtype=np.int32),
+                   **kw)
+
+
+def test_paged_admits_more_than_dense_budget(setup):
+    """Same KV-byte budget, block_size=16: a dense engine fits exactly
+    2 max_len strips (8 blocks / 4 per strip); the paged engine runs 6
+    short requests CONCURRENTLY on those same bytes."""
+    cfg, params = setup
+    dense_slots = 2
+    eng = EdgeServingEngine(cfg, params, ServeConfig(
+        max_slots=6, max_len=64, prefill_buckets=(8,),
+        kv_block_size=16, kv_pool_blocks=dense_slots * (64 // 16)))
+    for uid in range(6):
+        eng.submit(_req(uid, max_new_tokens=4))
+    done = eng.run_until_drained()
+    assert len(done) == 6
+    assert all(len(r.generated) == 4 for r in done)
+    assert eng.peak_active == 6 > dense_slots
+    assert eng.exhaust_preempts == 0        # no pressure at this length
+
+
+def test_pool_pressure_preempts_not_deadlocks(setup):
+    """4 tenants whose pages overflow a 5-page pool: boundary crossings
+    exhaust the pool; the engine must preempt-or-queue (pages detached)
+    and still drain with output identical to an unpressured run.
+    Staggered lengths keep finishes freeing pages in time, so only the
+    bit-exact detach/resume path fires (reclaims == 0 asserts that —
+    forced reclaim re-prefills and is only approximately identical, see
+    test_forced_reclaim_drains)."""
+    cfg, params = setup
+
+    def run(pool_blocks):
+        eng = EdgeServingEngine(cfg, params, ServeConfig(
+            max_slots=4, max_len=64, prefill_buckets=(8,),
+            kv_block_size=16, kv_pool_blocks=pool_blocks))
+        for uid in range(4):
+            eng.submit(_req(uid, n=6, max_new_tokens=12 + 6 * uid))
+        done = eng.run_until_drained()
+        return eng, {r.uid: tuple(r.generated) for r in done}
+
+    ample_eng, ample = run(16)
+    tight_eng, tight = run(5)
+    assert ample_eng.exhaust_preempts == 0
+    assert tight_eng.exhaust_preempts > 0   # pressure really happened
+    assert tight_eng.reclaims == 0          # only bit-exact paths fired
+    assert len(tight) == 4
+    assert tight == ample                   # greedy output unchanged
+
+
+def test_forced_reclaim_drains(setup):
+    """Worst case: every tenant stalls on the SAME boundary step, all
+    pages end up held by detached requests, and nothing can run.  The
+    engine must force-reclaim a holder (re-prefill its context) and
+    still drain everyone to their full token budget — liveness, not
+    bit-exactness, is the contract on this escape hatch."""
+    cfg, params = setup
+    eng = EdgeServingEngine(cfg, params, ServeConfig(
+        max_slots=4, max_len=64, prefill_buckets=(8,),
+        kv_block_size=16, kv_pool_blocks=4))
+    for uid in range(4):
+        eng.submit(_req(uid, n=6, max_new_tokens=30))
+    done = eng.run_until_drained()
+    assert len(done) == 4
+    assert all(len(r.generated) == 30 for r in done)
+    assert eng.exhaust_preempts > 0 and eng.reclaims > 0
+    assert eng.pool.num_free == eng.pool.num_blocks   # nothing leaked
+
+
+def test_drop_saved_folds_generated_once(setup):
+    """A request force-reclaimed TWICE must not see its first batch of
+    generated tokens duplicated in the replayed context."""
+    cfg, params = setup
+    eng = EdgeServingEngine(cfg, params, ServeConfig(
+        max_slots=2, max_len=64, prefill_buckets=(8,), kv_block_size=16))
+    r = _req(0, n=4)
+    base = list(r.prompt)
+    r.generated = [7, 8]
+    r.saved_state = {"blocks": [], "pos": 6, "pending": None, "last_tok": 8}
+    eng._drop_saved(r)
+    assert list(r.prompt) == base + [7, 8]
+    r.generated = [7, 8, 9]          # one more token after re-admission
+    r.saved_state = {"blocks": [], "pos": 7, "pending": None, "last_tok": 9}
+    eng._drop_saved(r)
+    assert list(r.prompt) == base + [7, 8, 9]   # no duplicated [7, 8]
+
+
+def test_submit_rejects_request_larger_than_pool(setup):
+    cfg, params = setup
+    eng = EdgeServingEngine(cfg, params, ServeConfig(
+        max_slots=2, max_len=64, prefill_buckets=(8,),
+        kv_block_size=16, kv_pool_blocks=2))   # 32 tokens of pages
+    with pytest.raises(ValueError, match="KV blocks"):
+        eng.submit(_req(0, n=30, max_new_tokens=20))
+
+
+def test_paged_matches_dense_engine_with_sampling(setup):
+    """paged=True vs paged=False on mixed-length traffic (padded +
+    chunked prefill) with temperature/top-k sampling: identical token
+    streams — the block-table decode is bit-for-bit the dense path."""
+    cfg, params = setup
+
+    def run(paged):
+        eng = EdgeServingEngine(cfg, params, ServeConfig(
+            max_slots=3, max_len=96, prefill_buckets=(8, 16),
+            temperature=0.8, top_k=8, seed=7, paged=paged))
+        for uid, n in enumerate([5, 17, 33]):
+            eng.submit(_req(uid, n=n, max_new_tokens=6))
+        return {r.uid: tuple(r.generated) for r in eng.run_until_drained()}
+
+    assert run(paged=True) == run(paged=False)
+
+
+def test_block_tables_shrink_on_finish(setup):
+    """Pages are released eagerly at _finish: after draining, the pool
+    is back to fully free and every table row is cleared."""
+    cfg, params = setup
+    eng = EdgeServingEngine(cfg, params, ServeConfig(
+        max_slots=2, max_len=64, prefill_buckets=(8,), kv_block_size=16))
+    for uid in range(3):
+        eng.submit(_req(uid, max_new_tokens=3))
+    eng.run_until_drained()
+    assert eng.pool.num_free == eng.pool.num_blocks
+    assert (eng.block_tables == -1).all()
+
+
+def test_ssm_and_hybrid_have_zero_pool_demand():
+    """Families with no global KV layers run the dense path outright
+    even when paged is requested — O(1)/ring state has nothing to page."""
+    for arch in ("mamba2-370m", "zamba2-7b"):
+        cfg = get_smoke_config(arch)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        eng = EdgeServingEngine(cfg, params, ServeConfig(
+            max_slots=2, max_len=64, prefill_buckets=(8,), paged=True))
+        assert eng.paged is False and eng.pool is None
+        eng.submit(_req(0, max_new_tokens=4))
+        done = eng.run_until_drained()
+        assert len(done) == 1 and len(done[0].generated) == 4

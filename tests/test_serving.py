@@ -111,6 +111,21 @@ def test_insert_slot_axes_discovery(setup):
     assert float(k[0, 0, 0].sum()) == 0.0
 
 
+def test_cache_batch_axes_immune_to_dim_collisions(setup):
+    """Regression for the sentinel-collision bug: axis discovery used a
+    magic batch size (7777) and `shape.index(sentinel)`, which picks the
+    WRONG axis whenever any other cache dimension equals the sentinel.
+    The two-probe diff is collision-proof: every discovered axis must
+    index the true batch dim even when max_len == old sentinel."""
+    from functools import partial
+    cfg, _ = setup
+    for max_len in (7777, 3, 5):    # old sentinel + the probe values
+        axes = cache_batch_axes(cfg, max_len)
+        shapes = jax.eval_shape(partial(M.init_cache, cfg, 4, max_len))
+        ok = jax.tree.map(lambda s, a: s.shape[a] == 4, shapes, axes)
+        assert all(jax.tree.leaves(ok)), max_len
+
+
 def test_preempt_preserves_kv(setup):
     """Preemption carries the slot's cache onto the request: resumed
     decode is token-for-token identical to an uninterrupted run, the
@@ -134,6 +149,66 @@ def test_preempt_preserves_kv(setup):
     done = eng.run_until_drained()
     assert len(eng._prefills) == n_prefills  # no re-prefill happened
     assert tuple(done[-1].generated) == baseline
+
+
+def test_preempt_during_catchup_resumes_exactly(setup):
+    """Preempting a slot while its chunked-prefill catch-up is still
+    consuming the prompt (pending non-empty) must save the unconsumed
+    remainder; re-submission continues token-for-token identical to an
+    uninterrupted run, with no new prefill compile."""
+    cfg, params = setup
+    scfg = ServeConfig(max_slots=1, max_len=96, prefill_buckets=(8, 16))
+
+    eng0 = EdgeServingEngine(cfg, params, scfg)
+    eng0.submit(_req(0, n=33, max_new_tokens=6))   # 33 > largest bucket
+    baseline = [tuple(r.generated) for r in eng0.run_until_drained()][0]
+
+    eng = EdgeServingEngine(cfg, params, scfg)
+    eng.submit(_req(0, n=33, max_new_tokens=6))
+    eng.step()
+    eng.step()                                     # mid catch-up
+    assert eng.pending[0] is not None and eng.pending[0].size
+    req = eng.preempt(0)
+    assert req.saved_state["pending"].size > 0     # remainder saved
+    assert len(req.generated) == 0                 # nothing sampled yet
+    n_prefills = len(eng._prefills)
+    eng.submit(req)
+    done = eng.run_until_drained()
+    assert len(eng._prefills) == n_prefills        # no re-prefill
+    assert tuple(done[-1].generated) == baseline
+
+
+def test_submit_rejects_exhausted_resume(setup):
+    """A saved state with no room left (pos/pending at the max_len
+    wall, or nothing left to generate) is rejected at submit instead of
+    burning a prefill-free slot for zero new tokens."""
+    cfg, params = setup
+    eng = EdgeServingEngine(cfg, params,
+                            ServeConfig(max_slots=1, max_len=32,
+                                        prefill_buckets=(8,)))
+    r = _req(0, max_new_tokens=4)
+    r.saved_state = {"pos": 31, "pending": None, "last_tok": 1}
+    with pytest.raises(ValueError, match="zero new tokens"):
+        eng.submit(r)
+    r = _req(1, max_new_tokens=4)
+    r.saved_state = {"pos": 20, "pending": np.arange(11, dtype=np.int32),
+                     "last_tok": 1}
+    with pytest.raises(ValueError, match="zero new tokens"):
+        eng.submit(r)                              # catch-up can't fit
+    r = _req(2, max_new_tokens=2)
+    r.generated = [3, 4]
+    r.saved_state = {"pos": 9, "pending": None, "last_tok": 4}
+    with pytest.raises(ValueError, match="nothing left"):
+        eng.submit(r)
+    # a healthy resume at the same positions is still accepted
+    eng2 = EdgeServingEngine(cfg, params,
+                             ServeConfig(max_slots=1, max_len=32,
+                                         prefill_buckets=(8,)))
+    eng2.submit(_req(3, max_new_tokens=4))
+    eng2.step()
+    ok = eng2.preempt(0)
+    eng2.submit(ok)
+    assert eng2.run_until_drained()
 
 
 def test_per_request_sampling_params(setup):
