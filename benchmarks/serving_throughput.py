@@ -6,9 +6,12 @@ one queue — prompt lengths deliberately NOT bucket-aligned, so this
 exercises padded exact admission AND chunked (catch-up) prefill.
 Derived values: aggregate generated tokens/sec, p50/p99 TTFT (submit ->
 first generated token, queueing included), plus the paged-KV admission
-numbers: peak concurrent requests and peak pool pages in flight, and a
+numbers: peak concurrent requests and peak pool pages in flight, a
 same-KV-byte-budget demo showing the paged engine admitting more
-concurrent tenants than ``max_slots`` dense strips would allow.
+concurrent tenants than ``max_slots`` dense strips would allow, and a
+shared-prefix scenario (N users, one household system prompt, on a
+fully-paged arch) reporting radix prefix-cache hit-rate and TTFT on
+cache hits vs a cold prefill.
 
   PYTHONPATH=src python -m benchmarks.serving_throughput [--requests N]
       [--write-baseline PATH] [--check PATH]
@@ -31,6 +34,9 @@ from repro.models import model as M
 from repro.serving import EdgeServingEngine, Request, ServeConfig
 
 ARCH = "gemma3-1b"
+# fully-paged arch for the shared-prefix scenario (gemma's local-ring
+# layers are not prefix-sharable — see model.prefix_sharable)
+SHARED_ARCH = "phi3-medium-14b"
 # (lo, hi) prompt-length bands of the traffic mix — 9..97 crosses every
 # bucket boundary below and the largest band exceeds the largest bucket
 _BANDS = ((4, 12), (20, 40), (70, 100))
@@ -43,7 +49,9 @@ _SCFG = ServeConfig(max_slots=4, max_len=192, prefill_buckets=(16, 32, 64),
 MIN_THROUGHPUT_RATIO = 0.25
 # deterministic fields a baseline comparison must reproduce exactly
 EXACT_FIELDS = ("requests", "decode_steps", "tokens", "peak_active",
-                "demo_dense_slots", "demo_paged_concurrent")
+                "demo_dense_slots", "demo_paged_concurrent",
+                "shared_requests", "shared_hits", "shared_hit_blocks",
+                "shared_tokens")
 
 
 def _workload(n_requests: int, vocab: int, seed: int = 0):
@@ -83,6 +91,63 @@ def _admission_demo(cfg, params, seed: int = 0) -> dict:
         "demo_budget_blocks": budget_blocks,
         "demo_paged_concurrent": int(eng.peak_active),
         "demo_peak_pool_used": int(eng.peak_pool_used),
+    }
+
+
+def _shared_prefix_demo(seed: int = 0, n_users: int = 8) -> dict:
+    """Household shared-prefix traffic: N users whose prompts start
+    with the same system prompt.  The first user prefills it cold and
+    its chain lands in the radix prefix cache; every later user HITS,
+    shares the prefix pages by reference and prefills only its own
+    tail — reported as cache hit-rate and TTFT cold vs hit (all
+    variants pre-warmed on a throwaway system prompt, so the times are
+    serving latency, not XLA compiles)."""
+    cfg = get_smoke_config(SHARED_ARCH)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = EdgeServingEngine(cfg, params, ServeConfig(
+        max_slots=4, max_len=192, prefill_buckets=(16, 32, 64),
+        prefix_cache=True))
+    rng = np.random.default_rng(seed)
+    sys_warm = rng.integers(0, cfg.vocab_size, 48, dtype=np.int32)
+    sys_meas = rng.integers(0, cfg.vocab_size, 48, dtype=np.int32)
+
+    def user(uid, sys_prompt):
+        tail = np.random.default_rng(1000 + uid).integers(
+            0, cfg.vocab_size, 8, dtype=np.int32)
+        return Request(uid=uid, prompt=np.concatenate([sys_prompt, tail]),
+                       max_new_tokens=8)
+
+    def serve(req):
+        """Submit + drain alone (clean TTFT, no queueing)."""
+        t0 = time.perf_counter()
+        eng.submit(req)
+        ttft = None
+        while eng.queue or eng.active.any():
+            eng.drain_step()
+            if ttft is None and req.generated:
+                ttft = (time.perf_counter() - t0) * 1e3
+        return ttft
+
+    # warm both compile variants (cold bucket + hit suffix bucket)
+    serve(user(900, sys_warm))
+    serve(user(901, sys_warm))
+    h0, m0 = eng.prefix_cache.hits, eng.prefix_cache.misses
+    hb0 = eng.prefix_cache.hit_blocks
+    tok0 = sum(len(r.generated) for r in eng.completed)
+
+    ttft_cold = serve(user(0, sys_meas))
+    ttft_hits = [serve(user(uid, sys_meas)) for uid in range(1, n_users)]
+    eng.pool.assert_consistent()
+    return {
+        "shared_requests": n_users,
+        "shared_hits": eng.prefix_cache.hits - h0,
+        "shared_misses": eng.prefix_cache.misses - m0,
+        "shared_hit_blocks": eng.prefix_cache.hit_blocks - hb0,
+        "shared_tokens": sum(len(r.generated)
+                             for r in eng.completed) - tok0,
+        "shared_ttft_cold_ms": float(ttft_cold),
+        "shared_ttft_hit_p50_ms": float(np.percentile(ttft_hits, 50)),
+        "shared_ttft_hit_p99_ms": float(np.percentile(ttft_hits, 99)),
     }
 
 
@@ -139,6 +204,7 @@ def run(n_requests: int = 12, seed: int = 0) -> dict:
         "pool_blocks": eng.pool.num_blocks if eng.paged else 0,
     }
     out.update(_admission_demo(cfg, params, seed))
+    out.update(_shared_prefix_demo(seed))
     return out
 
 
@@ -181,6 +247,9 @@ def bench():
         ("serving.ttft_p50_ms", us, r["ttft_p50_ms"]),
         ("serving.ttft_p99_ms", us, r["ttft_p99_ms"]),
         ("serving.peak_active", us, r["peak_active"]),
+        ("serving.shared_ttft_cold_ms", us, r["shared_ttft_cold_ms"]),
+        ("serving.shared_ttft_hit_p50_ms", us,
+         r["shared_ttft_hit_p50_ms"]),
     ]
 
 

@@ -176,7 +176,7 @@ def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def decode_step_paged(cfg: ModelConfig, params: Params, cache: Params,
-                      tokens, pos, block_tables):
+                      tokens, pos, block_tables, use_pallas: bool = False):
     """Paged twin of ``decode_step``: self-attn KV via block tables."""
     B = tokens.shape[0]
     pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
@@ -187,7 +187,7 @@ def decode_step_paged(cfg: ModelConfig, params: Params, cache: Params,
         lp, sc, ck, cv = inp
         a, sc2 = L.attention_decode_paged(
             cfg, lp["self_attn"], L.layernorm(lp["ln1"], h, cfg.norm_eps),
-            sc, pos, block_tables)
+            sc, pos, block_tables, use_pallas=use_pallas)
         h = h + a
         c, _ = L.attention_decode(cfg, lp["cross_attn"],
                                   L.layernorm(lp["ln2"], h, cfg.norm_eps),
@@ -233,3 +233,69 @@ def prefill(cfg: ModelConfig, params: Params, tokens, max_len, *,
     x = x[:, -1:] if n is None else gather_last(x, n)
     x = L.layernorm(params["dec_ln"], x, cfg.norm_eps)
     return L.unembed(cfg, params["embed"], {}, x), cache
+
+
+def prefill_paged(cfg: ModelConfig, params: Params, tokens, max_len,
+                  cache, *, slots, write_tables=None, ctx_tables=None,
+                  ctx_len=None, true_len=None, audio_embeds=None,
+                  use_flash=False):
+    """Admission prefill writing straight into the engine cache:
+    decoder self-attn K/V into pages (or dense rows at ``slots``),
+    cross K/V — encoder-length, token-position-independent — into its
+    dense per-slot rows.
+
+    Prefix-cache hits are sound here because a suffix prefill rebuilds
+    the FULL cross K/V from ``audio_embeds`` regardless of which
+    decoder tokens it runs, and self-attn prefix K/V comes from pages;
+    the engine keys chains under the audio digest so only requests with
+    identical audio share (decoder K/V depends on the encoder output
+    through cross-attention).
+    """
+    from repro.models.transformer import (broadcast_true_len, gather_last,
+                                          scatter_cache_rows, _fill_global)
+    enc_out = encode(cfg, params, audio_embeds)
+    B, Sq = tokens.shape
+    n = broadcast_true_len(true_len, B)
+    off = (jnp.zeros((B,), jnp.int32) if ctx_len is None
+           else jnp.asarray(ctx_len, jnp.int32))
+    positions = off[:, None] + jnp.arange(Sq, dtype=jnp.int32)[None, :]
+    x = L.embed(cfg, params["embed"], tokens)
+    x = x + params["pos_table"][positions].astype(x.dtype)
+    paged = write_tables is not None
+    slots = jnp.asarray(slots, jnp.int32)
+    new_cache = dict(cache)
+
+    if paged:
+        def body(h, inp):
+            lp, pg = inp
+            a, pg2 = L.attention_prefill_paged(
+                cfg, lp["self_attn"],
+                L.layernorm(lp["ln1"], h, cfg.norm_eps), positions, pg,
+                write_tables, ctx_tables, ctx_len, use_flash=use_flash)
+            h = h + a
+            c, ck, cv = L.attention_fwd(
+                cfg, lp["cross_attn"],
+                L.layernorm(lp["ln2"], h, cfg.norm_eps), positions,
+                is_global=True, kv_x=enc_out)
+            h = h + c
+            m = L.gelu_mlp(lp["mlp"], L.layernorm(lp["ln3"], h, cfg.norm_eps))
+            return h + m, (pg2, ck, cv)
+        x, (pages, cks, cvs) = lax.scan(body, x, (params["decoder"],
+                                                  cache["self"]))
+        new_cache["self"] = pages
+    else:
+        def body(h, lp):
+            h, kvs = _dec_block_fwd(cfg, lp, h, positions, enc_out,
+                                    use_flash=use_flash)
+            return h, kvs
+        x, (ks, vs, cks, cvs) = lax.scan(body, x, params["decoder"])
+        rows = jax.vmap(
+            lambda k, v: _fill_global(cfg, B, max_len, k, v, n))(ks, vs)
+        new_cache["self"] = scatter_cache_rows(cache["self"], rows,
+                                               slots, 1)
+    new_cache["cross_k"] = L.scatter_rows(cache["cross_k"], cks, slots, 1)
+    new_cache["cross_v"] = L.scatter_rows(cache["cross_v"], cvs, slots, 1)
+
+    x = x[:, -1:] if n is None else gather_last(x, n)
+    x = L.layernorm(params["dec_ln"], x, cfg.norm_eps)
+    return L.unembed(cfg, params["embed"], {}, x), new_cache

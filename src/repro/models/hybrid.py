@@ -127,9 +127,33 @@ def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def decode_step_paged(cfg: ModelConfig, params: Params, cache: Params,
-                      tokens, pos, block_tables):
-    del block_tables  # ring + SSM state only; nothing paged
+                      tokens, pos, block_tables, use_pallas: bool = False):
+    del block_tables, use_pallas  # ring + SSM state only; nothing paged
     return decode_step(cfg, params, cache, tokens, pos)
+
+
+def prefill_paged(cfg: ModelConfig, params: Params, tokens, max_len,
+                  cache, *, slots, write_tables=None, ctx_tables=None,
+                  ctx_len=None, true_len=None, use_flash=False,
+                  use_kernel=False):
+    """Admission prefill fused with state insertion (SSM state + shared
+    ring rows at ``slots``).  Nothing here is paged or shareable — the
+    ring holds only the last W tokens and the recurrence is not
+    reconstructible from pages — so context is rejected."""
+    if write_tables is not None or ctx_tables is not None:
+        raise ValueError("hybrid has no paged KV and no shareable prefix")
+    logits, st = prefill(cfg, params, tokens, max_len, use_flash=use_flash,
+                         use_kernel=use_kernel, true_len=true_len)
+    slots = jnp.asarray(slots, jnp.int32)
+    new_cache = dict(cache)
+    new_cache["mamba"] = T.scatter_cache_rows(cache["mamba"], st["mamba"],
+                                              slots, 2)
+    new_cache["attn"] = T.scatter_cache_rows(cache["attn"], st["attn"],
+                                             slots, 1)
+    if "rem_mamba" in st:
+        new_cache["rem_mamba"] = T.scatter_cache_rows(
+            cache["rem_mamba"], st["rem_mamba"], slots, 1)
+    return logits, new_cache
 
 
 def prefill(cfg: ModelConfig, params: Params, tokens, max_len, *,

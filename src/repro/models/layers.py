@@ -161,6 +161,28 @@ def window_mask(s: int, t: int, window: int, q_offset=0) -> jnp.ndarray:
     return (kpos <= qpos) & (kpos > qpos - window)
 
 
+def _project_seq(cfg: ModelConfig, params, x, positions, *,
+                 is_global: bool, kv_x=None):
+    """Shared q/k/v projection + qk-norm + RoPE for the full-sequence
+    paths (``attention_fwd`` and the paged suffix prefill) — one
+    definition so both produce bit-identical projections."""
+    q = jnp.einsum("bsd,dhq->bshq", x, params["wq"].astype(x.dtype))
+    src = x if kv_x is None else kv_x
+    k = jnp.einsum("btd,dkq->btkq", src, params["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dkq->btkq", src, params["wv"].astype(x.dtype))
+
+    if cfg.use_qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+
+    if not cfg.use_abs_pos and kv_x is None:
+        theta = (cfg.rope_theta_global
+                 if (is_global and cfg.rope_theta_global) else cfg.rope_theta)
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
 def attention_fwd(cfg: ModelConfig, params, x, positions, *,
                   is_global: bool, kv_x=None, causal: bool = True,
                   use_flash: bool = False):
@@ -176,20 +198,8 @@ def attention_fwd(cfg: ModelConfig, params, x, positions, *,
     G = H // K
     scale = cfg.attn_scale if cfg.attn_scale is not None else hd ** -0.5
 
-    q = jnp.einsum("bsd,dhq->bshq", x, params["wq"].astype(x.dtype))
-    src = x if kv_x is None else kv_x
-    k = jnp.einsum("btd,dkq->btkq", src, params["wk"].astype(x.dtype))
-    v = jnp.einsum("btd,dkq->btkq", src, params["wv"].astype(x.dtype))
-
-    if cfg.use_qk_norm:
-        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
-        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
-
-    if not cfg.use_abs_pos and kv_x is None:
-        theta = (cfg.rope_theta_global
-                 if (is_global and cfg.rope_theta_global) else cfg.rope_theta)
-        q = apply_rope(q, positions, theta)
-        k = apply_rope(k, positions, theta)
+    q, k, v = _project_seq(cfg, params, x, positions,
+                           is_global=is_global, kv_x=kv_x)
 
     T = k.shape[1]
     qg = q.reshape(B, S, K, G, hd)
@@ -460,10 +470,118 @@ def init_kv_pages(cfg: ModelConfig, num_blocks: int, block_size: int,
     }
 
 
+def scatter_kv_pages(pages, k, v, write_tables):
+    """Write a per-row K/V strip straight into the shared page pool.
+
+    pages: dict(k=(nB, bs, K, hd), v=...); k, v: (B, T, K, hd);
+    write_tables: (B, n_wblk) int32 physical page per covered logical
+    block (-1 = unallocated -> write dropped).  T is right-padded up to
+    ``n_wblk * bs`` — pad K/V lands beyond each row's true length and is
+    positionally masked at read time, exactly like the dense path's
+    ``slots=-1`` padding.
+    """
+    nB, bs = pages["k"].shape[0], pages["k"].shape[1]
+    B, T = k.shape[0], k.shape[1]
+    n_wblk = write_tables.shape[1]
+    pad = n_wblk * bs - T
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, n_wblk, bs, *k.shape[2:])
+    vb = v.reshape(B, n_wblk, bs, *v.shape[2:])
+    tgt = jnp.where(write_tables >= 0, write_tables, nB)  # nB is OOB
+    return {
+        "k": pages["k"].at[tgt].set(kb.astype(pages["k"].dtype),
+                                    mode="drop"),
+        "v": pages["v"].at[tgt].set(vb.astype(pages["v"].dtype),
+                                    mode="drop"),
+    }
+
+
+def gather_kv_pages(pages, ctx_tables):
+    """Materialise the logical K/V view of a shared-prefix chain.
+
+    ctx_tables: (B, n_cblk) int32 physical pages (-1 pad rows gather
+    garbage the caller masks via ``ctx_len``).  Returns (k, v) each
+    (B, n_cblk * bs, K, hd).
+    """
+    nB, bs = pages["k"].shape[0], pages["k"].shape[1]
+    B = ctx_tables.shape[0]
+    bt = jnp.clip(ctx_tables, 0, nB - 1)
+    kg = pages["k"][bt].reshape(B, -1, *pages["k"].shape[2:])
+    vg = pages["v"][bt].reshape(B, -1, *pages["v"].shape[2:])
+    return kg, vg
+
+
+def scatter_rows(full, rows, slots, axis: int):
+    """Insert ``m`` single-request rows into a batched cache leaf in one
+    shot: ``full`` has the slot/batch dimension at ``axis``; ``rows``
+    carries the same leaf with ``m`` entries there; ``slots``: (m,)
+    int32 slot indices (distinct)."""
+    idx = (slice(None),) * axis + (slots,)
+    return full.at[idx].set(rows.astype(full.dtype))
+
+
+def attention_prefill_paged(cfg: ModelConfig, params, x, positions, pages,
+                            write_tables, ctx_tables=None, ctx_len=None, *,
+                            use_flash: bool = False):
+    """Prefill attention for a GLOBAL layer that writes K/V straight
+    into the paged pool — and, on a prefix-cache hit, attends the shared
+    prefix's pages instead of recomputing them.
+
+    x: (B, S, d) suffix activations; positions: (B, S) ABSOLUTE
+    positions (``ctx_len + arange(S)``); pages: this layer's pool dict;
+    write_tables: (B, n_wblk) physical pages covering the suffix span
+    (suffix always starts at a block boundary — the radix cache matches
+    whole blocks only); ctx_tables/ctx_len: shared-prefix pages and
+    per-row valid context length, or None for a cold (no-context)
+    prefill.
+
+    Cold prefills delegate the compute to ``attention_fwd`` so the cold
+    paged admission is the exact same math as the dense-strip path.
+    Returns (out (B, S, d), new_pages).
+    """
+    B, S, d = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // K
+    scale = cfg.attn_scale if cfg.attn_scale is not None else hd ** -0.5
+
+    if ctx_tables is None:
+        o, k, v = attention_fwd(cfg, params, x, positions, is_global=True,
+                                use_flash=use_flash)
+        return o, scatter_kv_pages(pages, k, v, write_tables)
+
+    q, k, v = _project_seq(cfg, params, x, positions, is_global=True)
+    ck, cv = gather_kv_pages(pages, ctx_tables)
+    Tc = ck.shape[1]
+    # context part: logical positions [0, Tc) valid where < ctx_len
+    # (pad rows of a mixed-depth admission group mask out here);
+    # suffix part: plain causal within the suffix
+    ctx_ok = jnp.arange(Tc, dtype=jnp.int32)[None, :] < ctx_len[:, None]
+    mask = jnp.concatenate(
+        [jnp.broadcast_to(ctx_ok[:, None, :], (B, S, Tc)),
+         jnp.broadcast_to(causal_mask(S, S), (B, S, S))], axis=-1)
+    k_all = jnp.concatenate([ck.astype(x.dtype), k], axis=1)
+    v_all = jnp.concatenate([cv.astype(x.dtype), v], axis=1)
+    qg = q.reshape(B, S, K, G, hd)
+    out = attention_weights_and_out(qg, k_all, v_all,
+                                    mask[:, None, None], scale=scale,
+                                    softcap=cfg.attn_logit_softcap)
+    o = jnp.einsum("bshq,hqd->bsd", out.reshape(B, S, H, hd),
+                   params["wo"].astype(x.dtype))
+    return o, scatter_kv_pages(pages, k, v, write_tables)
+
+
 def attention_decode_paged(cfg: ModelConfig, params, x, cache, pos,
-                           block_tables):
+                           block_tables, *, use_pallas: bool = False):
     """Single-token decode against a paged KV pool (GLOBAL layers only —
     local ring-window layers stay dense at W, SSM state is O(1)).
+
+    ``use_pallas=True`` swaps the jnp gather read for the Pallas
+    ``kernels.flash_attention.paged_attention`` kernel (scalar-prefetched
+    block tables stream pages into VMEM — the logical K/V view is never
+    materialised in HBM); the write path and masking semantics are
+    identical, so the two reads agree to kernel accumulation tolerance.
 
     x: (B, 1, d); pos: (B,) int32 write positions.
     cache: dict(k=(num_blocks, bs, K, hd), v=...) — the shared page pool
@@ -497,6 +615,15 @@ def attention_decode_paged(cfg: ModelConfig, params, x, cache, pos,
         knew[:, 0].astype(cache["k"].dtype), mode="drop")
     vc = cache["v"].at[wphys, off].set(
         vnew[:, 0].astype(cache["v"].dtype), mode="drop")
+
+    if use_pallas:
+        from repro.kernels import ops as kernel_ops
+        out = kernel_ops.paged_attention(
+            q[:, 0], kc, vc, block_tables, pos + 1, scale=scale,
+            softcap=cfg.attn_logit_softcap)
+        o = jnp.einsum("bshq,hqd->bsd", out[:, None].astype(x.dtype),
+                       params["wo"].astype(x.dtype))
+        return o, {"k": kc, "v": vc}
 
     # gather the logical view: (B, n_blk*bs, K, hd)
     bt = jnp.clip(block_tables, 0, nB - 1)

@@ -12,6 +12,9 @@ Every family exposes the same five entry points, dispatched on
     init_paged_cache(cfg, b, max_len, nB, bs)  -> cache w/ paged global KV
     decode_step_paged(cfg, params, cache,
                       toks, pos, block_tables) -> (logits, cache)
+    prefill_paged(cfg, params, batch, max_len,
+                  cache, slots=..., ...)       -> (logits, cache)
+    prefix_sharable(cfg)                       -> bool (radix cache ok?)
 
 ``batch`` is a dict: always ``tokens``/``targets``; plus
 ``image_embeds`` (vlm) or ``audio_embeds`` (encdec) stub-frontend
@@ -164,13 +167,69 @@ def decode_step(cfg: ModelConfig, params: Params, cache, tokens, pos):
 
 
 def decode_step_paged(cfg: ModelConfig, params: Params, cache, tokens, pos,
-                      block_tables):
+                      block_tables, use_pallas: bool = False):
     """``decode_step`` against ``init_paged_cache``: global-layer KV is
     read/written through ``block_tables`` (B, n_blk) int32 (-1 =
     unallocated).  Token-for-token identical to the dense path when the
-    tables cover the same logical positions."""
+    tables cover the same logical positions.  ``use_pallas=True`` reads
+    pages through the scalar-prefetched Pallas ``paged_attention``
+    kernel instead of the jnp gather (TPU serving path)."""
     return family_module(cfg).decode_step_paged(cfg, params, cache, tokens,
-                                                pos, block_tables)
+                                                pos, block_tables,
+                                                use_pallas)
+
+
+def prefix_sharable(cfg: ModelConfig) -> bool:
+    """Can finished chains be shared through the radix prefix cache?
+
+    True iff every token-position-dependent piece of the decode state
+    lives in KV pages (reconstructible for any block-aligned prefix):
+    fully-global transformers/VLMs (``pattern_period <= 1``), MoE (all
+    attention global) and enc-dec (cross K/V is rebuilt from the audio
+    by any suffix prefill; chains are keyed under the audio digest).
+    Local-ring (gemma-pattern) and recurrent (ssm/hybrid) state cannot
+    be recovered from pages, so those configs never share — the radix
+    cache simply stays disabled and admission is the cold path.
+    """
+    if cfg.family in ("dense", "vlm"):
+        return cfg.pattern_period <= 1
+    return cfg.family in ("moe", "encdec")
+
+
+def prefill_paged(cfg: ModelConfig, params: Params, batch: dict, max_len,
+                  cache, *, slots, write_tables=None, ctx_tables=None,
+                  ctx_len=None, true_len=None, use_flash: bool = False):
+    """Admission prefill fused with cache insertion (the paged-serving
+    twin of ``prefill``): prompt K/V is written DIRECTLY into the
+    engine's cache — global-layer K/V into the shared page pool through
+    ``write_tables`` (m, n_wblk), per-slot dense leaves (local rings,
+    SSM state, cross K/V) at ``slots`` (m,).  With ``ctx_tables`` /
+    ``ctx_len`` the rows are radix-cache-hit SUFFIXES that attend the
+    shared prefix's pages and skip its prefill FLOPs entirely (only
+    legal when ``prefix_sharable(cfg)``).  ``write_tables=None`` is the
+    dense engine's fused admission.  Returns (last-true-token logits,
+    updated cache)."""
+    tokens = batch["tokens"]
+    kw = dict(slots=slots, write_tables=write_tables,
+              ctx_tables=ctx_tables, ctx_len=ctx_len, true_len=true_len)
+    if cfg.family == "encdec":
+        return encdec.prefill_paged(cfg, params, tokens, max_len, cache,
+                                    audio_embeds=batch["audio_embeds"],
+                                    use_flash=use_flash, **kw)
+    if cfg.family == "vlm":
+        return vlm.prefill_paged(cfg, params, tokens, max_len, cache,
+                                 image_embeds=batch.get("image_embeds"),
+                                 use_flash=use_flash, **kw)
+    if cfg.family == "ssm":
+        return ssm.prefill_paged(cfg, params, tokens, max_len, cache, **kw)
+    if cfg.family == "hybrid":
+        return hybrid.prefill_paged(cfg, params, tokens, max_len, cache,
+                                    use_flash=use_flash, **kw)
+    if cfg.family == "moe":
+        return moe.prefill_paged(cfg, params, tokens, max_len, cache,
+                                 use_flash=use_flash, **kw)
+    return transformer.prefill_paged(cfg, params, tokens, max_len, cache,
+                                     use_flash=use_flash, **kw)
 
 
 # ---------------------------------------------------------------------------

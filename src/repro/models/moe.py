@@ -198,15 +198,33 @@ def moe_block_decode(cfg: ModelConfig, p: Params, x, cache, pos):
 
 
 def moe_block_decode_paged(cfg: ModelConfig, p: Params, x, cache, pos,
-                           block_tables):
+                           block_tables, use_pallas: bool = False):
     _, norm = L.make_norm(cfg)
     h = norm(p["ln1"], x)
     a, new_cache = L.attention_decode_paged(cfg, p["attn"], h, cache, pos,
-                                            block_tables)
+                                            block_tables,
+                                            use_pallas=use_pallas)
     x = x + a
     h = norm(p["ln2"], x)
     m, _ = moe_mlp(cfg, p["moe"], h)
     return x + m, new_cache
+
+
+def moe_block_prefill_paged(cfg: ModelConfig, p: Params, x, positions,
+                            pages, write_tables, ctx_tables=None,
+                            ctx_len=None, *, use_flash=False,
+                            token_mask=None):
+    """``moe_block_fwd`` writing attention K/V straight into its page
+    pool (and reading a shared-prefix chain on a radix-cache hit)."""
+    _, norm = L.make_norm(cfg)
+    h = norm(p["ln1"], x)
+    a, new_pages = L.attention_prefill_paged(
+        cfg, p["attn"], h, positions, pages, write_tables, ctx_tables,
+        ctx_len, use_flash=use_flash)
+    x = x + a
+    h = norm(p["ln2"], x)
+    m, _ = moe_mlp(cfg, p["moe"], h, token_mask=token_mask)
+    return x + m, new_pages
 
 
 def forward(cfg: ModelConfig, params: Params, tokens, *, use_flash=False,
@@ -282,13 +300,14 @@ def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def decode_step_paged(cfg: ModelConfig, params: Params, cache: Params,
-                      tokens, pos, block_tables):
+                      tokens, pos, block_tables, use_pallas: bool = False):
     x = L.embed(cfg, params["embed"], tokens)
     new_cache = {}
     if cfg.first_dense_layers:
         def dbody(h, inp):
             lp, cc = inp
-            h, c2 = T.block_decode_paged(cfg, lp, h, cc, pos, block_tables)
+            h, c2 = T.block_decode_paged(cfg, lp, h, cc, pos, block_tables,
+                                         use_pallas)
             return h, c2
         x, dc = lax.scan(dbody, x, (params["dense_layers"],
                                     cache["dense_layers"]))
@@ -296,7 +315,8 @@ def decode_step_paged(cfg: ModelConfig, params: Params, cache: Params,
 
     def body(h, inp):
         lp, cc = inp
-        h, c2 = moe_block_decode_paged(cfg, lp, h, cc, pos, block_tables)
+        h, c2 = moe_block_decode_paged(cfg, lp, h, cc, pos, block_tables,
+                                       use_pallas)
         return h, c2
     x, mc = lax.scan(body, x, (params["moe_layers"], cache["moe_layers"]))
     new_cache["moe_layers"] = mc
@@ -338,3 +358,80 @@ def prefill(cfg: ModelConfig, params: Params, tokens, max_len, *,
     x = norm(params["final_norm"], x)
     logits = L.unembed(cfg, params["embed"], params["unembed"], x)
     return logits, cache
+
+
+def prefill_paged(cfg: ModelConfig, params: Params, tokens, max_len,
+                  cache, *, slots, write_tables=None, ctx_tables=None,
+                  ctx_len=None, true_len=None, use_flash=False):
+    """Admission prefill writing K/V straight into the engine cache
+    (all MoE attention layers are global => fully paged, so radix
+    prefix-cache context is supported).  See ``T.prefill_paged``.
+
+    MoE caveat: expert CAPACITY derives from the static suffix token
+    count, so under capacity pressure a hit-admitted suffix can drop a
+    different token set than the same tokens inside a cold full-prompt
+    prefill — the usual static-shape carve-out (``serving/__init__``);
+    with capacity_factor high enough that nothing drops, hits are
+    bit-exact like every other family.
+    """
+    x = L.embed(cfg, params["embed"], tokens)
+    B, S, _ = x.shape
+    n = T.broadcast_true_len(true_len, B)
+    token_mask = (None if n is None else
+                  jnp.arange(S, dtype=jnp.int32)[None, :] < n[:, None])
+    off = (jnp.zeros((B,), jnp.int32) if ctx_len is None
+           else jnp.asarray(ctx_len, jnp.int32))
+    positions = off[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    paged = write_tables is not None
+    slots = jnp.asarray(slots, jnp.int32)
+    new_cache = dict(cache)
+
+    if cfg.first_dense_layers:
+        if paged:
+            def dbody(h, inp):
+                lp, pg = inp
+                h, pg2 = T.block_prefill_paged(
+                    cfg, lp, h, positions, pg, write_tables, ctx_tables,
+                    ctx_len, use_flash=use_flash)
+                return h, pg2
+            x, dpages = lax.scan(dbody, x, (params["dense_layers"],
+                                            cache["dense_layers"]))
+            new_cache["dense_layers"] = dpages
+        else:
+            def dbody(h, lp):
+                h, kv = T.block_prefill(cfg, lp, h, positions,
+                                        is_global=True, use_flash=use_flash)
+                return h, kv
+            x, (ks, vs) = lax.scan(dbody, x, params["dense_layers"])
+            rows = jax.vmap(lambda k, v: T._fill_global(
+                cfg, B, max_len, k, v, n))(ks, vs)
+            new_cache["dense_layers"] = T.scatter_cache_rows(
+                cache["dense_layers"], rows, slots, 1)
+
+    if paged:
+        def body(h, inp):
+            lp, pg = inp
+            h, pg2 = moe_block_prefill_paged(
+                cfg, lp, h, positions, pg, write_tables, ctx_tables,
+                ctx_len, use_flash=use_flash, token_mask=token_mask)
+            return h, pg2
+        x, mpages = lax.scan(body, x, (params["moe_layers"],
+                                       cache["moe_layers"]))
+        new_cache["moe_layers"] = mpages
+    else:
+        def body(h, lp):
+            h, _, kv = moe_block_fwd(cfg, lp, h, positions,
+                                     use_flash=use_flash,
+                                     token_mask=token_mask)
+            return h, kv
+        x, (ks, vs) = lax.scan(body, x, params["moe_layers"])
+        rows = jax.vmap(lambda k, v: T._fill_global(
+            cfg, B, max_len, k, v, n))(ks, vs)
+        new_cache["moe_layers"] = T.scatter_cache_rows(
+            cache["moe_layers"], rows, slots, 1)
+
+    _, norm = L.make_norm(cfg)
+    x = x[:, -1:] if n is None else T.gather_last(x, n)
+    x = norm(params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], params["unembed"], x)
+    return logits, new_cache

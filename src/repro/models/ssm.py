@@ -286,9 +286,26 @@ def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def decode_step_paged(cfg: ModelConfig, params: Params, cache: Params,
-                      tokens, pos, block_tables):
-    del block_tables  # no attention, nothing paged
+                      tokens, pos, block_tables, use_pallas: bool = False):
+    del block_tables, use_pallas  # no attention, nothing paged
     return decode_step(cfg, params, cache, tokens, pos)
+
+
+def prefill_paged(cfg: ModelConfig, params: Params, tokens, max_len,
+                  cache, *, slots, write_tables=None, ctx_tables=None,
+                  ctx_len=None, true_len=None, use_kernel=False):
+    """Admission prefill fused with state insertion: the O(1) SSM state
+    rows land directly in the engine cache at ``slots``.  There are no
+    KV pages and no shareable prefix state (the recurrence is not
+    reconstructible from pages), so context is rejected."""
+    if write_tables is not None or ctx_tables is not None:
+        raise ValueError("ssm has no paged KV and no shareable prefix")
+    from repro.models.transformer import scatter_cache_rows
+    logits, states = prefill(cfg, params, tokens, max_len,
+                             use_kernel=use_kernel, true_len=true_len)
+    slots = jnp.asarray(slots, jnp.int32)
+    return logits, dict(cache, layers=scatter_cache_rows(
+        cache["layers"], states["layers"], slots, 1))
 
 
 def decode_step(cfg: ModelConfig, params: Params, cache: Params, tokens, pos):

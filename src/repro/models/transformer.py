@@ -119,13 +119,14 @@ def block_decode(cfg: ModelConfig, p: Params, x, cache, pos, *, is_global):
 
 
 def block_decode_paged(cfg: ModelConfig, p: Params, x, cache, pos,
-                       block_tables):
+                       block_tables, use_pallas: bool = False):
     """``block_decode`` for a GLOBAL layer whose KV lives in the paged
     pool (``layers.attention_decode_paged``)."""
     _, norm = L.make_norm(cfg)
     h = norm(p["ln1"], x)
     a, new_cache = L.attention_decode_paged(cfg, p["attn"], h, cache, pos,
-                                            block_tables)
+                                            block_tables,
+                                            use_pallas=use_pallas)
     if cfg.sandwich_norms:
         a = norm(p["ln1_post"], a)
     x = x + a
@@ -134,6 +135,27 @@ def block_decode_paged(cfg: ModelConfig, p: Params, x, cache, pos,
     if cfg.sandwich_norms:
         m = norm(p["ln2_post"], m)
     return x + m, new_cache
+
+
+def block_prefill_paged(cfg: ModelConfig, p: Params, x, positions, pages,
+                        write_tables, ctx_tables=None, ctx_len=None, *,
+                        use_flash=False):
+    """``block_prefill`` for a GLOBAL layer writing K/V straight into
+    its page pool (and, on a prefix-cache hit, attending the shared
+    prefix pages) — see ``layers.attention_prefill_paged``."""
+    _, norm = L.make_norm(cfg)
+    h = norm(p["ln1"], x)
+    a, new_pages = L.attention_prefill_paged(
+        cfg, p["attn"], h, positions, pages, write_tables, ctx_tables,
+        ctx_len, use_flash=use_flash)
+    if cfg.sandwich_norms:
+        a = norm(p["ln1_post"], a)
+    x = x + a
+    h = norm(p["ln2"], x)
+    m = L.mlp(p["mlp"], h)
+    if cfg.sandwich_norms:
+        m = norm(p["ln2_post"], m)
+    return x + m, new_pages
 
 
 def _maybe_remat(fn, policy: Optional[str]):
@@ -279,14 +301,15 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params, tokens, pos):
 
 
 def trunk_decode_paged(cfg: ModelConfig, trunk: Params, cache: Params, x,
-                       pos, block_tables):
+                       pos, block_tables, use_pallas: bool = False):
     """``trunk_decode`` against ``init_paged_cache``: global layers read
     and write KV pages via the (B, n_blk) block table; local ring layers
     are unchanged."""
     if cfg.pattern_period <= 1:
         def body(h, inp):
             lp, c = inp
-            h, c2 = block_decode_paged(cfg, lp, h, c, pos, block_tables)
+            h, c2 = block_decode_paged(cfg, lp, h, c, pos, block_tables,
+                                       use_pallas)
             return h, c2
         x, new_c = lax.scan(body, x, (trunk["layers"], cache["layers"]))
         return x, {"layers": new_c}
@@ -300,7 +323,7 @@ def trunk_decode_paged(cfg: ModelConfig, trunk: Params, cache: Params, x,
         sp, sc = inp
         h, lc = lax.scan(local_body, h, (sp["local"], sc["local"]))
         h, gc = block_decode_paged(cfg, sp["global"], h, sc["global"], pos,
-                                   block_tables)
+                                   block_tables, use_pallas)
         return h, {"local": lc, "global": gc}
 
     x, new_super = lax.scan(super_body, x, (trunk["super"], cache["super"]))
@@ -312,11 +335,11 @@ def trunk_decode_paged(cfg: ModelConfig, trunk: Params, cache: Params, x,
 
 
 def decode_step_paged(cfg: ModelConfig, params: Params, cache: Params,
-                      tokens, pos, block_tables):
+                      tokens, pos, block_tables, use_pallas: bool = False):
     """Paged twin of ``decode_step``; ``block_tables``: (B, n_blk) int32."""
     x = L.embed(cfg, params["embed"], tokens)
     x, new_cache = trunk_decode_paged(cfg, params["trunk"], cache, x, pos,
-                                      block_tables)
+                                      block_tables, use_pallas)
     _, norm = L.make_norm(cfg)
     x = norm(params["final_norm"], x)
     logits = L.unembed(cfg, params["embed"], params["unembed"], x)
@@ -460,3 +483,129 @@ def prefill(cfg: ModelConfig, params: Params, tokens, max_len, *,
     x = norm(params["final_norm"], x)
     logits = L.unembed(cfg, params["embed"], params["unembed"], x)
     return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# paged prefill: admission writes straight into the engine cache
+# ---------------------------------------------------------------------------
+
+def scatter_cache_rows(full, rows, slots, axis: int):
+    """Scatter an ``m``-row cache subtree into the batched engine cache
+    at ``slots`` (every leaf shares the same batch ``axis``)."""
+    return jax.tree.map(
+        lambda f, r: L.scatter_rows(f, r, slots, axis), full, rows)
+
+
+def prefill_paged(cfg: ModelConfig, params: Params, tokens, max_len,
+                  cache, *, slots, write_tables=None, ctx_tables=None,
+                  ctx_len=None, true_len=None, prefix_embeds=None,
+                  use_flash=False):
+    """Admission prefill fused with cache insertion: runs ``m`` prompt
+    rows and writes their decode state DIRECTLY into the engine's
+    batched cache — global-layer K/V lands in the shared page pool via
+    ``write_tables`` (no dense strip is ever materialised and shadow-
+    copied), local ring layers land in their dense rows at ``slots``.
+
+    ``ctx_tables``/``ctx_len`` carry a radix prefix-cache hit: the rows
+    are then the UNMATCHED SUFFIX only, positioned at ``ctx_len +
+    arange(S)``, and global attention additionally reads the shared
+    prefix's pages — the hit skips the prefix's prefill FLOPs entirely.
+    Context is only ever passed for fully-paged configs
+    (``pattern_period <= 1``); local-ring state cannot be reconstructed
+    from pages (see ``model.prefix_sharable``).
+
+    With ``write_tables=None`` this is the dense engine's admission:
+    the same prefill math, scattered into per-slot ``max_len`` strips.
+    Returns (per-row last-true-token logits, updated engine cache).
+    """
+    x = L.embed(cfg, params["embed"], tokens)
+    P = 0
+    if prefix_embeds is not None:
+        P = prefix_embeds.shape[1]
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    n = broadcast_true_len(true_len, B)
+    n_full = None if n is None else n + P
+    off = (jnp.zeros((B,), jnp.int32) if ctx_len is None
+           else jnp.asarray(ctx_len, jnp.int32))
+    positions = off[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    paged = write_tables is not None
+    if ctx_tables is not None and cfg.pattern_period > 1:
+        raise ValueError("prefix-cache context requires a fully-paged "
+                         "trunk (pattern_period <= 1)")
+    trunk = params["trunk"]
+    slots = jnp.asarray(slots, jnp.int32)
+    new_cache = dict(cache)
+
+    if cfg.pattern_period <= 1:
+        if paged:
+            def body(h, inp):
+                lp, pg = inp
+                h, pg2 = block_prefill_paged(
+                    cfg, lp, h, positions, pg, write_tables, ctx_tables,
+                    ctx_len, use_flash=use_flash)
+                return h, pg2
+            x, pages = lax.scan(body, x, (trunk["layers"],
+                                          cache["layers"]))
+            new_cache["layers"] = pages
+        else:
+            def body(h, lp):
+                h, kv = block_prefill(cfg, lp, h, positions,
+                                      is_global=True, use_flash=use_flash)
+                return h, kv
+            x, (ks, vs) = lax.scan(body, x, trunk["layers"])
+            rows = jax.vmap(lambda k, v: _fill_global(
+                cfg, B, max_len, k, v, n_full))(ks, vs)
+            new_cache["layers"] = scatter_cache_rows(
+                cache["layers"], rows, slots, 1)
+    else:
+        def local_body(h, lp):
+            h, kv = block_prefill(cfg, lp, h, positions, is_global=False,
+                                  use_flash=use_flash)
+            return h, kv
+
+        if paged:
+            def super_body(h, inp):
+                sp, pg = inp
+                h, lkv = lax.scan(local_body, h, sp["local"])
+                h, g = block_prefill_paged(cfg, sp["global"], h, positions,
+                                           pg, write_tables,
+                                           use_flash=use_flash)
+                return h, (lkv, g)
+            x, ((lks, lvs), gout) = lax.scan(
+                super_body, x, (trunk["super"], cache["super"]["global"]))
+        else:
+            def super_body(h, sp):
+                h, lkv = lax.scan(local_body, h, sp["local"])
+                h, g = block_prefill(cfg, sp["global"], h, positions,
+                                     is_global=True, use_flash=use_flash)
+                return h, (lkv, g)
+            x, ((lks, lvs), gout) = lax.scan(super_body, x, trunk["super"])
+        fill_l = jax.vmap(jax.vmap(
+            lambda k, v: _fill_local(cfg, B, max_len, k, v, n_full)))
+        lrows = fill_l(lks, lvs)
+        new_super = {
+            "local": scatter_cache_rows(cache["super"]["local"], lrows,
+                                        slots, 2),
+        }
+        if paged:
+            new_super["global"] = gout
+        else:
+            gks, gvs = gout
+            grows = jax.vmap(lambda k, v: _fill_global(
+                cfg, B, max_len, k, v, n_full))(gks, gvs)
+            new_super["global"] = scatter_cache_rows(
+                cache["super"]["global"], grows, slots, 1)
+        new_cache["super"] = new_super
+        if "rem_local" in trunk:
+            x, (rks, rvs) = lax.scan(local_body, x, trunk["rem_local"])
+            rrows = jax.vmap(lambda k, v: _fill_local(
+                cfg, B, max_len, k, v, n_full))(rks, rvs)
+            new_cache["rem_local"] = scatter_cache_rows(
+                cache["rem_local"], rrows, slots, 1)
+
+    _, norm = L.make_norm(cfg)
+    x = x[:, -1:] if n_full is None else gather_last(x, n_full)
+    x = norm(params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], params["unembed"], x)
+    return logits, new_cache

@@ -63,3 +63,27 @@ def prefill(cfg: ModelConfig, params: Params, tokens, max_len, *,
     prefix = project(cfg, params, image_embeds)
     return T.prefill(cfg, params, tokens, max_len, prefix_embeds=prefix,
                      use_flash=use_flash, true_len=true_len)
+
+
+def prefill_paged(cfg: ModelConfig, params: Params, tokens, max_len,
+                  cache, *, slots, write_tables=None, ctx_tables=None,
+                  ctx_len=None, true_len=None, image_embeds=None,
+                  use_flash=False):
+    """Paged admission prefill (see ``T.prefill_paged``).
+
+    Cold rows project and prepend the image prefix as usual.  On a
+    radix prefix-cache hit the matched chain always covers the image
+    tokens (the engine keys them under the image digest and treats
+    shorter matches as misses), so hit rows are pure-text suffixes and
+    ``image_embeds`` is ignored — the prefix K/V is read from pages.
+    """
+    if ctx_tables is not None:
+        return T.prefill_paged(
+            cfg, params, tokens, max_len, cache, slots=slots,
+            write_tables=write_tables, ctx_tables=ctx_tables,
+            ctx_len=ctx_len, true_len=true_len, use_flash=use_flash)
+    prefix = project(cfg, params, image_embeds)
+    return T.prefill_paged(
+        cfg, params, tokens, max_len, cache, slots=slots,
+        write_tables=write_tables, true_len=true_len,
+        prefix_embeds=prefix, use_flash=use_flash)

@@ -19,6 +19,19 @@ Admission semantics (the contract tests rely on)
   Local ring-window layers stay dense at ``W``; SSM state is O(1);
   families with no global KV (ssm, hybrid) run dense with zero pool
   demand.
+* **Shared-prefix radix cache.** Admission prefill writes prompt K/V
+  DIRECTLY into pages (``model.prefill_paged`` — no dense strip is
+  shadow-copied), and finished chains are returned to a radix index
+  (``serving.prefix_cache.RadixPrefixCache``) instead of freed.  A
+  later request with the same prefix shares those pages by reference
+  (block-granular, copy-on-write via ``KVBlockPool.fork`` +
+  ``_cow_guard``) and prefills only its unmatched suffix at the
+  chain's end position — the common household system/persona prompt
+  is prefilled ONCE per hub, not once per request.  Sharing is
+  behaviour-invariant (hit decode is bit-identical to cold, verified
+  per family) and only engages where the full decode state lives in
+  pages (``model.prefix_sharable``); LRU chains are evicted under pool
+  pressure, never from under a reader.
 * **Exact padded prefill.** Prompts are right-padded to the smallest
   ``ServeConfig.prefill_buckets`` entry that fits and prefilled batched
   per bucket.  ``model.prefill(..., true_len=)`` makes the padding
@@ -69,8 +82,9 @@ from repro.serving.engine import (
 )
 from repro.serving.kv_pool import KVBlockPool, PoolExhausted, \
     blocks_for_tokens
+from repro.serving.prefix_cache import RadixPrefixCache
 
 __all__ = ["EdgeServingEngine", "Request", "ServeConfig",
            "cache_batch_axes", "extract_slot", "insert_slot",
            "paged_cache_axes", "KVBlockPool", "PoolExhausted",
-           "blocks_for_tokens"]
+           "blocks_for_tokens", "RadixPrefixCache"]

@@ -24,14 +24,48 @@ maintains these invariants:
   crossing; on pool exhaustion the slot is preempted back to the queue
   with its pages detached — "preempt-or-queue");
 * admission is capacity-aware: a request is admitted only when enough
-  FREE POOL BLOCKS exist for its prompt (+1 decode write), not merely
+  pool blocks exist for its prompt (+1 decode write) counting both
+  FREE pages and radix-cache pages evictable right now — not merely
   when a slot is free;
-* ``_finish`` releases the slot's pages; ``preempt`` detaches them onto
-  ``Request.saved_state`` so resume is still re-prefill-free;
+* ``_finish`` RETURNS the slot's full pages to the radix prefix cache
+  (sharable configs; the partial tail page and any duplicates of an
+  already-indexed prefix are freed) instead of freeing them outright;
+  ``preempt`` detaches pages onto ``Request.saved_state`` so resume is
+  still re-prefill-free;
 * the logical view ``n_blk * kv_block_size == max_len`` makes paged
   decode bit-for-bit identical to the dense path — only HBM residency
   shrinks, from ``max_slots x max_len`` strips to tokens actually in
   flight.
+
+Shared / forked pages (prefix-cache ownership contract)
+-------------------------------------------------------
+Admission prefill writes prompt K/V DIRECTLY into pages
+(``model.prefill_paged`` — no dense strip is materialised and shadow-
+copied), which is what lets a radix-cache hit skip prefix prefill
+entirely: admission looks the prompt up in ``prefix_cache``
+(``serving.prefix_cache.RadixPrefixCache``), increfs the matched chain
+(block-granular, always whole pages) and prefills ONLY the unmatched
+suffix at the chain's end position.  The ownership rules:
+
+* a slot's block table may reference pages with refcount > 1 (shared
+  prefix, detached twins); such pages are READ-ONLY by construction —
+  suffix writes start at the next block boundary.  The per-step
+  ``_cow_guard`` is the backstop: any slot whose next write position
+  lands in a page with >1 owner trades it for a private copy
+  (``KVBlockPool.fork`` + device page copy) before the wave runs;
+* finished chains are indexed under a key of the full token sequence
+  (plus a digest namespace for non-token inputs: VLM image embeds,
+  enc-dec audio — their K/V depends on more than token ids); the cache
+  holds one reference per indexed page;
+* eviction (LRU leaf chains whose pages have refcount 1) runs lazily
+  under pool pressure (``_reserve``) — a chain pinned by any reader is
+  never evicted, so sharing cannot yank KV from a running request;
+* sharing is behaviour-invariant: tokens decoded after a prefix hit
+  are bit-identical to a cold run (asserted per family in
+  ``tests/test_prefix_cache.py``).  Configs whose decode state is not
+  fully reconstructible from pages (local-ring gemma patterns,
+  ssm/hybrid recurrences) never share — ``model.prefix_sharable``
+  gates the cache off and admission stays the cold path.
 
 Local ring-window layers stay dense at ``W`` and SSM state is O(1), so
 families with no global KV layers (ssm, hybrid) transparently run the
@@ -67,6 +101,7 @@ Admission semantics (exact, see ``model.prefill(true_len=...)``)
 """
 from __future__ import annotations
 
+import hashlib
 import itertools
 from dataclasses import dataclass, field
 from functools import partial
@@ -80,6 +115,7 @@ from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.serving.kv_pool import KVBlockPool, PoolExhausted, \
     blocks_for_tokens
+from repro.serving.prefix_cache import RadixPrefixCache
 
 # NOTE: repro.core.scheduler is imported lazily in _rank —
 # core/__init__ pulls in hub.py, which imports this module back.
@@ -184,6 +220,14 @@ class ServeConfig:
     paged: bool = True
     kv_block_size: int = 16
     kv_pool_blocks: Optional[int] = None  # None -> max_slots*max_len/bs
+    # radix prefix cache: finished chains stay indexed for copy-free
+    # sharing (only engages on prefix-sharable configs, see
+    # model.prefix_sharable; pages are reclaimed LRU under pressure)
+    prefix_cache: bool = True
+    # read paged decode KV through the Pallas paged_attention kernel
+    # (scalar-prefetched block tables) instead of the jnp gather —
+    # the TPU serving path; default off (gather is the portable twin)
+    use_pallas_paged: bool = False
 
 
 class EdgeServingEngine:
@@ -227,9 +271,14 @@ class EdgeServingEngine:
             self.pool = None
             self.cache = M.init_cache(cfg, B, T)
             self.axes = cache_batch_axes(cfg, T)
-        # batch axes of the DENSE prefill cache (row extraction source)
-        self._dense_axes = (cache_batch_axes(cfg, T) if self.paged
-                            else self.axes)
+        # radix prefix cache: only for configs whose full decode state
+        # lives in pages (model.prefix_sharable) — otherwise a hit
+        # could not reconstruct ring/recurrent state and sharing would
+        # change behaviour
+        self.sharable = bool(self.paged and scfg.prefix_cache
+                             and M.prefix_sharable(cfg))
+        self.prefix_cache = (RadixPrefixCache(self.pool, bs)
+                             if self.sharable else None)
         self.tokens = np.zeros((B, 1), np.int32)
         self.pos = np.zeros((B,), np.int32)
         self.temps = np.zeros((B,), np.float32)
@@ -243,9 +292,18 @@ class EdgeServingEngine:
         self._arrival = itertools.count()
         # specialized on the static any_topk flag: the all-greedy /
         # temperature-only path must not pay an O(B·V log V) vocab sort
-        # per decoded token (at most two variants ever compile)
+        # per decoded token (at most two variants ever compile).
+        # The cache buffers are DONATED: decode rewrites the KV state
+        # in place instead of allocating a second copy every step,
+        # halving decode HBM traffic (a no-op where the backend cannot
+        # alias, e.g. CPU).
         self._decode = jax.jit(self._decode_fn,
-                               static_argnames=("any_topk",))
+                               static_argnames=("any_topk",),
+                               donate_argnums=(1,))
+        # per-pool-leaf page copy for copy-on-write forks (cache donated:
+        # the fork rewrites one page in place, not a second pool copy)
+        self._copy_page = (jax.jit(self._copy_page_fn, donate_argnums=(0,))
+                           if self.paged else None)
         self._prefills: dict[tuple, Callable] = {}
         self.steps = 0
         self.completed: list[Request] = []
@@ -254,6 +312,7 @@ class EdgeServingEngine:
         self.peak_pool_used = 0
         self.exhaust_preempts = 0
         self.reclaims = 0
+        self.cow_forks = 0
 
     @property
     def _prefix(self) -> int:
@@ -319,17 +378,42 @@ class EdgeServingEngine:
                 return b
         return self.scfg.prefill_buckets[-1]
 
-    def _prefill_fn(self, bucket: int, m: int, extras_sig: tuple):
-        """Jitted batched prefill, cached per (bucket, batch, extras)."""
-        key = (bucket, m, extras_sig)
+    def _prefill_fn(self, bucket: int, m: int, extras_sig: tuple,
+                    n_ctx: int):
+        """Jitted fused admission prefill, cached per (bucket, batch,
+        extras, ctx-width) — prompt K/V is written straight into the
+        engine cache (pages + slot rows) in the same call, and the
+        cache buffers are donated so admission updates them in place.
+
+        ``n_ctx``: static width (in blocks) of the shared-prefix
+        context tables; 0 compiles the cold no-context variant.
+        """
+        key = (bucket, m, extras_sig, n_ctx, self.paged)
         if key not in self._prefills:
-            cfg, scfg = self.cfg, self.scfg
+            cfg, scfg, paged = self.cfg, self.scfg, self.paged
 
-            def fn(params, batch, true_len):
-                return M.prefill(cfg, params, batch, scfg.max_len,
-                                 true_len=true_len)
+            if n_ctx:
+                def fn(params, batch, true_len, cache, slots,
+                       write_tables, ctx_tables, ctx_len):
+                    return M.prefill_paged(
+                        cfg, params, batch, scfg.max_len, cache,
+                        slots=slots, write_tables=write_tables,
+                        ctx_tables=ctx_tables, ctx_len=ctx_len,
+                        true_len=true_len)
+            elif paged:
+                def fn(params, batch, true_len, cache, slots,
+                       write_tables):
+                    return M.prefill_paged(
+                        cfg, params, batch, scfg.max_len, cache,
+                        slots=slots, write_tables=write_tables,
+                        true_len=true_len)
+            else:
+                def fn(params, batch, true_len, cache, slots):
+                    return M.prefill_paged(
+                        cfg, params, batch, scfg.max_len, cache,
+                        slots=slots, true_len=true_len)
 
-            self._prefills[key] = jax.jit(fn)
+            self._prefills[key] = jax.jit(fn, donate_argnums=(3,))
         return self._prefills[key]
 
     def _sample_first(self, req: Request, logits: np.ndarray) -> int:
@@ -350,11 +434,69 @@ class EdgeServingEngine:
         p /= p.sum()
         return int(self._rng.choice(lg.size, p=p))
 
+    # -- prefix-cache keys ---------------------------------------------
+    def _key_ns(self, req: Request) -> int:
+        """Namespace digest for non-token inputs: requests whose K/V
+        depends on more than the token ids (VLM images, enc-dec audio)
+        only ever share with requests carrying identical extras."""
+        if not req.extras:
+            return 0
+        h = hashlib.sha1()
+        for k in sorted(req.extras):
+            h.update(k.encode())
+            h.update(np.ascontiguousarray(req.extras[k]).tobytes())
+        return int.from_bytes(h.digest()[:8], "little") & (2 ** 63 - 1)
+
+    def _key_tokens(self, req: Request) -> np.ndarray:
+        """Logical token sequence whose positions map 1:1 onto the
+        slot's pages: VLM image positions become pseudo-tokens (the
+        namespace digest already pins the image identity), then the
+        prompt, then tokens generated so far (KV-valid prefix of it is
+        taken by the caller)."""
+        parts = [np.full((self._prefix,), -42, np.int64),
+                 np.asarray(req.prompt, np.int64)]
+        folded = getattr(req, "_folded_generated", 0)
+        if len(req.generated) > folded:
+            parts.append(np.asarray(req.generated[folded:], np.int64))
+        return np.concatenate(parts)
+
+    def _lookup(self, req: Request) -> None:
+        """Radix lookup for a fresh request: acquire (incref) the
+        longest usable shared chain and stash it on the request for the
+        admission pass.  Capped at one token short of the prompt (the
+        suffix prefill must produce admission logits) and — for VLM —
+        at least the image prefix (a shorter match cannot seed a
+        text-only suffix prefill)."""
+        self._release_ctx(req)          # drop any stale acquisition
+        if not self.sharable or req.saved_state is not None:
+            return
+        key = np.concatenate([np.full((self._prefix,), -42, np.int64),
+                              np.asarray(req.prompt, np.int64)])
+        blocks, n = self.prefix_cache.match(
+            key, namespace=self._key_ns(req), max_tokens=len(key) - 1)
+        if n and n < self._prefix:
+            self.pool.free(blocks)
+            self.prefix_cache.unrecord_hit(len(blocks))
+            blocks, n = [], 0
+        req._ctx_blocks = blocks
+        req._ctx_len = n
+
+    def _release_ctx(self, req: Request) -> None:
+        """Drop an acquired-but-unused shared chain (request skipped by
+        this admission round; the next round re-acquires) — and roll
+        the hit accounting back so retries don't inflate the stats."""
+        blocks = getattr(req, "_ctx_blocks", None)
+        if blocks:
+            self.pool.free(blocks)
+            self.prefix_cache.unrecord_hit(len(blocks))
+        req._ctx_blocks, req._ctx_len = [], 0
+
     # -- paged-pool bookkeeping ----------------------------------------
     def _blocks_needed(self, req: Request) -> int:
         """New pool blocks this request needs to be admitted NOW (the
         prompt's pages + one covering the first decode write; resumed
-        requests already hold pages for [0, pos))."""
+        requests already hold pages for [0, pos), prefix-cache hits
+        already hold the shared chain's pages)."""
         if not self.paged:
             return 0
         bs = self.block_size
@@ -362,36 +504,36 @@ class EdgeServingEngine:
             held = len(req.saved_state.get("blocks", ()))
             return max(0, blocks_for_tokens(
                 int(req.saved_state["pos"]) + 1, bs) - held)
+        L = getattr(req, "_ctx_len", 0)
+        if L:
+            suffix = len(req.prompt) - (L - self._prefix)
+            n1 = min(suffix, self.scfg.prefill_buckets[-1])
+            return blocks_for_tokens(L + n1 + 1, bs) - L // bs
         n1 = min(len(req.prompt), self.scfg.prefill_buckets[-1])
         return blocks_for_tokens(self._prefix + n1 + 1, bs)
+
+    def _reserve(self, n: int) -> bool:
+        """Make ``n`` pool pages allocatable, evicting LRU prefix-cache
+        chains if the free list alone is short."""
+        if not self.paged:
+            return True
+        short = n - self.pool.num_free
+        if short > 0 and self.prefix_cache is not None:
+            self.prefix_cache.evict(short)
+        return self.pool.num_free >= n
+
+    def _avail_blocks(self) -> int:
+        """Pages admission may count on: free now + evictable now."""
+        if not self.paged:
+            return 0
+        extra = (self.prefix_cache.evictable_blocks()
+                 if self.prefix_cache is not None else 0)
+        return self.pool.num_free + extra
 
     def _set_table(self, slot: int, blocks: list[int]) -> None:
         self.slot_blocks[slot] = blocks
         self.block_tables[slot, :] = -1
         self.block_tables[slot, :len(blocks)] = blocks
-
-    def _release_slot_blocks(self, slot: int) -> None:
-        self.pool.free(self.slot_blocks[slot])
-        self._set_table(slot, [])
-
-    def _insert_admitted(self, eng, row, ax, slot: int, phys):
-        """Merge a freshly prefilled batch=1 dense cache ``row`` into
-        the engine cache: dense leaves land in ``slot``; pool leaves
-        scatter the row's global KV strip into the allocated pages
-        (``phys``: (n_blk,) physical ids, pool-size padded => dropped).
-        """
-        if isinstance(eng, dict):
-            return {k: self._insert_admitted(eng[k], row[k], ax[k], slot,
-                                             phys)
-                    for k in eng}
-        if ax < 0:
-            # eng: (stk, nB, bs, K, hd); row strip: (stk, 1, T, K, hd)
-            stk, _, bs = eng.shape[0], eng.shape[1], eng.shape[2]
-            blocks = row[:, 0].reshape(stk, -1, bs, *row.shape[3:])
-            return eng.at[:, phys].set(blocks.astype(eng.dtype),
-                                       mode="drop")
-        return jax.lax.dynamic_update_slice_in_dim(
-            eng, row.astype(eng.dtype), slot, axis=ax)
 
     def _place(self, req: Request, slot: int) -> None:
         """Common slot bookkeeping after cache insertion."""
@@ -408,6 +550,7 @@ class EdgeServingEngine:
         if self.paged:
             blocks = list(st.get("blocks", ()))
             if need:  # feasibility pre-checked by the admission scan
+                self._reserve(need)
                 blocks += self.pool.alloc(need)
             self._set_table(slot, blocks)
         self.cache = insert_slot(self.cache, st["cache"], slot, self.axes)
@@ -416,32 +559,51 @@ class EdgeServingEngine:
         self.pending[slot] = st["pending"]
         self._place(req, slot)
 
+    @staticmethod
+    def _pow2(n: int) -> int:
+        return 1 << (n - 1).bit_length() if n > 1 else n
+
     def _admit_batch(self) -> None:
         """Admit queued requests into free slots, batching prefill per
-        bucket (one compile + one device call per bucket group).
+        (bucket, extras, shared-context width) group — one compile +
+        one device call per group.
 
         Capacity-aware: a request is taken only if the pool can cover
-        its prompt pages + first decode write.  Requests that don't fit
-        right now are skipped, NOT dropped — they wait for pages to
-        free (best-effort packing under memory pressure; admission
-        order within the feasible set still follows admission_rank)."""
+        its suffix pages + first decode write, counting radix-cache
+        pages evictable right now as available.  Fresh requests are
+        looked up in the prefix cache first: a hit pins the shared
+        chain (incref) and shrinks both the pages needed and the
+        prefill to the unmatched suffix.  Requests that don't fit right
+        now are skipped, NOT dropped — they wait for pages to free
+        (best-effort packing under memory pressure; admission order
+        within the feasible set still follows admission_rank)."""
         if not self.queue:
             return
         free = [s for s in range(self.scfg.max_slots) if not self.active[s]]
         if not free:
             return
         self.queue.sort(key=self._rank)
-        avail = self.pool.num_free if self.paged else 0
+        avail = self._avail_blocks()
         taken, kept = [], []
         for req in self.queue:
             if not free:
                 kept.append(req)
                 continue
+            self._lookup(req)
             need = self._blocks_needed(req)
-            if self.paged and need > avail:
+            # pinning a hit chain removes its pages from the evictable
+            # set, so they count against this round's budget too — but
+            # ONLY pages this lookup actually pinned (refcount exactly
+            # 2 = cache + us; pages another reader already pins were
+            # never in the evictable count)
+            pinned = sum(1 for b in (getattr(req, "_ctx_blocks", None)
+                                     or ())
+                         if self.pool.refcount(b) == 2)
+            if self.paged and need + pinned > avail:
+                self._release_ctx(req)
                 kept.append(req)
                 continue
-            avail -= need
+            avail -= need + pinned
             taken.append((req, free.pop(0)))
         self.queue = kept
 
@@ -450,35 +612,90 @@ class EdgeServingEngine:
             if req.saved_state is not None:
                 self._admit_resumed(req, slot)
                 continue
-            n1 = min(len(req.prompt), self.scfg.prefill_buckets[-1])
+            L = getattr(req, "_ctx_len", 0)
+            n1 = min(len(req.prompt) - max(0, L - self._prefix),
+                     self.scfg.prefill_buckets[-1])
             bucket = self._bucket(n1)
             sig = tuple(sorted(
                 (k, np.asarray(v).shape) for k, v in req.extras.items()))
-            fresh.setdefault((bucket, sig), []).append((req, slot))
+            n_ctx = self._pow2(L // self.block_size) if L else 0
+            fresh.setdefault((bucket, sig, n_ctx), []).append((req, slot))
 
-        for (bucket, sig), group in fresh.items():
-            self._admit_group(bucket, sig, group)
+        for (bucket, sig, n_ctx), group in fresh.items():
+            self._admit_group(bucket, sig, n_ctx, group)
 
-    def _admit_group(self, bucket: int, extras_sig: tuple, group) -> None:
+    def _admit_group(self, bucket: int, extras_sig: tuple, n_ctx: int,
+                     group) -> None:
+        """One fused admission call: batched (suffix-)prefill that
+        writes prompt K/V straight into pages + slot rows.  ``n_ctx``
+        > 0 means every row is a prefix-cache hit admitted at its
+        shared chain's end position."""
+        bs = self.block_size
+        if self.paged:
+            # allocation pass first: a row whose pages cannot be
+            # covered even after eviction (a chain pinned mid-scan ate
+            # the budget) goes back to the queue instead of raising
+            admitted = []
+            for req, slot in group:
+                need = self._blocks_needed(req)
+                try:
+                    self._reserve(need)
+                    fresh_alloc = self.pool.alloc(need)
+                except PoolExhausted:
+                    self._release_ctx(req)
+                    self.queue.append(req)
+                    continue
+                ctx = getattr(req, "_ctx_blocks", None) or []
+                self._set_table(slot, list(ctx) + fresh_alloc)
+                admitted.append((req, slot))
+            group = admitted
+            if not group:
+                return
         m = len(group)
         prompts = np.zeros((m, bucket), np.int32)
         true_len = np.zeros((m,), np.int32)
-        for i, (req, _) in enumerate(group):
-            n1 = min(len(req.prompt), bucket)
+        ctx_len = np.zeros((m,), np.int32)
+        ctx_tables = np.full((m, n_ctx), -1, np.int32)
+        # write span: suffixes start at their chain's block boundary;
+        # cold rows start at 0 and include the VLM image prefix
+        span = bucket if n_ctx else self._prefix + bucket
+        n_wblk = blocks_for_tokens(span, bs)
+        write_tables = np.full((m, n_wblk), -1, np.int32)
+        suffixes = []
+        for i, (req, slot) in enumerate(group):
+            L = getattr(req, "_ctx_len", 0)
+            suffix = np.asarray(req.prompt, np.int32)[max(0, L - self._prefix):]
+            suffixes.append(suffix)
+            n1 = min(len(suffix), bucket)
             # pad value is irrelevant (true_len masks it) — repeat last tok
-            prompts[i] = req.prompt[n1 - 1]
-            prompts[i, :n1] = req.prompt[:n1]
+            prompts[i] = suffix[n1 - 1]
+            prompts[i, :n1] = suffix[:n1]
             true_len[i] = n1
+            ctx_len[i] = L
+            if self.paged:
+                ctx = getattr(req, "_ctx_blocks", None) or []
+                ctx_tables[i, :len(ctx)] = ctx
+                fresh = self.slot_blocks[slot][L // bs:]
+                write_tables[i, :len(fresh)] = fresh[:n_wblk]
         batch = {"tokens": jnp.asarray(prompts)}
         for k, _ in extras_sig:
             batch[k] = jnp.asarray(
                 np.stack([np.asarray(r.extras[k]) for r, _ in group]))
-        logits, cache_m = self._prefill_fn(bucket, m, extras_sig)(
-            self.params, batch, jnp.asarray(true_len))
+        slots_arr = jnp.asarray([s for _, s in group], jnp.int32)
+        args = [self.params, batch, jnp.asarray(true_len), self.cache,
+                slots_arr]
+        if self.paged:
+            args.append(jnp.asarray(write_tables))
+        if n_ctx:
+            args += [jnp.asarray(ctx_tables), jnp.asarray(ctx_len)]
+        logits, self.cache = self._prefill_fn(bucket, m, extras_sig,
+                                              n_ctx)(*args)
         logits_host = np.asarray(logits[:, -1], np.float32)   # (m, V)
         for i, (req, slot) in enumerate(group):
+            L = int(ctx_len[i])
             n1 = int(true_len[i])
-            remainder = np.asarray(req.prompt[n1:], np.int32)
+            req._ctx_blocks, req._ctx_len = [], 0
+            remainder = suffixes[i][n1:]
             tok = None
             if not remainder.size:
                 tok = self._sample_first(req, logits_host[i])
@@ -487,24 +704,17 @@ class EdgeServingEngine:
                            and tok == self.scfg.eos_id)
                 if len(req.generated) >= req.max_new_tokens or hit_eos:
                     # the admission token already completed the request
-                    # — never occupy a slot, a page or a decode step
+                    # — it never occupies a slot or a decode step, but
+                    # its pages DO hold a fully valid chain: index it
+                    if self.paged:
+                        n_valid = (L if L else self._prefix) + n1
+                        self._retire_chain(req, self.slot_blocks[slot],
+                                           n_valid)
+                        self._set_table(slot, [])
                     req.done = True
                     self.completed.append(req)
                     continue
-            row = jax.tree.map(
-                lambda leaf, ax: jax.lax.dynamic_slice_in_dim(
-                    leaf, i, 1, axis=ax), cache_m, self._dense_axes)
-            if self.paged:
-                blocks = self.pool.alloc(self._blocks_needed(req))
-                self._set_table(slot, blocks)
-                phys = np.full((self.n_blk,), self.pool.num_blocks,
-                               np.int32)
-                phys[:len(blocks)] = blocks
-                self.cache = self._insert_admitted(
-                    self.cache, row, self.axes, slot, jnp.asarray(phys))
-            else:
-                self.cache = insert_slot(self.cache, row, slot, self.axes)
-            self.pos[slot] = self._prefix + n1
+            self.pos[slot] = (L if L else self._prefix) + n1
             if remainder.size:
                 # chunked prefill: catch up through the decode wave
                 self.pending[slot] = remainder[1:]
@@ -523,9 +733,9 @@ class EdgeServingEngine:
             logits, new_cache = M.decode_step(self.cfg, params, cache,
                                               tokens, pos)
         else:
-            logits, new_cache = M.decode_step_paged(self.cfg, params, cache,
-                                                    tokens, pos,
-                                                    block_tables)
+            logits, new_cache = M.decode_step_paged(
+                self.cfg, params, cache, tokens, pos, block_tables,
+                self.scfg.use_pallas_paged)
         logits = logits[:, -1, :].astype(jnp.float32)          # (B, V)
         greedy = jnp.argmax(logits, axis=-1)
         masked = logits
@@ -543,10 +753,11 @@ class EdgeServingEngine:
 
     def _ensure_blocks(self) -> None:
         """Guarantee every active slot's table covers its write
-        position ``pos``.  Crossing a block boundary appends one page;
-        if the pool is exhausted the slot is preempted back to the
-        queue (pages detached) — preempt-or-queue, never a deadlock
-        spin.  Best-ranked slots get first pick of the remaining pages.
+        position ``pos``.  Crossing a block boundary appends one page
+        (evicting LRU prefix-cache chains first under pressure); if the
+        pool is truly exhausted the slot is preempted back to the queue
+        (pages detached) — preempt-or-queue, never a deadlock spin.
+        Best-ranked slots get first pick of the remaining pages.
         """
         bs = self.block_size
         needy = [s for s in range(self.scfg.max_slots)
@@ -556,6 +767,7 @@ class EdgeServingEngine:
         for s in needy:
             j = int(self.pos[s]) // bs
             try:
+                self._reserve(1)
                 blk = self.pool.alloc(1)
             except PoolExhausted:
                 req = self.preempt(s)
@@ -565,6 +777,47 @@ class EdgeServingEngine:
             self.slot_blocks[s].extend(blk)
             self.block_tables[s, j] = blk[0]
 
+    def _copy_page_fn(self, cache, src, dst):
+        """Device-side page copy (every pool leaf) for CoW forks."""
+        return jax.tree.map(
+            lambda leaf, ax: leaf if ax >= 0 else
+            leaf.at[:, dst].set(leaf[:, src]),
+            cache, self.axes)
+
+    def _cow_guard(self) -> None:
+        """Copy-on-write backstop: no decode wave may write a page with
+        more than one owner.  Block-granular prefix matching means the
+        write position normally lands in a private page (suffixes start
+        at the next block boundary), so this almost never fires — but
+        any future sharer of a TAIL page (token-granular matching,
+        beam forks) is caught here: the slot trades its reference for a
+        fresh page (``KVBlockPool.fork``) and copies the page bytes.
+        On pool exhaustion the slot preempts, like ``_ensure_blocks``.
+        """
+        bs = self.block_size
+        for s in range(self.scfg.max_slots):
+            if not self.active[s]:
+                continue
+            j = int(self.pos[s]) // bs
+            if j >= len(self.slot_blocks[s]):
+                continue
+            old = self.slot_blocks[s][j]
+            if self.pool.refcount(old) <= 1:
+                continue
+            try:
+                self._reserve(1)
+                new = self.pool.fork(old)
+            except PoolExhausted:
+                req = self.preempt(s)
+                self.exhaust_preempts += 1
+                self.queue.append(req)
+                continue
+            self.cache = self._copy_page(self.cache, jnp.asarray(old),
+                                         jnp.asarray(new))
+            self.slot_blocks[s][j] = new
+            self.block_tables[s, j] = new
+            self.cow_forks += 1
+
     def step(self) -> int:
         """Admit queued requests into free slots, then one decode wave.
 
@@ -573,6 +826,7 @@ class EdgeServingEngine:
         self._admit_batch()
         if self.paged:
             self._ensure_blocks()
+            self._cow_guard()
         n_active = int(self.active.sum())
         if n_active == 0:
             return 0
@@ -615,6 +869,23 @@ class EdgeServingEngine:
         self.steps += 1
         return n_active
 
+    def _retire_chain(self, req: Request, blocks: list[int],
+                      n_valid: int) -> None:
+        """Return a finished request's pages: index the full pages (the
+        chain's first ``n_valid`` token positions hold valid K/V) in the
+        radix cache — adopting the engine's references — and free the
+        partial tail page plus any duplicates of an already-indexed
+        prefix.  Non-sharable configs free everything, as before."""
+        if not self.sharable or not blocks:
+            self.pool.free(blocks)
+            return
+        key = self._key_tokens(req)[:n_valid]
+        full = n_valid // self.block_size
+        leftovers = self.prefix_cache.insert(
+            key[:full * self.block_size], blocks[:full],
+            namespace=self._key_ns(req))
+        self.pool.free(list(leftovers) + list(blocks[full:]))
+
     def _finish(self, slot: int, req: Request) -> None:
         req.done = True
         self.completed.append(req)
@@ -622,7 +893,33 @@ class EdgeServingEngine:
         self.slot_req[slot] = None
         self.pending[slot] = None
         if self.paged:
-            self._release_slot_blocks(slot)
+            # KV is valid for [0, pos): everything written by prefill,
+            # catch-up and decode waves (the final sampled token was
+            # never fed back, so pos stops short of it)
+            self._retire_chain(req, self.slot_blocks[slot],
+                               int(self.pos[slot]))
+            self._set_table(slot, [])
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        """Pool / prefix-cache observability; every call re-checks the
+        pool accounting invariant (free + refcounted == total)."""
+        out = {
+            "steps": self.steps,
+            "peak_active": self.peak_active,
+            "peak_pool_used": self.peak_pool_used,
+            "exhaust_preempts": self.exhaust_preempts,
+            "reclaims": self.reclaims,
+            "cow_forks": self.cow_forks,
+        }
+        if self.paged:
+            self.pool.assert_consistent()
+            out.update(pool_blocks=self.pool.num_blocks,
+                       pool_free=self.pool.num_free)
+        if self.prefix_cache is not None:
+            out.update({f"prefix_{k}": v
+                        for k, v in self.prefix_cache.stats().items()})
+        return out
 
     # ------------------------------------------------------------------
     def preempt(self, slot: int) -> Optional[Request]:
@@ -692,6 +989,8 @@ class EdgeServingEngine:
         must use this, not bare ``step()``, or a pool wedged by
         detached holders spins them forever."""
         stepped = self.step()
+        if self.paged:
+            self.pool.assert_consistent()   # accounting drift backstop
         if (stepped == 0 and self.paged and self.queue
                 and not self.active.any()):
             # requests requeued by _ensure_blocks mid-step (after this

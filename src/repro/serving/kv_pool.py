@@ -20,9 +20,16 @@ Semantics
   raises :class:`PoolExhausted` without side effects.
 * ``free(ids)`` decrements refcounts and returns ids whose count hits
   zero to the free list.
-* ``incref(ids)`` supports shared pages (detached preempted requests,
-  future prefix sharing): a page is reclaimed only when every owner has
-  released it.
+* ``incref(ids)`` / ``share(ids)`` support shared pages (detached
+  preempted requests, radix prefix-cache chains): a page is reclaimed
+  only when every owner has released it.
+* ``fork(id)`` is the copy-on-write primitive: before WRITING to a page
+  some other owner can still read, the writer trades its reference for
+  a fresh private page (the caller copies the device bytes); a page
+  with a single owner is returned unchanged — no copy, no alloc.
+* ``assert_consistent()`` is the accounting invariant every engine stats
+  path checks: free + refcounted == total, and no free page holds a
+  reference.  Any alloc/share/fork/free interleaving must preserve it.
 """
 from __future__ import annotations
 
@@ -90,6 +97,28 @@ class KVBlockPool:
                 raise ValueError(f"incref on unallocated block {b}")
             self._refcount[b] += 1
 
+    # prefix sharing reads as "share these pages with one more owner"
+    share = incref
+
+    def fork(self, block_id: int) -> int:
+        """Copy-on-write: give the caller a PRIVATE page id in exchange
+        for its reference on ``block_id``.
+
+        With refcount 1 the caller already owns the page exclusively —
+        it is returned unchanged.  Otherwise one fresh page is allocated
+        (refcount 1), the caller's reference on the shared page is
+        dropped, and the new id is returned; the caller is responsible
+        for copying the device-side page contents old -> new.  Raises
+        :class:`PoolExhausted` (pool untouched) when no page is free.
+        """
+        if self._refcount[block_id] <= 0:
+            raise ValueError(f"fork of unallocated block {block_id}")
+        if self._refcount[block_id] == 1:
+            return int(block_id)
+        (new,) = self.alloc(1)
+        self._refcount[block_id] -= 1
+        return new
+
     def free(self, block_ids) -> None:
         """Release one reference per id; zero-ref pages return to the
         free list (in order, so tests can assert deterministic reuse)."""
@@ -99,6 +128,22 @@ class KVBlockPool:
             self._refcount[b] -= 1
             if self._refcount[b] == 0:
                 self._free.append(int(b))
+
+    # ------------------------------------------------------------------
+    def assert_consistent(self) -> None:
+        """Accounting invariant: every page is either on the free list
+        (refcount 0) or referenced (refcount > 0) — never both, never
+        neither.  Raises RuntimeError with the drift details."""
+        n_ref = int((self._refcount > 0).sum())
+        if len(self._free) + n_ref != self.num_blocks:
+            raise RuntimeError(
+                f"pool accounting drift: free {len(self._free)} + "
+                f"refcounted {n_ref} != total {self.num_blocks}")
+        if len(set(self._free)) != len(self._free):
+            raise RuntimeError("pool free list contains duplicates")
+        bad = [b for b in self._free if self._refcount[b] != 0]
+        if bad:
+            raise RuntimeError(f"free blocks with live refcount: {bad}")
 
     # ------------------------------------------------------------------
     def __repr__(self) -> str:  # pragma: no cover - debug aid

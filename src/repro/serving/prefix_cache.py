@@ -1,0 +1,290 @@
+"""Radix-tree prefix cache over the paged KV pool.
+
+The EdgeAI-Hub premise — shared resources across users instead of
+per-device duplication — applied inside the serving engine: every
+household request carries the same system/persona prefix, and with a
+paged KV cache those prefix pages can be SHARED by reference instead of
+re-prefilled and re-stored per request.
+
+This module is the host-side index that makes the sharing findable: a
+radix tree mapping token-id prefixes to page chains at BLOCK
+granularity.  Only whole ``block_size``-token pages are ever indexed —
+a shared page is by construction never written again (suffix writes
+start at the next block boundary), which is what keeps sharing
+zero-copy; the engine's copy-on-write guard (``KVBlockPool.fork``) is
+the backstop for any path that would write a page with >1 owner.
+
+Ownership protocol (mirrors vLLM/SGLang)
+----------------------------------------
+* The cache holds exactly ONE pool reference per indexed page.
+* ``match(key)`` walks the tree, bumps LRU stamps, and increfs every
+  matched page **on behalf of the reader** — the engine then owns those
+  pages like any allocation (frees on finish, detaches on preempt).
+* ``insert(key, blocks)`` adopts the caller's references for pages that
+  extend the tree and returns the caller's now-duplicate ids (prefix
+  already indexed under different physical pages) for the caller to
+  free.  Inserting never allocates.
+* ``evict(n)`` releases LRU subtrees whose pages have pool refcount 1
+  (the cache is the sole owner — nothing active reads them) until ``n``
+  pages went back to the free list.  Chains pinned by readers are
+  skipped, so eviction can never yank KV out from under a running
+  request.
+
+Keys are ``np.int64`` sequences: plain token ids for text-only
+families, with a per-request ``namespace`` (a digest of the non-token
+inputs — VLM image embeds, enc-dec audio) separating subtrees whose KV
+depends on more than the token ids.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Optional
+
+import numpy as np
+
+from repro.serving.kv_pool import KVBlockPool
+
+
+class _Node:
+    """One radix edge: ``key`` (len divisible by block_size) and the
+    page chain holding its KV; children keyed by their first token."""
+
+    __slots__ = ("key", "blocks", "children", "parent", "stamp")
+
+    def __init__(self, key: np.ndarray, blocks: list[int],
+                 parent: Optional["_Node"]):
+        self.key = key
+        self.blocks = blocks
+        self.children: dict[int, _Node] = {}
+        self.parent = parent
+        self.stamp = 0
+
+
+class RadixPrefixCache:
+    """Block-granularity radix index of finished chains in ``pool``."""
+
+    def __init__(self, pool: KVBlockPool, block_size: Optional[int] = None):
+        self.pool = pool
+        self.block_size = int(block_size or pool.block_size)
+        # roots per namespace: extras-digest -> top-level node
+        self._roots: dict[int, _Node] = {}
+        self._clock = itertools.count(1)
+        self.hits = 0
+        self.misses = 0
+        self.hit_blocks = 0
+        self.evicted_blocks = 0
+        self.inserted_blocks = 0
+
+    # ------------------------------------------------------------------
+    def _root(self, namespace: int) -> _Node:
+        if namespace not in self._roots:
+            self._roots[namespace] = _Node(np.zeros((0,), np.int64), [], None)
+        return self._roots[namespace]
+
+    def _common_blocks(self, edge_key: np.ndarray, key: np.ndarray,
+                       pos: int) -> int:
+        """Tokens of ``edge_key`` matching ``key[pos:]`` in WHOLE
+        ``block_size`` units — the single definition of "shared block"
+        that both match() and insert() must agree on."""
+        bs = self.block_size
+        lim = min(len(edge_key), len(key) - pos)
+        n_eq = 0
+        for j in range(0, lim - bs + 1, bs):
+            if np.array_equal(edge_key[j:j + bs], key[pos + j:pos + j + bs]):
+                n_eq += bs
+            else:
+                break
+        return n_eq
+
+    def _match_walk(self, namespace: int, key: np.ndarray):
+        """Longest block-aligned match: returns (nodes touched, blocks,
+        matched token count).  Pure walk — no refcounts, no stamps."""
+        bs = self.block_size
+        node = self._roots.get(namespace)
+        if node is None:
+            return [], [], 0
+        nodes, blocks, matched = [node], [], 0
+        pos = 0
+        while pos < len(key):
+            child = node.children.get(int(key[pos]))
+            if child is None:
+                break
+            ek = child.key
+            n_eq = self._common_blocks(ek, key, pos)
+            if n_eq == 0:
+                break
+            nodes.append(child)
+            blocks.extend(child.blocks[:n_eq // bs])
+            matched += n_eq
+            pos += n_eq
+            if n_eq < len(ek):
+                break                      # stopped mid-edge
+            node = child
+        return nodes, blocks, matched
+
+    # ------------------------------------------------------------------
+    def match(self, key, namespace: int = 0,
+              max_tokens: Optional[int] = None):
+        """Longest shared prefix of ``key`` already in the cache.
+
+        Returns ``(blocks, n_tokens)`` — ``n_tokens`` is a multiple of
+        ``block_size``, capped at the largest block multiple <=
+        ``max_tokens`` (callers cap at ``len(prompt) - 1`` so at least
+        one suffix token remains to produce admission logits).  Every
+        returned page is incref'd FOR THE CALLER, and the touched nodes
+        are LRU-stamped.
+        """
+        key = np.asarray(key, np.int64)
+        bs = self.block_size
+        nodes, blocks, matched = self._match_walk(namespace, key)
+        if max_tokens is not None and matched > max_tokens:
+            matched = (max_tokens // bs) * bs
+            blocks = blocks[:matched // bs]
+        if matched == 0:
+            self.misses += 1
+            return [], 0
+        stamp = next(self._clock)
+        for nd in nodes:
+            nd.stamp = stamp
+        self.pool.share(blocks)
+        self.hits += 1
+        self.hit_blocks += len(blocks)
+        return list(blocks), matched
+
+    def unrecord_hit(self, n_blocks: int) -> None:
+        """Roll back one recorded hit whose chain the reader released
+        WITHOUT using it (e.g. admission skipped the request this
+        round and will re-match later) — keeps ``hits``/``hit_blocks``
+        meaning "admissions actually served from the cache" instead of
+        counting every retry of the same queued request."""
+        self.hits -= 1
+        self.hit_blocks -= n_blocks
+
+    # ------------------------------------------------------------------
+    def _split(self, node: _Node, at: int) -> None:
+        """Split ``node``'s edge after ``at`` tokens (block multiple):
+        node keeps the head, a new child gets the tail + old children."""
+        bs = self.block_size
+        tail = _Node(node.key[at:], node.blocks[at // bs:], node)
+        tail.children = node.children
+        for c in tail.children.values():
+            c.parent = tail
+        tail.stamp = node.stamp
+        node.key = node.key[:at]
+        node.blocks = node.blocks[:at // bs]
+        node.children = {int(tail.key[0]): tail}
+
+    def insert(self, key, blocks: list[int], namespace: int = 0) -> list[int]:
+        """Index ``blocks`` (whole pages covering ``key``) under the
+        tree, adopting the caller's pool references for pages that
+        extend it.  Returns the caller's ids made redundant by an
+        existing indexed prefix — the caller must free those.  ``key``
+        length must equal ``len(blocks) * block_size``."""
+        key = np.asarray(key, np.int64)
+        bs = self.block_size
+        if len(key) != len(blocks) * bs:
+            raise ValueError(
+                f"insert: key of {len(key)} tokens vs {len(blocks)} "
+                f"blocks of {bs}")
+        if not blocks:
+            return []
+        node = self._root(namespace)
+        pos = 0
+        stamp = next(self._clock)
+        node.stamp = stamp
+        while pos < len(key):
+            child = node.children.get(int(key[pos]))
+            if child is None:
+                new = _Node(key[pos:], list(blocks[pos // bs:]), node)
+                new.stamp = stamp
+                node.children[int(key[pos])] = new
+                self.inserted_blocks += len(new.blocks)
+                return list(blocks[:pos // bs])     # duplicates of prefix
+            n_eq = self._common_blocks(child.key, key, pos)
+            child.stamp = stamp
+            if n_eq < len(child.key):
+                if n_eq == 0:
+                    # same first token, different first block: keying
+                    # them apart is impossible in a radix over first
+                    # tokens — keep the resident chain, adopt nothing
+                    return list(blocks)
+                self._split(child, n_eq)
+            pos += n_eq
+            node = child
+            if pos >= len(key):
+                break
+        return list(blocks)                          # fully duplicate
+
+    # ------------------------------------------------------------------
+    def _evictable(self, node: _Node) -> bool:
+        """A subtree is evictable iff every page in it has pool
+        refcount 1 (the cache's own reference) — no active reader."""
+        return all(self.pool.refcount(b) == 1 for b in node.blocks) and \
+            all(self._evictable(c) for c in node.children.values())
+
+    def evictable_blocks(self) -> int:
+        """Pages the cache could return to the pool RIGHT NOW (maximal
+        evictable subtrees) — admission counts these as available."""
+        def count(node: _Node) -> int:
+            if self._evictable(node):
+                return self._size(node)
+            return sum(count(c) for c in node.children.values())
+        return sum(count(r) for r in self._roots.values())
+
+    @staticmethod
+    def _size(node: _Node) -> int:
+        return len(node.blocks) + sum(RadixPrefixCache._size(c)
+                                      for c in node.children.values())
+
+    def _leaves(self) -> list[_Node]:
+        out = []
+
+        def walk(node):
+            if not node.children and node.parent is not None:
+                out.append(node)
+            for c in node.children.values():
+                walk(c)
+        for r in self._roots.values():
+            walk(r)
+        return out
+
+    def evict(self, n_blocks: int) -> int:
+        """Free LRU leaf chains (cache-only pages) until ``n_blocks``
+        pages returned to the pool or nothing more is evictable.
+        Returns the number of pages actually freed."""
+        freed = 0
+        while freed < n_blocks:
+            leaves = [lf for lf in self._leaves()
+                      if all(self.pool.refcount(b) == 1
+                             for b in lf.blocks)]
+            if not leaves:
+                break
+            victim = min(leaves, key=lambda nd: nd.stamp)
+            self.pool.free(victim.blocks)
+            freed += len(victim.blocks)
+            self.evicted_blocks += len(victim.blocks)
+            parent = victim.parent
+            del parent.children[int(victim.key[0])]
+        return freed
+
+    # ------------------------------------------------------------------
+    @property
+    def num_blocks(self) -> int:
+        """Pages currently indexed (cache holds one ref each)."""
+        return sum(self._size(r) for r in self._roots.values())
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hits / total if total else 0.0,
+            "hit_blocks": self.hit_blocks,
+            "cached_blocks": self.num_blocks,
+            "evicted_blocks": self.evicted_blocks,
+            "inserted_blocks": self.inserted_blocks,
+        }
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (f"RadixPrefixCache(blocks={self.num_blocks}, "
+                f"hits={self.hits}, misses={self.misses})")

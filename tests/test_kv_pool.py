@@ -74,6 +74,74 @@ def test_blocks_for_tokens():
     assert blocks_for_tokens(17, 16) == 2
 
 
+def test_share_and_fork_cow_semantics():
+    """share() adds an owner; fork() trades the caller's reference on a
+    SHARED page for a fresh private page, and is a no-op (same id, no
+    alloc) when the caller already owns the page exclusively."""
+    pool = KVBlockPool(4, 16)
+    (b,) = pool.alloc(1)
+    assert pool.fork(b) == b            # sole owner: nothing to do
+    pool.share([b])                     # second owner appears
+    nb = pool.fork(b)
+    assert nb != b
+    assert pool.refcount(b) == 1 and pool.refcount(nb) == 1
+    pool.assert_consistent()
+    pool.free([b, nb])
+    assert pool.num_free == 4
+    with pytest.raises(ValueError):
+        pool.fork(b)                    # unallocated
+
+
+def test_fork_exhaustion_is_atomic():
+    pool = KVBlockPool(2, 16)
+    a, b = pool.alloc(2)
+    pool.share([a])
+    with pytest.raises(PoolExhausted):
+        pool.fork(a)                    # no free page for the copy
+    assert pool.refcount(a) == 2        # caller's reference untouched
+    pool.assert_consistent()
+
+
+def test_assert_consistent_catches_drift():
+    pool = KVBlockPool(4, 16)
+    pool.alloc(2)
+    pool.assert_consistent()
+    pool._refcount[3] = 1               # corrupt: free page with a ref
+    with pytest.raises(RuntimeError, match="drift|live refcount"):
+        pool.assert_consistent()
+
+
+def test_randomized_alloc_share_fork_free_interleavings():
+    """Property-style stress: any interleaving of alloc/share/fork/free
+    keeps the accounting invariant, and when every logical owner
+    releases, the pool is exactly full again."""
+    pool = KVBlockPool(12, 16)
+    rng = np.random.default_rng(42)
+    held = []                           # one entry per owned reference
+    for step in range(2000):
+        ops = ["alloc", "free", "share", "fork"]
+        op = ops[rng.integers(len(ops))]
+        if op == "alloc" and pool.num_free:
+            held.extend(pool.alloc(int(rng.integers(
+                1, pool.num_free + 1))))
+        elif op == "free" and held:
+            pool.free([held.pop(rng.integers(len(held)))])
+        elif op == "share" and held:
+            b = held[rng.integers(len(held))]
+            pool.share([b])
+            held.append(b)
+        elif op == "fork" and held and pool.num_free:
+            i = rng.integers(len(held))
+            held[i] = pool.fork(held[i])
+        pool.assert_consistent()
+        owned = len(set(held))
+        assert pool.num_used == owned, (step, op)
+        assert sorted(np.nonzero(pool._refcount)[0]) == sorted(set(held))
+    pool.free(held)
+    pool.assert_consistent()
+    assert pool.num_free == pool.num_blocks
+
+
 # ---------------------------------------------------------------------------
 # engine capacity semantics
 # ---------------------------------------------------------------------------

@@ -1,0 +1,455 @@
+"""Shared-prefix radix cache: index semantics, engine integration, and
+the behaviour-invariance contract.
+
+The tentpole property under test: tokens decoded after a radix-cache
+prefix HIT are bit-identical to a cold (cache-off) run — including
+under temperature/top-k sampling and across preempt/resume — while the
+prefix's prefill is skipped entirely.  Sharable families (fully-paged
+state) are exercised for real hits; non-sharable configs must keep the
+cache disabled and behave exactly as before.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.serving import (EdgeServingEngine, KVBlockPool, RadixPrefixCache,
+                           Request, ServeConfig)
+
+
+# ---------------------------------------------------------------------------
+# radix index semantics (host-side, real pool refcounts)
+# ---------------------------------------------------------------------------
+
+BS = 4
+
+
+def _pool_cache(blocks=32):
+    pool = KVBlockPool(blocks, BS)
+    return pool, RadixPrefixCache(pool)
+
+
+def _key(*toks):
+    return np.asarray(toks, np.int64)
+
+
+def test_insert_then_match_shares_pages():
+    pool, cache = _pool_cache()
+    b = pool.alloc(2)
+    assert cache.insert(_key(*range(8)), b) == []      # both pages adopted
+    got, n = cache.match(_key(*range(8), 99, 98), max_tokens=9)
+    assert got == b and n == 8
+    assert all(pool.refcount(x) == 2 for x in b)       # cache + reader
+    pool.free(got)                                     # reader releases
+    assert all(pool.refcount(x) == 1 for x in b)
+
+
+def test_match_caps_at_block_multiple_of_max_tokens():
+    pool, cache = _pool_cache()
+    b = pool.alloc(2)
+    cache.insert(_key(*range(8)), b)
+    got, n = cache.match(_key(*range(8)), max_tokens=7)
+    assert n == 4 and got == b[:1]      # one token short => one block less
+    pool.free(got)
+    got, n = cache.match(_key(*range(5)), max_tokens=4)
+    assert n == 4 and got == b[:1]      # partial second block never matches
+    pool.free(got)
+
+
+def test_insert_duplicate_chain_is_deduped():
+    pool, cache = _pool_cache()
+    b1 = pool.alloc(2)
+    cache.insert(_key(*range(8)), b1)
+    b2 = pool.alloc(2)
+    # same tokens admitted cold concurrently: second copy is redundant
+    assert cache.insert(_key(*range(8)), b2) == b2
+    pool.free(b2)
+    assert cache.num_blocks == 2
+    pool.assert_consistent()
+
+
+def test_insert_extension_adopts_only_the_tail():
+    pool, cache = _pool_cache()
+    b1 = pool.alloc(2)
+    cache.insert(_key(*range(8)), b1)
+    b3 = pool.alloc(3)                  # 12 tokens, first 8 identical
+    dups = cache.insert(_key(*range(12)), b3)
+    assert dups == b3[:2]               # prefix already indexed
+    pool.free(dups)
+    got, n = cache.match(_key(*range(12), 5), max_tokens=12)
+    assert n == 12 and got == b1 + b3[2:]
+    pool.free(got)
+
+
+def test_insert_divergent_chain_splits_edge():
+    pool, cache = _pool_cache()
+    b1 = pool.alloc(3)
+    cache.insert(_key(*range(12)), b1)
+    div = list(range(8)) + [77, 78, 79, 80]     # diverges at block 2
+    b2 = pool.alloc(3)
+    dups = cache.insert(_key(*div), b2)
+    assert dups == b2[:2]
+    pool.free(dups)
+    got, n = cache.match(_key(*div, 1), max_tokens=12)
+    assert n == 12 and got == b1[:2] + b2[2:]
+    pool.free(got)
+    got, n = cache.match(_key(*range(12), 1), max_tokens=12)
+    assert n == 12 and got == b1
+    pool.free(got)
+
+
+def test_unrecord_hit_rolls_back_retry_stats():
+    """A reader that releases its chain unused (admission retry under
+    pool pressure) must not inflate hit counters: after N acquire/
+    release cycles the stats read as if nothing was ever served."""
+    pool, cache = _pool_cache()
+    b = pool.alloc(2)
+    cache.insert(_key(*range(8)), b)
+    for _ in range(5):
+        got, n = cache.match(_key(*range(8), 1), max_tokens=8)
+        assert n == 8
+        pool.free(got)
+        cache.unrecord_hit(len(got))
+    assert cache.hits == 0 and cache.hit_blocks == 0
+    got, _ = cache.match(_key(*range(8), 1), max_tokens=8)
+    assert cache.hits == 1 and cache.hit_blocks == 2
+    pool.free(got)
+
+
+def test_namespaces_do_not_cross_match():
+    pool, cache = _pool_cache()
+    b = pool.alloc(2)
+    cache.insert(_key(*range(8)), b, namespace=111)
+    got, n = cache.match(_key(*range(8)), namespace=222, max_tokens=8)
+    assert n == 0 and got == []
+    got, n = cache.match(_key(*range(8)), namespace=111, max_tokens=8)
+    assert n == 8
+    pool.free(got)
+
+
+def test_evict_lru_skips_pinned_chains():
+    pool, cache = _pool_cache(blocks=8)
+    b1 = pool.alloc(2)
+    cache.insert(_key(1, 1, 1, 1, 2, 2, 2, 2), b1)
+    b2 = pool.alloc(2)
+    cache.insert(_key(3, 3, 3, 3, 4, 4, 4, 4), b2)
+    # touch chain 1 => chain 2 is LRU
+    got, _ = cache.match(_key(1, 1, 1, 1, 2, 2, 2, 2), max_tokens=8)
+    assert cache.evictable_blocks() == 2       # only the unpinned chain 2
+    freed = cache.evict(1)
+    assert freed == 2 and pool.refcount(b2[0]) == 0
+    # chain 1 pinned by the reader: nothing more to evict
+    assert cache.evict(4) == 0
+    pool.free(got)
+    assert cache.evict(4) == 2                 # now reclaimable
+    pool.assert_consistent()
+    assert pool.num_free == pool.num_blocks
+
+
+# ---------------------------------------------------------------------------
+# engine integration: hit == cold, per family
+# ---------------------------------------------------------------------------
+
+SHARABLE = ["phi3-medium-14b", "granite-moe-1b-a400m", "internvl2-76b",
+            "whisper-base"]
+
+
+def _family_setup(arch):
+    cfg = get_smoke_config(arch)
+    if cfg.family == "moe":
+        cfg = cfg.replace(capacity_factor=100.0)   # no token dropping
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _extras(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    e = {}
+    if cfg.family == "encdec":
+        e["audio_embeds"] = rng.normal(
+            0, 0.1, (cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+    if cfg.family == "vlm":
+        e["image_embeds"] = rng.normal(
+            0, 0.1, (cfg.num_image_tokens, cfg.image_embed_dim)
+        ).astype(np.float32)
+    return e
+
+
+def _shared_traffic(cfg, n=4, sys_len=24):
+    """n requests sharing a system prompt, unique tails, mixed
+    sampling params; same extras (sharing requires identical
+    non-token inputs)."""
+    rng = np.random.default_rng(7)
+    sys_prompt = rng.integers(0, cfg.vocab_size, sys_len, dtype=np.int32)
+    ext = _extras(cfg)
+    reqs = []
+    for uid in range(n):
+        r2 = np.random.default_rng(50 + uid)
+        tail = r2.integers(0, cfg.vocab_size, 4 + uid, dtype=np.int32)
+        reqs.append(Request(
+            uid=uid, prompt=np.concatenate([sys_prompt, tail]),
+            max_new_tokens=5, extras=dict(ext),
+            temperature=0.8 if uid % 2 else 0.0,
+            top_k=6 if uid % 2 else 0))
+    return reqs
+
+
+def _run_sequential(cfg, params, reqs, prefix_cache):
+    eng = EdgeServingEngine(cfg, params, ServeConfig(
+        max_slots=2, max_len=96, prefill_buckets=(16, 32), seed=5,
+        prefix_cache=prefix_cache))
+    for r in reqs:
+        eng.submit(r)
+        eng.run_until_drained()
+    return eng, {r.uid: tuple(r.generated) for r in eng.completed}
+
+
+@pytest.mark.parametrize("arch", SHARABLE)
+def test_prefix_hit_decode_bit_identical_to_cold(arch):
+    """Sequential same-prefix traffic: later requests HIT the radix
+    cache (prefix prefill skipped) yet decode token-for-token exactly
+    what a cache-off engine decodes — greedy AND sampled."""
+    cfg, params = _family_setup(arch)
+    eng_off, cold = _run_sequential(cfg, params, _shared_traffic(cfg), False)
+    eng_on, hot = _run_sequential(cfg, params, _shared_traffic(cfg), True)
+    assert eng_off.prefix_cache is None
+    assert hot == cold
+    st = eng_on.prefix_cache.stats()
+    assert st["hits"] >= 2, st          # sharing really engaged
+    eng_on.pool.assert_consistent()
+    # no page leak: every page is free or owned by the cache index
+    assert (eng_on.pool.num_free + eng_on.prefix_cache.num_blocks
+            == eng_on.pool.num_blocks)
+
+
+@pytest.mark.parametrize("arch", ["internvl2-76b", "whisper-base"])
+def test_different_extras_never_share(arch):
+    """Same token ids but different image/audio => KV differs => the
+    namespace digest must force a MISS (sharing would corrupt decode)."""
+    cfg, params = _family_setup(arch)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, 24, dtype=np.int32)
+    reqs = [Request(uid=0, prompt=prompt.copy(), max_new_tokens=4,
+                    extras=_extras(cfg, seed=0)),
+            Request(uid=1, prompt=prompt.copy(), max_new_tokens=4,
+                    extras=_extras(cfg, seed=1))]      # different extras
+    eng, hot = _run_sequential(cfg, params, reqs, True)
+    assert eng.prefix_cache.hits == 0
+    _, cold = _run_sequential(
+        cfg, params,
+        [Request(uid=1, prompt=prompt.copy(), max_new_tokens=4,
+                 extras=_extras(cfg, seed=1))], False)
+    assert hot[1] == cold[1]
+
+
+def test_nonsharable_configs_keep_cache_off():
+    """Local-ring (gemma pattern) and recurrent (ssm/hybrid) state is
+    not reconstructible from pages: the radix cache must stay disabled
+    and admission must be the plain cold path."""
+    for arch in ("gemma3-1b", "mamba2-370m", "zamba2-7b"):
+        cfg, params = _family_setup(arch)
+        eng = EdgeServingEngine(cfg, params, ServeConfig(
+            max_slots=2, max_len=64, prefill_buckets=(16,),
+            prefix_cache=True))
+        assert eng.prefix_cache is None and not eng.sharable
+        rng = np.random.default_rng(0)
+        eng.submit(Request(uid=0,
+                           prompt=rng.integers(0, cfg.vocab_size, 6,
+                                               dtype=np.int32),
+                           max_new_tokens=3))
+        assert len(eng.run_until_drained()) == 1
+
+
+# ---------------------------------------------------------------------------
+# preemption while pages are shared
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["phi3-medium-14b",
+                                  "granite-moe-1b-a400m"])
+def test_preempt_shared_pages_resumes_bit_identical(arch):
+    """Preempt a request whose prefix pages are SHARED with the radix
+    cache mid-decode, resume it, and require token-for-token equality
+    with both an uninterrupted cache-on run and a cache-off run — plus
+    zero page leak afterwards."""
+    cfg, params = _family_setup(arch)
+    rng = np.random.default_rng(11)
+    # lengths chosen so cold and hit admissions have the SAME decode
+    # wave schedule (no chunked catch-up): the engine's sampling keys
+    # are indexed by wave, so only an aligned schedule can be compared
+    # token-for-token under temperature
+    sys_prompt = rng.integers(0, cfg.vocab_size, 16, dtype=np.int32)
+    tail = rng.integers(0, cfg.vocab_size, 5, dtype=np.int32)
+
+    def fresh(uid):
+        return Request(uid=uid, prompt=np.concatenate([sys_prompt, tail]),
+                       max_new_tokens=8, temperature=0.9, top_k=8)
+
+    def seed_chain(eng):
+        r0 = Request(uid=0, prompt=sys_prompt.copy(), max_new_tokens=2)
+        eng.submit(r0)
+        eng.run_until_drained()
+
+    scfg = ServeConfig(max_slots=1, max_len=96, prefill_buckets=(8, 32),
+                       seed=9, prefix_cache=True)
+    # uninterrupted cache-on baseline
+    eng0 = EdgeServingEngine(cfg, params, scfg)
+    seed_chain(eng0)
+    eng0.submit(fresh(1))
+    eng0.run_until_drained()
+    baseline = tuple(eng0.completed[-1].generated)
+    assert eng0.prefix_cache.hits >= 1
+
+    # cache-off baseline (same request sequence => same rng stream):
+    # sharing must not change tokens at all
+    engc = EdgeServingEngine(cfg, params, ServeConfig(
+        max_slots=1, max_len=96, prefill_buckets=(8, 32), seed=9,
+        prefix_cache=False))
+    seed_chain(engc)
+    engc.submit(fresh(1))
+    engc.run_until_drained()
+    assert tuple(engc.completed[-1].generated) == baseline
+
+    # preempt mid-decode while holding shared pages, then resume
+    eng = EdgeServingEngine(cfg, params, scfg)
+    seed_chain(eng)
+    req = fresh(1)
+    eng.submit(req)
+    eng.step()
+    eng.step()
+    assert not req.done and len(req.generated) >= 1
+    shared = [b for b in eng.slot_blocks[0] if eng.pool.refcount(b) > 1]
+    assert shared, "the slot should hold cache-shared prefix pages"
+    got = eng.preempt(0)
+    eng.pool.assert_consistent()
+    eng.submit(got)
+    eng.run_until_drained()
+    assert tuple(got.generated) == baseline
+    assert len(eng._prefills) and got.saved_state is None
+    eng.pool.assert_consistent()
+    assert (eng.pool.num_free + eng.prefix_cache.num_blocks
+            == eng.pool.num_blocks)
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write guard
+# ---------------------------------------------------------------------------
+
+def test_cow_guard_forks_shared_tail_page():
+    """If the page a slot is about to WRITE gains a second owner, the
+    engine must fork it (private copy) before the wave — decode output
+    unchanged, refcounts balanced.  Block-granular matching never
+    produces this organically; simulate the future sharer directly."""
+    cfg, params = _family_setup("phi3-medium-14b")
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab_size, 6, dtype=np.int32)
+
+    def run(poke):
+        eng = EdgeServingEngine(cfg, params, ServeConfig(
+            max_slots=1, max_len=64, prefill_buckets=(8,), seed=1))
+        eng.submit(Request(uid=0, prompt=prompt.copy(), max_new_tokens=6))
+        eng.step()
+        stolen = None
+        if poke:
+            j = int(eng.pos[0]) // eng.block_size
+            stolen = eng.slot_blocks[0][j]
+            eng.pool.share([stolen])        # simulated second owner
+        eng.run_until_drained()
+        if stolen is not None:
+            assert eng.cow_forks >= 1
+            assert eng.pool.refcount(stolen) == 1   # only our fake owner
+            eng.pool.free([stolen])
+        eng.pool.assert_consistent()
+        return tuple(eng.completed[0].generated), eng
+
+    base, _ = run(poke=False)
+    forked, eng = run(poke=True)
+    assert forked == base               # fork is invisible to decode
+    cached = eng.prefix_cache.num_blocks if eng.prefix_cache else 0
+    assert eng.pool.num_free + cached == eng.pool.num_blocks
+
+
+# ---------------------------------------------------------------------------
+# pallas paged-decode swap-in
+# ---------------------------------------------------------------------------
+
+def test_pallas_paged_decode_matches_gather_tokens():
+    """ServeConfig.use_pallas_paged routes the jitted decode through the
+    Pallas paged_attention kernel; at f32 the token stream must equal
+    the jnp-gather path exactly (at bf16 they differ only by the
+    kernel's f32 PV accumulation — checked at the logits level below)."""
+    cfg = get_smoke_config("phi3-medium-14b").replace(dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    def run(use_pallas):
+        eng = EdgeServingEngine(cfg, params, ServeConfig(
+            max_slots=2, max_len=64, prefill_buckets=(8,),
+            use_pallas_paged=use_pallas))
+        for uid in range(2):
+            r2 = np.random.default_rng(uid)
+            eng.submit(Request(uid=uid,
+                               prompt=r2.integers(0, cfg.vocab_size, 6,
+                                                  dtype=np.int32),
+                               max_new_tokens=5))
+        return {r.uid: tuple(r.generated)
+                for r in eng.run_until_drained()}
+
+    assert run(True) == run(False)
+
+
+def test_pallas_paged_decode_logits_close_bf16():
+    """Layer-level check at serving dtype (bf16): one decode_step_paged
+    with the kernel vs the gather read, logits allclose to bf16
+    accumulation tolerance."""
+    cfg = get_smoke_config("phi3-medium-14b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    nB, bs, max_len = 12, 16, 64
+    cache = M.init_paged_cache(cfg, 2, max_len, nB, bs)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 9), 0,
+                              cfg.vocab_size, jnp.int32)
+    wt = jnp.asarray([[7, -1, -1, -1], [5, -1, -1, -1]], jnp.int32)
+    _, cache = M.prefill_paged(cfg, params, {"tokens": toks}, max_len,
+                               cache, slots=jnp.asarray([0, 1], jnp.int32),
+                               write_tables=wt,
+                               true_len=jnp.asarray([9, 6], jnp.int32))
+    nxt = jnp.asarray([[3], [4]], jnp.int32)
+    pos = jnp.asarray([9, 6], jnp.int32)
+    lg_g, _ = M.decode_step_paged(cfg, params, cache, nxt, pos, wt, False)
+    lg_p, _ = M.decode_step_paged(cfg, params, cache, nxt, pos, wt, True)
+    np.testing.assert_allclose(np.asarray(lg_p, np.float32),
+                               np.asarray(lg_g, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# pool pressure: eviction keeps admission live, invariant every step
+# ---------------------------------------------------------------------------
+
+def test_eviction_under_pressure_and_invariant_every_step():
+    """A pool sized well below (chains + new traffic): finished chains
+    park in the cache, later admissions evict LRU chains for pages.
+    Everything drains, output equals the cache-off run, and the pool
+    invariant holds at every drain_step (checked internally)."""
+    cfg, params = _family_setup("phi3-medium-14b")
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size, 20 + 3 * i, dtype=np.int32)
+               for i in range(6)]
+
+    def run(prefix_cache):
+        eng = EdgeServingEngine(cfg, params, ServeConfig(
+            max_slots=2, max_len=64, prefill_buckets=(8, 16, 32),
+            kv_block_size=16, kv_pool_blocks=8, seed=0,
+            prefix_cache=prefix_cache))
+        for uid, p in enumerate(prompts):
+            eng.submit(Request(uid=uid, prompt=p.copy(), max_new_tokens=6))
+        eng.run_until_drained()
+        return eng, {r.uid: tuple(r.generated) for r in eng.completed}
+
+    eng_on, hot = run(True)
+    eng_off, cold = run(False)
+    assert len(hot) == 6 and hot == cold
+    assert eng_on.prefix_cache.evicted_blocks > 0   # pressure really evicted
+    eng_on.pool.assert_consistent()
+    assert (eng_on.pool.num_free + eng_on.prefix_cache.num_blocks
+            == eng_on.pool.num_blocks)
