@@ -11,7 +11,11 @@ same-KV-byte-budget demo showing the paged engine admitting more
 concurrent tenants than ``max_slots`` dense strips would allow, and a
 shared-prefix scenario (N users, one household system prompt, on a
 fully-paged arch) reporting radix prefix-cache hit-rate and TTFT on
-cache hits vs a cold prefill.
+cache hits vs a cold prefill, and a speculative-decoding scenario
+(mixed traffic, verify=phi3 with a gemma3-1b cross draft AND the
+early-exit self-draft) reporting tokens/sec, acceptance rate and mean
+tokens per verify step against the non-speculative baseline — greedy
+spec output is gated to be bit-identical to vanilla.
 
   PYTHONPATH=src python -m benchmarks.serving_throughput [--requests N]
       [--write-baseline PATH] [--check PATH]
@@ -35,8 +39,13 @@ from repro.serving import EdgeServingEngine, Request, ServeConfig
 
 ARCH = "gemma3-1b"
 # fully-paged arch for the shared-prefix scenario (gemma's local-ring
-# layers are not prefix-sharable — see model.prefix_sharable)
+# layers are not prefix-sharable — see model.prefix_sharable); also the
+# speculative-decoding VERIFY model (spec needs model.spec_decodable)
 SHARED_ARCH = "phi3-medium-14b"
+# cross-model draft for the speculative scenario (any registry arch
+# with a matching vocab; smoke configs all share vocab 512)
+SPEC_DRAFT_ARCH = "gemma3-1b"
+SPEC_GAMMA = 4
 # (lo, hi) prompt-length bands of the traffic mix — 9..97 crosses every
 # bucket boundary below and the largest band exceeds the largest bucket
 _BANDS = ((4, 12), (20, 40), (70, 100))
@@ -51,7 +60,14 @@ MIN_THROUGHPUT_RATIO = 0.25
 EXACT_FIELDS = ("requests", "decode_steps", "tokens", "peak_active",
                 "demo_dense_slots", "demo_paged_concurrent",
                 "shared_requests", "shared_hits", "shared_hit_blocks",
-                "shared_tokens")
+                "shared_tokens",
+                # speculative scenario: greedy spec == vanilla bit-match
+                # plus the (seed-deterministic) protocol counters
+                "spec_requests", "spec_tokens", "spec_matches_vanilla",
+                "spec_base_steps", "spec_cross_steps",
+                "spec_cross_proposed", "spec_cross_accepted",
+                "spec_self_steps", "spec_self_proposed",
+                "spec_self_accepted")
 
 
 def _workload(n_requests: int, vocab: int, seed: int = 0):
@@ -151,6 +167,71 @@ def _shared_prefix_demo(seed: int = 0, n_users: int = 8) -> dict:
     }
 
 
+def _spec_demo(seed: int = 0, n_requests: int = 12) -> dict:
+    """Speculative decoding on mixed traffic: verify=phi3 (fully paged)
+    with (a) a cross-model draft (gemma3-1b smoke — random weights, so
+    acceptance is essentially the chance floor: the scenario is an
+    upper bound on the PROTOCOL overhead) and (b) the early-exit
+    self-draft (first half of the verify trunk — shared weights, real
+    logit correlation, so acceptance and tokens/step are meaningfully
+    above 1).  Both are greedily BIT-equal to the vanilla engine, which
+    is gated as a deterministic baseline field."""
+    cfg = get_smoke_config(SHARED_ARCH)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    dcfg = get_smoke_config(SPEC_DRAFT_ARCH)
+    dparams = M.init_params(dcfg, jax.random.PRNGKey(1))
+    base_scfg = ServeConfig(max_slots=4, max_len=192,
+                            prefill_buckets=(16, 32, 64),
+                            spec_gamma=SPEC_GAMMA)
+    spec_scfg = ServeConfig(max_slots=4, max_len=192,
+                            prefill_buckets=(16, 32, 64),
+                            spec_decode=True, spec_gamma=SPEC_GAMMA)
+
+    def measure(scfg, draft=None):
+        eng = EdgeServingEngine(cfg, params, scfg, draft=draft)
+        for r in _workload(n_requests, cfg.vocab_size, seed=seed):
+            eng.submit(r)
+        eng.run_until_drained()          # warm every compile variant
+        eng.completed.clear()
+        eng.steps = eng.spec_steps = eng.spec_rounds = 0
+        eng.spec_proposed = eng.spec_accepted = eng.spec_emitted = 0
+        eng.reset_rng()
+        t0 = time.perf_counter()
+        for r in _workload(n_requests, cfg.vocab_size, seed=seed):
+            eng.submit(r)
+        eng.run_until_drained()
+        elapsed = time.perf_counter() - t0
+        eng.pool.assert_consistent()
+        toks = {r.uid: tuple(r.generated) for r in eng.completed}
+        return eng, elapsed, toks
+
+    eng0, el0, base_toks = measure(base_scfg)
+    engc, elc, cross_toks = measure(spec_scfg, draft=(dcfg, dparams))
+    import dataclasses
+    engs, els, self_toks = measure(
+        dataclasses.replace(spec_scfg, draft_arch="self"))
+    n_tok = sum(len(t) for t in base_toks.values())
+    out = {
+        "spec_requests": n_requests,
+        "spec_tokens": n_tok,
+        "spec_matches_vanilla": (cross_toks == base_toks
+                                 and self_toks == base_toks),
+        "spec_base_steps": eng0.steps,
+        "spec_base_tok_per_s": n_tok / el0,
+    }
+    for tag, eng, el in (("cross", engc, elc), ("self", engs, els)):
+        st = eng.stats()
+        out.update({
+            f"spec_{tag}_steps": eng.steps,
+            f"spec_{tag}_proposed": st["spec_proposed"],
+            f"spec_{tag}_accepted": st["spec_accepted"],
+            f"spec_{tag}_accept_rate": st["spec_acceptance"],
+            f"spec_{tag}_tokens_per_step": st["spec_tokens_per_round"],
+            f"spec_{tag}_tok_per_s": n_tok / el,
+        })
+    return out
+
+
 def run(n_requests: int = 12, seed: int = 0) -> dict:
     cfg = get_smoke_config(ARCH)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -205,6 +286,7 @@ def run(n_requests: int = 12, seed: int = 0) -> dict:
     }
     out.update(_admission_demo(cfg, params, seed))
     out.update(_shared_prefix_demo(seed))
+    out.update(_spec_demo(seed, n_requests))
     return out
 
 
@@ -250,6 +332,10 @@ def bench():
         ("serving.shared_ttft_cold_ms", us, r["shared_ttft_cold_ms"]),
         ("serving.shared_ttft_hit_p50_ms", us,
          r["shared_ttft_hit_p50_ms"]),
+        ("serving.spec_self_tok_per_s", us, r["spec_self_tok_per_s"]),
+        ("serving.spec_self_tokens_per_step", us,
+         r["spec_self_tokens_per_step"]),
+        ("serving.spec_self_accept_rate", us, r["spec_self_accept_rate"]),
     ]
 
 

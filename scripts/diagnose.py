@@ -6,6 +6,8 @@ ops by bytes / flops / collective bytes (trip-scaled, per chip).
 
   PYTHONPATH=src python scripts/diagnose.py <arch> <shape> [top]
   PYTHONPATH=src python scripts/diagnose.py --compat   # JAX/shim status
+  PYTHONPATH=src python scripts/diagnose.py --spec [verify] [draft] \
+      [gamma] [max_len]   # draft/verify speculative compatibility
 """
 import json
 import sys
@@ -20,9 +22,44 @@ from repro.training import optimizer as opt
 from repro.training import trainer as tr
 
 
+def spec_report(args: list) -> None:
+    """Per-arch speculative capabilities + a draft/verify pairing
+    verdict (vocab match, verify spec_decodable, gamma bounds) via the
+    same ``validate_spec`` the engine enforces."""
+    from repro.configs.registry import ARCH_IDS
+    from repro.configs import get_smoke_config
+    from repro.serving.spec_decode import validate_spec
+    caps = {}
+    for arch in ARCH_IDS:
+        cfg = get_smoke_config(arch)
+        caps[arch] = {
+            "family": cfg.family,
+            "vocab": cfg.vocab_size,
+            "extendable": M.extendable(cfg),       # multi-token catch-up
+            "spec_decodable": M.spec_decodable(cfg),  # verify-capable
+        }
+    print("spec capabilities:", json.dumps(caps, indent=1))
+    verify = args[0] if len(args) > 0 else "phi3-medium-14b"
+    draft = args[1] if len(args) > 1 else "gemma3-1b"
+    gamma = int(args[2]) if len(args) > 2 else 4
+    max_len = int(args[3]) if len(args) > 3 else 256
+    problems = validate_spec(get_smoke_config(verify),
+                             get_smoke_config(draft), gamma, max_len)
+    print(f"pairing verify={verify} draft={draft} gamma={gamma} "
+          f"max_len={max_len}:")
+    if problems:
+        for p in problems:
+            print(f"  INCOMPATIBLE: {p}")
+        sys.exit(1)
+    print("  ok (vocab match, verify spec_decodable, gamma in bounds)")
+
+
 def main():
     from repro.compat import report
     print("compat:", json.dumps(report()))
+    if "--spec" in sys.argv:
+        spec_report([a for a in sys.argv[1:] if not a.startswith("-")])
+        return
     if "--compat" in sys.argv or len(sys.argv) < 3:
         return
     arch, shape_name = sys.argv[1], sys.argv[2]

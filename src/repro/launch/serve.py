@@ -36,6 +36,14 @@ def main() -> None:
     ap.add_argument("--policy", choices=("fifo", "priority", "edf"),
                     default="priority",
                     help="QoE admission ordering (core.scheduler)")
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative decoding (serving.spec_decode)")
+    ap.add_argument("--draft", default="self",
+                    help="draft arch for --spec: a registry id, or "
+                         "'self' for the early-exit self-draft")
+    ap.add_argument("--gamma", type=int, default=4,
+                    help="speculation width (proposals per round + 1); "
+                         "also the multi-token catch-up chunk")
     ap.add_argument("--min-prompt", type=int, default=4)
     ap.add_argument("--max-prompt", type=int, default=24)
     ap.add_argument("--params", default=None,
@@ -51,7 +59,9 @@ def main() -> None:
 
     scfg = ServeConfig(max_slots=args.slots, max_len=args.max_len,
                        temperature=args.temperature, top_k=args.top_k,
-                       policy=args.policy)
+                       policy=args.policy, spec_decode=args.spec,
+                       draft_arch=args.draft if args.spec else None,
+                       spec_gamma=args.gamma)
     eng = EdgeServingEngine(cfg, params, scfg)
 
     rng = np.random.default_rng(0)
@@ -89,7 +99,7 @@ def main() -> None:
     dt = time.time() - t0
     toks = sum(len(r.generated) for r in done)
     ttft = sorted((t_first[u] - t_submit[u]) * 1e3 for u in t_first)
-    print(json.dumps({
+    out = {
         "requests": len(done), "decode_steps": eng.steps,
         "tokens": toks, "elapsed_s": round(dt, 2),
         "tok_per_s": round(toks / dt, 1),
@@ -97,7 +107,15 @@ def main() -> None:
         "ttft_p99_ms": round(ttft[min(len(ttft) - 1,
                                       int(0.99 * len(ttft)))], 1),
         "policy": args.policy,
-    }))
+    }
+    if args.spec:
+        st = eng.stats()
+        out.update({
+            "spec_active": st["spec_active"],
+            "spec_accept_rate": round(st["spec_acceptance"], 3),
+            "spec_tokens_per_step": round(st["spec_tokens_per_round"], 3),
+        })
+    print(json.dumps(out))
     for r in done[:3]:
         print(f"  req {r.uid}: {list(map(int, r.generated[:10]))}...")
 

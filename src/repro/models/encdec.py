@@ -206,6 +206,90 @@ def decode_step_paged(cfg: ModelConfig, params: Params, cache: Params,
     return L.unembed(cfg, params["embed"], {}, x), new_cache
 
 
+def _cross_extend(cfg: ModelConfig, lp, h, ck, cv):
+    """Cross-attention for S decoder queries against the precomputed
+    per-slot cross K/V (the multi-query twin of ``attention_decode``'s
+    ``cross_kv`` branch — no cache update, mask all-ones)."""
+    B, S, _ = h.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // K
+    scale = cfg.attn_scale if cfg.attn_scale is not None else hd ** -0.5
+    q = jnp.einsum("bsd,dhq->bshq", h, lp["wq"].astype(h.dtype))
+    if cfg.use_qk_norm:
+        q = L.rmsnorm(lp["q_norm"], q, cfg.norm_eps)
+    qg = q.reshape(B, S, K, G, hd)
+    Tc = ck.shape[1]
+    mask = jnp.ones((1, 1, 1, S, Tc), bool)
+    out = L.attention_weights_and_out(qg, ck.astype(h.dtype),
+                                      cv.astype(h.dtype), mask,
+                                      scale=scale,
+                                      softcap=cfg.attn_logit_softcap)
+    return jnp.einsum("bshq,hqd->bsd", out.reshape(B, S, H, hd),
+                      lp["wo"].astype(h.dtype))
+
+
+def extend_paged(cfg: ModelConfig, params: Params, cache: Params, tokens,
+                 pos, block_tables, valid_len=None):
+    """Score S decoder tokens against the paged self-attn cache in one
+    call; cross K/V (encoder-length, written at prefill) is read as-is.
+    See ``transformer.extend_paged`` for the row semantics."""
+    B, S = tokens.shape
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    x = L.embed(cfg, params["embed"], tokens)
+    x = x + params["pos_table"][positions].astype(x.dtype)
+
+    def body(h, inp):
+        lp, sc, ck, cv = inp
+        a, sc2 = L.attention_extend_paged(
+            cfg, lp["self_attn"], L.layernorm(lp["ln1"], h, cfg.norm_eps),
+            pos, sc, block_tables, valid_len)
+        h = h + a
+        c = _cross_extend(cfg, lp["cross_attn"],
+                          L.layernorm(lp["ln2"], h, cfg.norm_eps), ck, cv)
+        h = h + c
+        m = L.gelu_mlp(lp["mlp"], L.layernorm(lp["ln3"], h, cfg.norm_eps))
+        return h + m, sc2
+
+    x, new_self = lax.scan(
+        body, x,
+        (params["decoder"], cache["self"], cache["cross_k"],
+         cache["cross_v"]))
+    new_cache = dict(cache, self=new_self)
+    x = L.layernorm(params["dec_ln"], x, cfg.norm_eps)
+    return L.unembed(cfg, params["embed"], {}, x), new_cache
+
+
+def extend(cfg: ModelConfig, params: Params, cache: Params, tokens, pos,
+           valid_len=None):
+    """Dense twin of ``extend_paged`` (strip self-attn caches)."""
+    B, S = tokens.shape
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    x = L.embed(cfg, params["embed"], tokens)
+    x = x + params["pos_table"][positions].astype(x.dtype)
+
+    def body(h, inp):
+        lp, sc, ck, cv = inp
+        a, sc2 = L.attention_extend(
+            cfg, lp["self_attn"], L.layernorm(lp["ln1"], h, cfg.norm_eps),
+            sc, pos, is_global=True, valid_len=valid_len)
+        h = h + a
+        c = _cross_extend(cfg, lp["cross_attn"],
+                          L.layernorm(lp["ln2"], h, cfg.norm_eps), ck, cv)
+        h = h + c
+        m = L.gelu_mlp(lp["mlp"], L.layernorm(lp["ln3"], h, cfg.norm_eps))
+        return h + m, sc2
+
+    x, new_self = lax.scan(
+        body, x,
+        (params["decoder"], cache["self"], cache["cross_k"],
+         cache["cross_v"]))
+    new_cache = dict(cache, self=new_self)
+    x = L.layernorm(params["dec_ln"], x, cfg.norm_eps)
+    return L.unembed(cfg, params["embed"], {}, x), new_cache
+
+
 def prefill(cfg: ModelConfig, params: Params, tokens, max_len, *,
             audio_embeds=None, use_flash=False, true_len=None):
     """Encode audio, run the prompt tokens, build decode cache."""

@@ -132,6 +132,20 @@ def decode_step_paged(cfg: ModelConfig, params: Params, cache: Params,
     return decode_step(cfg, params, cache, tokens, pos)
 
 
+def extend_paged(cfg: ModelConfig, params: Params, cache: Params, tokens,
+                 pos, block_tables, valid_len=None):
+    """Hybrid decode state = SSM recurrences + a shared-attn ring: both
+    advance irreversibly (the recurrence cannot roll back, ring writes
+    evict window context), so neither speculative verify nor multi-token
+    catch-up is offered — see ``model.spec_decodable``."""
+    raise NotImplementedError(
+        "hybrid has no multi-token extend: recurrent state cannot "
+        "roll back")
+
+
+extend = extend_paged  # the dense twin is gated identically
+
+
 def prefill_paged(cfg: ModelConfig, params: Params, tokens, max_len,
                   cache, *, slots, write_tables=None, ctx_tables=None,
                   ctx_len=None, true_len=None, use_flash=False,

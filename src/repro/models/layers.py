@@ -643,6 +643,153 @@ def attention_decode_paged(cfg: ModelConfig, params, x, cache, pos,
     return o, {"k": kc, "v": vc}
 
 
+def scatter_kv_tokens(pages, k, v, block_tables, pos, valid_len=None):
+    """Write ``S`` consecutive tokens' K/V into the page pool at absolute
+    positions ``pos + i`` through each row's block table (the multi-token
+    twin of the single-write in ``attention_decode_paged``).
+
+    pages: dict(k=(nB, bs, K, hd), v=...); k, v: (B, S, K, hd);
+    block_tables: (B, n_blk) int32 (-1 = unallocated -> write dropped);
+    pos: (B,) int32 first write position; valid_len: optional (B,) int32
+    — rows ``i >= valid_len`` are host-side padding whose writes are
+    dropped (a padded token must never touch a page: on families with
+    additional dense ring state the same drop keeps rings clean, and in
+    pages it keeps rollback reasoning local to REAL protocol writes).
+    Writes past the table's logical span (``n_blk * bs``) are dropped.
+    """
+    nB, bs = pages["k"].shape[0], pages["k"].shape[1]
+    B, S = k.shape[0], k.shape[1]
+    n_blk = block_tables.shape[1]
+    p = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]     # (B, S)
+    blk = jnp.clip(p // bs, 0, n_blk - 1)
+    off = p % bs
+    phys = jnp.take_along_axis(block_tables, blk, axis=1)          # (B, S)
+    ok = (phys >= 0) & (p < n_blk * bs)
+    if valid_len is not None:
+        ok &= jnp.arange(S, dtype=jnp.int32)[None, :] < valid_len[:, None]
+    tgt = jnp.where(ok, phys, nB)                  # nB is OOB => dropped
+    return {
+        "k": pages["k"].at[tgt, off].set(k.astype(pages["k"].dtype),
+                                         mode="drop"),
+        "v": pages["v"].at[tgt, off].set(v.astype(pages["v"].dtype),
+                                         mode="drop"),
+    }
+
+
+def attention_extend_paged(cfg: ModelConfig, params, x, pos, pages,
+                           block_tables, valid_len=None):
+    """Multi-token decode against the paged pool: score ``S`` proposed /
+    teacher-forced tokens in ONE call (speculative verify, chunked
+    catch-up prefill) — the causal-suffix machinery of
+    ``attention_prefill_paged`` applied at an arbitrary mid-block
+    position.
+
+    x: (B, S, d) token activations at absolute positions ``pos + i``;
+    pages: this layer's pool dict; block_tables: (B, n_blk) the slot's
+    FULL table (context and write span in one view).  The context is the
+    PRE-WRITE gathered view masked strictly below ``pos`` — stale
+    entries from a previously rejected speculation (positions >= pos)
+    are invisible, which is exactly what makes KV rollback a no-op on
+    pages — and the S new tokens attend each other causally as a
+    suffix.  K/V for rows ``i < valid_len`` is then scattered into the
+    pages at ``pos + i`` (see ``scatter_kv_tokens``; rejected proposals
+    stay written but stay masked until overwritten in sequence order).
+    Returns (out (B, S, d), new_pages).
+    """
+    B, S, d = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // K
+    scale = cfg.attn_scale if cfg.attn_scale is not None else hd ** -0.5
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+
+    q, k, v = _project_seq(cfg, params, x, positions, is_global=True)
+
+    nB, bs = pages["k"].shape[0], pages["k"].shape[1]
+    bt = jnp.clip(block_tables, 0, nB - 1)
+    ck = pages["k"][bt].reshape(B, -1, K, hd)
+    cv = pages["v"][bt].reshape(B, -1, K, hd)
+    L = block_tables.shape[1] * bs
+    t = jnp.arange(L, dtype=jnp.int32)
+    allocated = jnp.repeat(block_tables >= 0, bs, axis=1)
+    ctx_ok = allocated & (t[None, :] < pos[:, None])               # (B, L)
+    mask = jnp.concatenate(
+        [jnp.broadcast_to(ctx_ok[:, None, :], (B, S, L)),
+         jnp.broadcast_to(causal_mask(S, S), (B, S, S))], axis=-1)
+    k_all = jnp.concatenate([ck.astype(x.dtype), k], axis=1)
+    v_all = jnp.concatenate([cv.astype(x.dtype), v], axis=1)
+    qg = q.reshape(B, S, K, G, hd)
+    out = attention_weights_and_out(qg, k_all, v_all, mask[:, None, None],
+                                    scale=scale,
+                                    softcap=cfg.attn_logit_softcap)
+    o = jnp.einsum("bshq,hqd->bsd", out.reshape(B, S, H, hd),
+                   params["wo"].astype(x.dtype))
+    new_pages = scatter_kv_tokens(pages, k, v, block_tables, pos,
+                                  valid_len)
+    return o, new_pages
+
+
+def attention_extend(cfg: ModelConfig, params, x, cache, pos, *,
+                     is_global: bool, valid_len=None):
+    """Multi-token decode against a DENSE cache (global strip or local
+    ring) — the non-paged leg of ``extend_paged`` for families whose
+    trunk mixes paged global layers with dense ring layers.
+
+    The old entries are read PRE-write and masked strictly below
+    ``pos``: sequential decode would evict ring entry ``(pos+j) % W``
+    only at step ``j``, after steps ``i < j`` attended it, so a
+    write-then-read over the whole chunk would lose context — reading
+    the pre-write ring plus the new tokens as a causal suffix preserves
+    exactly the sequential semantics (requires S <= window).  Rows
+    ``i >= valid_len`` (host padding) drop their writes so pad tokens
+    can never evict live ring context.
+    """
+    B, S, d = x.shape
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // K
+    scale = cfg.attn_scale if cfg.attn_scale is not None else hd ** -0.5
+    positions = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+
+    q, knew, vnew = _project_seq(cfg, params, x, positions,
+                                 is_global=is_global)
+
+    T = cache["k"].shape[1]
+    window = 0 if is_global else cfg.local_window
+    slots = cache["slots"]                                         # (B, T)
+    old_ok = (slots[:, None, :] >= 0) & \
+        (slots[:, None, :] < pos[:, None, None])
+    rel = jnp.arange(S, dtype=jnp.int32)
+    new_ok = rel[None, :] <= rel[:, None]                          # (S, S)
+    if window:
+        old_ok &= slots[:, None, :] > (positions[:, :, None] - window)
+        new_ok &= (rel[:, None] - rel[None, :]) < window
+    mask = jnp.concatenate(
+        [jnp.broadcast_to(old_ok, (B, S, T)),
+         jnp.broadcast_to(new_ok, (B, S, S))], axis=-1)
+    k_all = jnp.concatenate([cache["k"].astype(x.dtype), knew], axis=1)
+    v_all = jnp.concatenate([cache["v"].astype(x.dtype), vnew], axis=1)
+    qg = q.reshape(B, S, K, G, hd)
+    out = attention_weights_and_out(qg, k_all, v_all, mask[:, None, None],
+                                    scale=scale,
+                                    softcap=cfg.attn_logit_softcap)
+    o = jnp.einsum("bshq,hqd->bsd", out.reshape(B, S, H, hd),
+                   params["wo"].astype(x.dtype))
+
+    ring = positions % T
+    ok = (jnp.arange(S, dtype=jnp.int32)[None, :] < valid_len[:, None]
+          if valid_len is not None else jnp.ones((B, S), bool))
+    ring_w = jnp.where(ok, ring, T)                # T is OOB => dropped
+    barange = jnp.arange(B)[:, None]
+    kc = cache["k"].at[barange, ring_w].set(
+        knew.astype(cache["k"].dtype), mode="drop")
+    vc = cache["v"].at[barange, ring_w].set(
+        vnew.astype(cache["v"].dtype), mode="drop")
+    new_slots = cache["slots"].at[barange, ring_w].set(positions,
+                                                      mode="drop")
+    return o, {"k": kc, "v": vc, "slots": new_slots}
+
+
 # ---------------------------------------------------------------------------
 # MLPs
 # ---------------------------------------------------------------------------

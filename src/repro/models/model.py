@@ -14,7 +14,11 @@ Every family exposes the same five entry points, dispatched on
                       toks, pos, block_tables) -> (logits, cache)
     prefill_paged(cfg, params, batch, max_len,
                   cache, slots=..., ...)       -> (logits, cache)
+    extend_paged(cfg, params, cache, toks[B,S],
+                 pos, block_tables)            -> (logits[B,S,V], cache)
     prefix_sharable(cfg)                       -> bool (radix cache ok?)
+    extendable(cfg) / spec_decodable(cfg)      -> bool (multi-token
+                                                  extend / spec verify?)
 
 ``batch`` is a dict: always ``tokens``/``targets``; plus
 ``image_embeds`` (vlm) or ``audio_embeds`` (encdec) stub-frontend
@@ -177,6 +181,66 @@ def decode_step_paged(cfg: ModelConfig, params: Params, cache, tokens, pos,
     return family_module(cfg).decode_step_paged(cfg, params, cache, tokens,
                                                 pos, block_tables,
                                                 use_pallas)
+
+
+def extend_paged(cfg: ModelConfig, params: Params, cache, tokens, pos,
+                 block_tables, valid_len=None):
+    """Score S tokens against the paged cache in ONE jitted call —
+    the multi-token twin of ``decode_step_paged`` used for speculative
+    verify and chunked catch-up prefill.
+
+    tokens: (B, S) int32 at absolute positions ``pos + i`` (pos: (B,)
+    per-slot write frontiers); block_tables: the slot's full (B, n_blk)
+    table (context AND write span).  Returns (logits (B, S, V),
+    new_cache): row ``i`` is the next-token distribution after
+    consuming ``tokens[:, :i+1]``.  The context read is masked strictly
+    below ``pos`` (pre-write view), so stale K/V from a rejected
+    speculation is invisible and rollback is pure bookkeeping; K/V for
+    rows ``i < valid_len`` is written at ``pos + i`` (pad rows drop).
+    ssm/hybrid raise NotImplementedError — gate callers on
+    ``extendable`` / ``spec_decodable``.
+    """
+    return family_module(cfg).extend_paged(cfg, params, cache, tokens,
+                                           pos, block_tables, valid_len)
+
+
+def extend(cfg: ModelConfig, params: Params, cache, tokens, pos,
+           valid_len=None):
+    """Dense twin of ``extend_paged``: the same multi-token scoring
+    against the DENSE (strip/ring) decode cache — keeps the
+    ``ServeConfig.paged=False`` A/B engine wave-for-wave identical to
+    the paged one.  Same return contract and gating."""
+    return family_module(cfg).extend(cfg, params, cache, tokens, pos,
+                                     valid_len)
+
+
+def extendable(cfg: ModelConfig) -> bool:
+    """Does the family implement multi-token ``extend_paged``?  True for
+    every attention family (teacher-forced catch-up never needs
+    rollback, so gemma-style local rings qualify too — their pre-write
+    chunk read preserves sequential eviction semantics); False for the
+    recurrent families (ssm, hybrid), whose state cannot be advanced S
+    tokens and later truncated."""
+    return cfg.family in ("dense", "moe", "vlm", "encdec")
+
+
+def spec_decodable(cfg: ModelConfig) -> bool:
+    """Can this config serve as a speculative-decoding VERIFY model?
+
+    Stronger than ``extendable``: a rejected speculation must roll back
+    EXACTLY, which the engine gets for free only where every
+    token-position-dependent piece of decode state is masked by
+    position (paged KV pages, dense ``slots`` strips) — truncating is
+    then pure bookkeeping and stale writes stay invisible until
+    overwritten in sequence order.  Local-ring layers fail this (a
+    rejected write may have evicted live window context) and ssm/hybrid
+    recurrences advance irreversibly, so — mirroring
+    ``prefix_sharable`` — those configs never speculate and serve the
+    vanilla one-token path instead.
+    """
+    if cfg.family in ("dense", "vlm"):
+        return cfg.pattern_period <= 1
+    return cfg.family in ("moe", "encdec")
 
 
 def prefix_sharable(cfg: ModelConfig) -> bool:

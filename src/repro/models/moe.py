@@ -210,6 +210,33 @@ def moe_block_decode_paged(cfg: ModelConfig, p: Params, x, cache, pos,
     return x + m, new_cache
 
 
+def _extend_token_mask(x, valid_len):
+    """(B, S) mask of REAL extend rows: host-side padding must not
+    steal expert capacity from real tokens (same contract as padded
+    prefill).  The capacity BOUND still derives from the static
+    (B * S) shape — the usual carve-out; with capacity ample nothing
+    drops and extend == sequential decode."""
+    if valid_len is None:
+        return None
+    B, S, _ = x.shape
+    return jnp.arange(S, dtype=jnp.int32)[None, :] < valid_len[:, None]
+
+
+def moe_block_extend_paged(cfg: ModelConfig, p: Params, x, pos, cache,
+                           block_tables, valid_len=None):
+    """``moe_block_decode_paged`` for S tokens at once (speculative
+    verify / chunked catch-up)."""
+    _, norm = L.make_norm(cfg)
+    h = norm(p["ln1"], x)
+    a, new_cache = L.attention_extend_paged(cfg, p["attn"], h, pos, cache,
+                                            block_tables, valid_len)
+    x = x + a
+    h = norm(p["ln2"], x)
+    m, _ = moe_mlp(cfg, p["moe"], h,
+                   token_mask=_extend_token_mask(x, valid_len))
+    return x + m, new_cache
+
+
 def moe_block_prefill_paged(cfg: ModelConfig, p: Params, x, positions,
                             pages, write_tables, ctx_tables=None,
                             ctx_len=None, *, use_flash=False,
@@ -318,6 +345,75 @@ def decode_step_paged(cfg: ModelConfig, params: Params, cache: Params,
         h, c2 = moe_block_decode_paged(cfg, lp, h, cc, pos, block_tables,
                                        use_pallas)
         return h, c2
+    x, mc = lax.scan(body, x, (params["moe_layers"], cache["moe_layers"]))
+    new_cache["moe_layers"] = mc
+
+    _, norm = L.make_norm(cfg)
+    x = norm(params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], params["unembed"], x)
+    return logits, new_cache
+
+
+def extend_paged(cfg: ModelConfig, params: Params, cache: Params, tokens,
+                 pos, block_tables, valid_len=None):
+    """Score S tokens against the paged cache in one call (all MoE
+    attention is global => fully paged).  See ``transformer.extend_paged``
+    for the row semantics and the ``valid_len`` write-drop contract."""
+    x = L.embed(cfg, params["embed"], tokens)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (x.shape[0],))
+    new_cache = {}
+    if cfg.first_dense_layers:
+        def dbody(h, inp):
+            lp, cc = inp
+            h, c2 = T.block_extend_paged(cfg, lp, h, pos, cc, block_tables,
+                                         valid_len)
+            return h, c2
+        x, dc = lax.scan(dbody, x, (params["dense_layers"],
+                                    cache["dense_layers"]))
+        new_cache["dense_layers"] = dc
+
+    def body(h, inp):
+        lp, cc = inp
+        h, c2 = moe_block_extend_paged(cfg, lp, h, pos, cc, block_tables,
+                                       valid_len)
+        return h, c2
+    x, mc = lax.scan(body, x, (params["moe_layers"], cache["moe_layers"]))
+    new_cache["moe_layers"] = mc
+
+    _, norm = L.make_norm(cfg)
+    x = norm(params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], params["unembed"], x)
+    return logits, new_cache
+
+
+def extend(cfg: ModelConfig, params: Params, cache: Params, tokens, pos,
+           valid_len=None):
+    """Dense twin of ``extend_paged`` (strip caches, same row/write
+    semantics)."""
+    x = L.embed(cfg, params["embed"], tokens)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (x.shape[0],))
+    new_cache = {}
+    if cfg.first_dense_layers:
+        def dbody(h, inp):
+            lp, cc = inp
+            h, c2 = T.block_extend(cfg, lp, h, cc, pos, is_global=True,
+                                   valid_len=valid_len)
+            return h, c2
+        x, dc = lax.scan(dbody, x, (params["dense_layers"],
+                                    cache["dense_layers"]))
+        new_cache["dense_layers"] = dc
+
+    def body(h, inp):
+        lp, cc = inp
+        _, norm = L.make_norm(cfg)
+        hh = norm(lp["ln1"], h)
+        a, c2 = L.attention_extend(cfg, lp["attn"], hh, cc, pos,
+                                   is_global=True, valid_len=valid_len)
+        h = h + a
+        hh = norm(lp["ln2"], h)
+        m, _ = moe_mlp(cfg, lp["moe"], hh,
+                       token_mask=_extend_token_mask(h, valid_len))
+        return h + m, c2
     x, mc = lax.scan(body, x, (params["moe_layers"], cache["moe_layers"]))
     new_cache["moe_layers"] = mc
 

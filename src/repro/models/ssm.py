@@ -291,6 +291,20 @@ def decode_step_paged(cfg: ModelConfig, params: Params, cache: Params,
     return decode_step(cfg, params, cache, tokens, pos)
 
 
+def extend_paged(cfg: ModelConfig, params: Params, cache: Params, tokens,
+                 pos, block_tables, valid_len=None):
+    """SSM decode state is an O(1) recurrence: scoring S tokens advances
+    it irreversibly, and a rejected speculation could not roll back by
+    position masking the way paged KV does.  Gated out of the
+    speculative path via ``model.spec_decodable`` / ``model.extendable``
+    — catch-up prefill for this family stays one token per step."""
+    raise NotImplementedError(
+        "ssm has no multi-token extend: recurrent state cannot roll back")
+
+
+extend = extend_paged  # the dense twin is gated identically
+
+
 def prefill_paged(cfg: ModelConfig, params: Params, tokens, max_len,
                   cache, *, slots, write_tables=None, ctx_tables=None,
                   ctx_len=None, true_len=None, use_kernel=False):

@@ -137,6 +137,43 @@ def block_decode_paged(cfg: ModelConfig, p: Params, x, cache, pos,
     return x + m, new_cache
 
 
+def block_extend_paged(cfg: ModelConfig, p: Params, x, pos, cache,
+                       block_tables, valid_len=None):
+    """``block_decode_paged`` for S tokens at once — speculative verify
+    / chunked catch-up (``layers.attention_extend_paged``)."""
+    _, norm = L.make_norm(cfg)
+    h = norm(p["ln1"], x)
+    a, new_cache = L.attention_extend_paged(cfg, p["attn"], h, pos, cache,
+                                            block_tables, valid_len)
+    if cfg.sandwich_norms:
+        a = norm(p["ln1_post"], a)
+    x = x + a
+    h = norm(p["ln2"], x)
+    m = L.mlp(p["mlp"], h)
+    if cfg.sandwich_norms:
+        m = norm(p["ln2_post"], m)
+    return x + m, new_cache
+
+
+def block_extend(cfg: ModelConfig, p: Params, x, cache, pos, *,
+                 is_global, valid_len=None):
+    """``block_decode`` for S tokens against a dense (ring/strip) cache
+    (``layers.attention_extend``)."""
+    _, norm = L.make_norm(cfg)
+    h = norm(p["ln1"], x)
+    a, new_cache = L.attention_extend(cfg, p["attn"], h, cache, pos,
+                                      is_global=is_global,
+                                      valid_len=valid_len)
+    if cfg.sandwich_norms:
+        a = norm(p["ln1_post"], a)
+    x = x + a
+    h = norm(p["ln2"], x)
+    m = L.mlp(p["mlp"], h)
+    if cfg.sandwich_norms:
+        m = norm(p["ln2_post"], m)
+    return x + m, new_cache
+
+
 def block_prefill_paged(cfg: ModelConfig, p: Params, x, positions, pages,
                         write_tables, ctx_tables=None, ctx_len=None, *,
                         use_flash=False):
@@ -340,6 +377,107 @@ def decode_step_paged(cfg: ModelConfig, params: Params, cache: Params,
     x = L.embed(cfg, params["embed"], tokens)
     x, new_cache = trunk_decode_paged(cfg, params["trunk"], cache, x, pos,
                                       block_tables, use_pallas)
+    _, norm = L.make_norm(cfg)
+    x = norm(params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], params["unembed"], x)
+    return logits, new_cache
+
+
+def extend_paged(cfg: ModelConfig, params: Params, cache: Params, tokens,
+                 pos, block_tables, valid_len=None):
+    """Score S tokens against the paged cache in ONE jitted call.
+
+    tokens: (B, S) int32 at absolute positions ``pos + i`` (pos: (B,)
+    int32 per-slot write frontier).  Global layers extend through their
+    page pool (``layers.attention_extend_paged``); local ring layers
+    (gemma patterns) extend their dense window with the same pre-write
+    causal-suffix semantics (``layers.attention_extend``; requires
+    S <= local_window).  Returns (logits (B, S, V), new_cache) — row i
+    is the next-token distribution AFTER consuming ``tokens[:, :i+1]``,
+    which is what speculative verify and multi-token catch-up prefill
+    consume.  Rows ``i >= valid_len`` are padding: their logits are
+    garbage and their K/V writes are dropped.
+    """
+    x = L.embed(cfg, params["embed"], tokens)
+    trunk = params["trunk"]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (x.shape[0],))
+
+    if cfg.pattern_period <= 1:
+        def body(h, inp):
+            lp, c = inp
+            h, c2 = block_extend_paged(cfg, lp, h, pos, c, block_tables,
+                                       valid_len)
+            return h, c2
+        x, new_c = lax.scan(body, x, (trunk["layers"], cache["layers"]))
+        new_cache = {"layers": new_c}
+    else:
+        def local_body(h, inp):
+            lp, c = inp
+            h, c2 = block_extend(cfg, lp, h, c, pos, is_global=False,
+                                 valid_len=valid_len)
+            return h, c2
+
+        def super_body(h, inp):
+            sp, sc = inp
+            h, lc = lax.scan(local_body, h, (sp["local"], sc["local"]))
+            h, gc = block_extend_paged(cfg, sp["global"], h, pos,
+                                       sc["global"], block_tables,
+                                       valid_len)
+            return h, {"local": lc, "global": gc}
+
+        x, new_super = lax.scan(super_body, x,
+                                (trunk["super"], cache["super"]))
+        new_cache = {"super": new_super}
+        if "rem_local" in trunk:
+            x, rc = lax.scan(local_body, x,
+                             (trunk["rem_local"], cache["rem_local"]))
+            new_cache["rem_local"] = rc
+
+    _, norm = L.make_norm(cfg)
+    x = norm(params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], params["unembed"], x)
+    return logits, new_cache
+
+
+def extend(cfg: ModelConfig, params: Params, cache: Params, tokens, pos,
+           valid_len=None):
+    """Dense twin of ``extend_paged``: score S tokens against the dense
+    strip/ring caches (``ServeConfig.paged=False`` A/B path).  Same row
+    semantics; bit-identical to the paged extend on the same logical
+    state."""
+    x = L.embed(cfg, params["embed"], tokens)
+    trunk = params["trunk"]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (x.shape[0],))
+
+    def make_body(is_global):
+        def body(h, inp):
+            lp, c = inp
+            h, c2 = block_extend(cfg, lp, h, c, pos, is_global=is_global,
+                                 valid_len=valid_len)
+            return h, c2
+        return body
+
+    if cfg.pattern_period <= 1:
+        x, new_c = lax.scan(make_body(True), x,
+                            (trunk["layers"], cache["layers"]))
+        new_cache = {"layers": new_c}
+    else:
+        def super_body(h, inp):
+            sp, sc = inp
+            h, lc = lax.scan(make_body(False), h, (sp["local"],
+                                                   sc["local"]))
+            h, gc = block_extend(cfg, sp["global"], h, sc["global"], pos,
+                                 is_global=True, valid_len=valid_len)
+            return h, {"local": lc, "global": gc}
+
+        x, new_super = lax.scan(super_body, x,
+                                (trunk["super"], cache["super"]))
+        new_cache = {"super": new_super}
+        if "rem_local" in trunk:
+            x, rc = lax.scan(make_body(False), x,
+                             (trunk["rem_local"], cache["rem_local"]))
+            new_cache["rem_local"] = rc
+
     _, norm = L.make_norm(cfg)
     x = norm(params["final_norm"], x)
     logits = L.unembed(cfg, params["embed"], params["unembed"], x)

@@ -54,6 +54,8 @@ init_cache = T.init_cache
 decode_step = T.decode_step
 init_paged_cache = T.init_paged_cache      # LM trunk owns all KV layers
 decode_step_paged = T.decode_step_paged
+extend_paged = T.extend_paged  # text-token extend; image prefix is KV-only
+extend = T.extend
 
 
 def prefill(cfg: ModelConfig, params: Params, tokens, max_len, *,

@@ -60,6 +60,19 @@ Admission semantics (the contract tests rely on)
   never dropped).
 * **Per-request sampling.** ``Request.temperature`` / ``Request.top_k``
   override engine defaults inside the jitted decode step.
+* **Speculative decoding.** ``ServeConfig.spec_decode`` turns every
+  wave into a draft/verify round (``serving.spec_decode``): a resident
+  draft model proposes ``spec_gamma - 1`` tokens per slot and ONE
+  ``model.extend_paged`` call verifies them all — greedy output is
+  bit-identical to vanilla decode, temperature > 0 uses rejection
+  sampling (emitted distribution equals vanilla sampling), and a
+  rejected run rolls back by masking + tail-page free
+  (``pool.assert_consistent`` holds after every drain_step).  Gated to
+  ``model.spec_decodable`` configs, exactly like the prefix cache —
+  on both engines (the dense ``paged=False`` twin speculates
+  wave-for-wave identically); the same ``extend_paged``/``extend``
+  path retires the old 1-token-per-step catch-up prefill on every
+  attention family.
 * **KV-preserving preemption.** ``preempt()`` extracts the slot's dense
   cache leaves and decode position onto ``Request.saved_state`` and
   detaches its KV pages (refcounts held, zero copies); re-submission
@@ -83,8 +96,11 @@ from repro.serving.engine import (
 from repro.serving.kv_pool import KVBlockPool, PoolExhausted, \
     blocks_for_tokens
 from repro.serving.prefix_cache import RadixPrefixCache
+from repro.serving.spec_decode import (SpecDecoder, accept_proposals,
+                                       make_self_draft, validate_spec)
 
 __all__ = ["EdgeServingEngine", "Request", "ServeConfig",
            "cache_batch_axes", "extract_slot", "insert_slot",
            "paged_cache_axes", "KVBlockPool", "PoolExhausted",
-           "blocks_for_tokens", "RadixPrefixCache"]
+           "blocks_for_tokens", "RadixPrefixCache", "SpecDecoder",
+           "accept_proposals", "make_self_draft", "validate_spec"]

@@ -71,6 +71,37 @@ Local ring-window layers stay dense at ``W`` and SSM state is O(1), so
 families with no global KV layers (ssm, hybrid) transparently run the
 dense path with zero pool demand.
 
+Speculative decoding (draft/verify step contract)
+-------------------------------------------------
+With ``ServeConfig.spec_decode`` on a ``model.spec_decodable`` config,
+every wave is a multi-token EXTEND wave instead of a one-token decode
+(``serving.spec_decode`` owns the draft runtime and acceptance rules;
+this engine owns the batching and the KV bookkeeping; the dense
+``paged=False`` twin runs the same waves via ``model.extend`` and
+stays wave-for-wave bit-identical):
+
+* the draft model (own dense cache, one row per slot) proposes up to
+  ``spec_gamma - 1`` tokens per slot; ONE jitted
+  ``model.extend_paged`` call then scores ``[t0, d_1..d_{v-1}]`` for
+  every slot — spec, catch-up and plain slots share the wave, padded
+  rows drop their writes;
+* before the wave, ``_ensure_blocks``/``_cow_guard`` cover the whole
+  write span ``[pos, pos + v)``: a verify over shared prefix-cache
+  pages forks them (copy-on-write) first — a speculative write can
+  never land in a chain another reader holds;
+* acceptance (greedy exact-match, or rejection sampling at
+  temperature > 0 — the emitted distribution equals vanilla sampling)
+  commits ``n_accepted + 1`` tokens; the verify wave's rejected writes
+  sit ABOVE the new frontier where every context read masks them, so
+  KV rollback is ``_truncate_slot``: whole tail pages past the
+  frontier go back to the pool on block boundaries and
+  ``pool.assert_consistent()`` holds after every drain_step, rejected
+  runs included;
+* greedy speculative output is bit-identical to vanilla decode
+  (``extend_paged`` reproduces sequential decode exactly; acceptance
+  only keeps argmax matches); draft quality moves ONLY the acceptance
+  rate / tokens-per-round counters in ``stats()``, never the tokens.
+
 Admission semantics (exact, see ``model.prefill(true_len=...)``)
 ----------------------------------------------------------------
 * Prompts are right-padded to the smallest prefill bucket that fits and
@@ -85,10 +116,14 @@ Admission semantics (exact, see ``model.prefill(true_len=...)``)
   see ``serving/__init__`` and ``moe._moe_tokens``.)
 * Prompts longer than the largest bucket are chunked: the first
   ``max(prefill_buckets)`` tokens go through bucketed prefill, the rest
-  catch up through the shared batched decode wave (one prompt token per
-  step, teacher-forced, sampled outputs discarded until the prompt is
-  consumed).  Catch-up requests ride the same decode batch as running
-  requests, so long-prompt admission never stalls other tenants.
+  catch up teacher-forced through the shared wave — ``spec_gamma``
+  prompt tokens per multi-token extend wave on extend-capable configs
+  (``model.extendable``: all attention families, paged and dense
+  engines alike), one per decode step only on the recurrent families
+  (ssm/hybrid).
+  Sampled outputs are discarded until the prompt is consumed, and
+  catch-up requests ride the same batch as running requests, so
+  long-prompt admission never stalls other tenants.
 * Preemption (``preempt``) extracts the slot's dense cache leaves and
   decode position onto the request and detaches its KV pages;
   re-admission reinserts them directly — no re-prefill, no page copies,
@@ -228,12 +263,36 @@ class ServeConfig:
     # (scalar-prefetched block tables) instead of the jnp gather —
     # the TPU serving path; default off (gather is the portable twin)
     use_pallas_paged: bool = False
+    # speculative decoding (serving/spec_decode.py): a resident draft
+    # model proposes spec_gamma tokens per slot and the big model
+    # verifies them in ONE extend_paged wave.  draft_arch: registry id
+    # of the draft ("self" / None = early-exit self-draft; callers with
+    # real draft weights pass `draft=(cfg, params)` to the engine).
+    # Engages only on model.spec_decodable configs (quiet vanilla
+    # fallback otherwise, mirroring prefix_cache) — on BOTH engines:
+    # the dense paged=False twin speculates wave-for-wave identically
+    # (slots-masked strips roll back like pages do).  An incompatible
+    # draft (vocab mismatch, extras the requests cannot supply) or an
+    # out-of-bounds gamma is rejected at engine construction.
+    spec_decode: bool = False
+    draft_arch: Optional[str] = None
+    # also the chunk width of multi-token catch-up prefill (prompts
+    # past the largest bucket consume spec_gamma prompt tokens per
+    # extend wave instead of 1 per decode step)
+    spec_gamma: int = 4
 
 
 class EdgeServingEngine:
-    """Continuous-batching decode engine for one model on one device/mesh."""
+    """Continuous-batching decode engine for one model on one device/mesh.
 
-    def __init__(self, cfg: ModelConfig, params: Params, scfg: ServeConfig):
+    ``draft``: optional ``(draft_cfg, draft_params)`` for speculative
+    decoding — overrides ``ServeConfig.draft_arch`` (which builds a
+    randomly-initialised registry smoke draft, or an early-exit
+    self-draft for ``"self"``/``None``).
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Params, scfg: ServeConfig,
+                 draft=None):
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
@@ -279,6 +338,41 @@ class EdgeServingEngine:
                              and M.prefix_sharable(cfg))
         self.prefix_cache = (RadixPrefixCache(self.pool, bs)
                              if self.sharable else None)
+        # multi-token extend path (speculative verify + chunked catch-up
+        # consuming spec_gamma tokens per wave): every family that
+        # implements extend/extend_paged, on BOTH engines (the dense
+        # twin stays wave-for-wave identical to the paged one);
+        # gemma-pattern local rings additionally need the chunk to fit
+        # the window
+        W = min(cfg.local_window, T)
+        self.extend_ok = bool(M.extendable(cfg)
+                              and scfg.spec_gamma >= 2
+                              and (cfg.pattern_period <= 1
+                                   or scfg.spec_gamma <= W))
+        # speculative decoding: draft model + acceptance loop.  Engages
+        # only where a rejected run can roll back exactly
+        # (model.spec_decodable — mirrors the prefix_cache gate);
+        # incompatible draft/gamma is a configuration ERROR.
+        self.spec = None
+        if scfg.spec_decode and M.spec_decodable(cfg):
+            from repro.serving.spec_decode import (SpecDecoder,
+                                                   make_self_draft,
+                                                   validate_spec)
+            if draft is not None:
+                dcfg, dparams = draft
+            elif scfg.draft_arch in (None, "self"):
+                dcfg, dparams = make_self_draft(
+                    cfg, params, key=jax.random.PRNGKey(scfg.seed))
+            else:
+                from repro.configs import get_smoke_config
+                dcfg = get_smoke_config(scfg.draft_arch)
+                dparams = M.init_params(dcfg,
+                                        jax.random.PRNGKey(scfg.seed))
+            problems = validate_spec(cfg, dcfg, scfg.spec_gamma, T)
+            if problems:
+                raise ValueError("spec_decode misconfigured: "
+                                 + "; ".join(problems))
+            self.spec = SpecDecoder(dcfg, dparams, B, T)
         self.tokens = np.zeros((B, 1), np.int32)
         self.pos = np.zeros((B,), np.int32)
         self.temps = np.zeros((B,), np.float32)
@@ -304,6 +398,11 @@ class EdgeServingEngine:
         # the fork rewrites one page in place, not a second pool copy)
         self._copy_page = (jax.jit(self._copy_page_fn, donate_argnums=(0,))
                            if self.paged else None)
+        # multi-token extend wave (width spec_gamma static; at most two
+        # variants compile — with and without the full-logits return)
+        self._extend = (jax.jit(self._extend_fn, donate_argnums=(1,),
+                                static_argnames=("need_logits",))
+                        if self.extend_ok else None)
         self._prefills: dict[tuple, Callable] = {}
         self.steps = 0
         self.completed: list[Request] = []
@@ -313,6 +412,14 @@ class EdgeServingEngine:
         self.exhaust_preempts = 0
         self.reclaims = 0
         self.cow_forks = 0
+        # speculative-decoding counters: rounds = (slot, wave) drafting
+        # participations; proposed/accepted per round; emitted includes
+        # the per-round correction/bonus token
+        self.spec_steps = 0
+        self.spec_rounds = 0
+        self.spec_proposed = 0
+        self.spec_accepted = 0
+        self.spec_emitted = 0
 
     @property
     def _prefix(self) -> int:
@@ -419,20 +526,11 @@ class EdgeServingEngine:
     def _sample_first(self, req: Request, logits: np.ndarray) -> int:
         """First generated token, from the admission logits (host-side,
         engine-rng — deterministic for a fixed ServeConfig.seed)."""
+        from repro.serving.spec_decode import sample_from_logits
         temp = (self.scfg.temperature if req.temperature is None
                 else req.temperature)
         top_k = self.scfg.top_k if req.top_k is None else req.top_k
-        if temp <= 0:
-            return int(np.argmax(logits))
-        lg = logits.astype(np.float64)
-        if top_k and top_k > 0:
-            thresh = np.sort(lg)[::-1][min(top_k, lg.size) - 1]
-            lg = np.where(lg < thresh, -np.inf, lg)
-        lg = lg / temp
-        lg -= lg.max()
-        p = np.exp(lg)
-        p /= p.sum()
-        return int(self._rng.choice(lg.size, p=p))
+        return sample_from_logits(logits, temp, top_k, self._rng)
 
     # -- prefix-cache keys ---------------------------------------------
     def _key_ns(self, req: Request) -> int:
@@ -554,6 +652,8 @@ class EdgeServingEngine:
                 blocks += self.pool.alloc(need)
             self._set_table(slot, blocks)
         self.cache = insert_slot(self.cache, st["cache"], slot, self.axes)
+        if self.spec is not None:
+            self.spec.insert(slot, st.get("draft"))
         self.pos[slot] = st["pos"]
         self.tokens[slot, 0] = st["last_tok"]
         self.pending[slot] = st["pending"]
@@ -690,6 +790,12 @@ class EdgeServingEngine:
             args += [jnp.asarray(ctx_tables), jnp.asarray(ctx_len)]
         logits, self.cache = self._prefill_fn(bucket, m, extras_sig,
                                               n_ctx)(*args)
+        if self.spec is not None:
+            # the draft prefills the FULL prompt (it is cheap and never
+            # chunks), so catch-up slots are already draft-complete by
+            # the time their prompt is consumed
+            self.spec.admit_group([r for r, _ in group],
+                                  [s for _, s in group])
         logits_host = np.asarray(logits[:, -1], np.float32)   # (m, V)
         for i, (req, slot) in enumerate(group):
             L = int(ctx_len[i])
@@ -751,31 +857,61 @@ class EdgeServingEngine:
         nxt = jnp.where(temps > 0, sampled, greedy)
         return nxt.astype(jnp.int32), new_cache
 
-    def _ensure_blocks(self) -> None:
-        """Guarantee every active slot's table covers its write
-        position ``pos``.  Crossing a block boundary appends one page
-        (evicting LRU prefix-cache chains first under pressure); if the
-        pool is truly exhausted the slot is preempted back to the queue
-        (pages detached) — preempt-or-queue, never a deadlock spin.
-        Best-ranked slots get first pick of the remaining pages.
+    def _extend_fn(self, params, cache, tokens, pos, valid, block_tables,
+                   need_logits: bool = False):
+        """Multi-token wave: score ``spec_gamma`` tokens per slot in one
+        call (speculative verify / chunked catch-up).  Acceptance and
+        sampling are host-side with the engine rng — which keeps greedy
+        spec bit-identical to vanilla (argmax is rounding-free) and
+        rejection sampling deterministic per seed — but an all-greedy
+        wave ships only the (B, K) per-row argmax ids; the full
+        (B, K, V) float32 logits cross the device boundary only when
+        some active slot samples at temperature > 0 (at real vocab
+        sizes that transfer dominates the wave)."""
+        if block_tables is None:
+            logits, new_cache = M.extend(self.cfg, params, cache, tokens,
+                                         pos, valid)
+        else:
+            logits, new_cache = M.extend_paged(self.cfg, params, cache,
+                                               tokens, pos, block_tables,
+                                               valid)
+        logits = logits.astype(jnp.float32)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return greedy, (logits if need_logits else None), new_cache
+
+    def _ensure_blocks(self, spans: Optional[dict] = None) -> None:
+        """Guarantee every active slot's table covers its write span
+        ``[pos, pos + span)`` (span 1 = plain decode; an extend wave
+        passes its per-slot widths).  Crossing block boundaries appends
+        pages (evicting LRU prefix-cache chains first under pressure);
+        if the pool is truly exhausted the slot is preempted back to
+        the queue (pages detached) — preempt-or-queue, never a deadlock
+        spin.  Best-ranked slots get first pick of the remaining pages.
         """
         bs = self.block_size
-        needy = [s for s in range(self.scfg.max_slots)
-                 if self.active[s]
-                 and int(self.pos[s]) // bs >= len(self.slot_blocks[s])]
-        needy.sort(key=lambda s: self._rank(self.slot_req[s]))
-        for s in needy:
-            j = int(self.pos[s]) // bs
+        spans = spans or {}
+        needy = []
+        for s in range(self.scfg.max_slots):
+            if not self.active[s]:
+                continue
+            target = blocks_for_tokens(
+                int(self.pos[s]) + spans.get(s, 1), bs)
+            if target > len(self.slot_blocks[s]):
+                needy.append((s, target))
+        needy.sort(key=lambda t: self._rank(self.slot_req[t[0]]))
+        for s, target in needy:
+            n = target - len(self.slot_blocks[s])
             try:
-                self._reserve(1)
-                blk = self.pool.alloc(1)
+                self._reserve(n)
+                blk = self.pool.alloc(n)
             except PoolExhausted:
                 req = self.preempt(s)
                 self.exhaust_preempts += 1
                 self.queue.append(req)   # resumes when a page frees
                 continue
+            j0 = len(self.slot_blocks[s])
             self.slot_blocks[s].extend(blk)
-            self.block_tables[s, j] = blk[0]
+            self.block_tables[s, j0:j0 + n] = blk
 
     def _copy_page_fn(self, cache, src, dst):
         """Device-side page copy (every pool leaf) for CoW forks."""
@@ -784,46 +920,64 @@ class EdgeServingEngine:
             leaf.at[:, dst].set(leaf[:, src]),
             cache, self.axes)
 
-    def _cow_guard(self) -> None:
-        """Copy-on-write backstop: no decode wave may write a page with
-        more than one owner.  Block-granular prefix matching means the
-        write position normally lands in a private page (suffixes start
-        at the next block boundary), so this almost never fires — but
-        any future sharer of a TAIL page (token-granular matching,
-        beam forks) is caught here: the slot trades its reference for a
-        fresh page (``KVBlockPool.fork``) and copies the page bytes.
-        On pool exhaustion the slot preempts, like ``_ensure_blocks``.
+    def _cow_guard(self, spans: Optional[dict] = None) -> None:
+        """Copy-on-write backstop: no decode/extend wave may write a
+        page with more than one owner — a speculative verify over a
+        shared prefix-cache chain must fork, never scribble into a
+        reader's pages.  Block-granular prefix matching means the write
+        span normally lands in private pages (suffixes start at the
+        next block boundary), so this almost never fires — but any
+        sharer of a TAIL page (token-granular matching, beam forks, a
+        spec round whose span begins mid-shared-block) is caught here:
+        the slot trades its reference for a fresh page
+        (``KVBlockPool.fork``) and copies the page bytes.  On pool
+        exhaustion the slot preempts, like ``_ensure_blocks``.
         """
         bs = self.block_size
+        spans = spans or {}
         for s in range(self.scfg.max_slots):
             if not self.active[s]:
                 continue
-            j = int(self.pos[s]) // bs
-            if j >= len(self.slot_blocks[s]):
-                continue
-            old = self.slot_blocks[s][j]
-            if self.pool.refcount(old) <= 1:
-                continue
-            try:
-                self._reserve(1)
-                new = self.pool.fork(old)
-            except PoolExhausted:
-                req = self.preempt(s)
-                self.exhaust_preempts += 1
-                self.queue.append(req)
-                continue
-            self.cache = self._copy_page(self.cache, jnp.asarray(old),
-                                         jnp.asarray(new))
-            self.slot_blocks[s][j] = new
-            self.block_tables[s, j] = new
-            self.cow_forks += 1
+            j0 = int(self.pos[s]) // bs
+            j1 = min((int(self.pos[s]) + spans.get(s, 1) - 1) // bs,
+                     len(self.slot_blocks[s]) - 1)
+            for j in range(j0, j1 + 1):
+                old = self.slot_blocks[s][j]
+                if self.pool.refcount(old) <= 1:
+                    continue
+                try:
+                    self._reserve(1)
+                    new = self.pool.fork(old)
+                except PoolExhausted:
+                    req = self.preempt(s)
+                    self.exhaust_preempts += 1
+                    self.queue.append(req)
+                    break
+                self.cache = self._copy_page(self.cache, jnp.asarray(old),
+                                             jnp.asarray(new))
+                self.slot_blocks[s][j] = new
+                self.block_tables[s, j] = new
+                self.cow_forks += 1
+
+    def _has_pending(self) -> bool:
+        return any(self.active[s] and self.pending[s] is not None
+                   and self.pending[s].size
+                   for s in range(self.scfg.max_slots))
 
     def step(self) -> int:
-        """Admit queued requests into free slots, then one decode wave.
+        """Admit queued requests into free slots, then one wave.
 
-        Returns the number of active slots that were stepped.
+        A speculative engine always runs the extend wave (draft gamma
+        proposals -> one multi-token verify); a vanilla extend-capable
+        engine switches to it only while some slot is catching up a
+        long prompt (multi-token chunked prefill) and runs the plain
+        one-token decode wave otherwise.  Returns the number of active
+        slots that were stepped.
         """
         self._admit_batch()
+        if self.extend_ok and (self.spec is not None
+                               or self._has_pending()):
+            return self._extend_step()
         if self.paged:
             self._ensure_blocks()
             self._cow_guard()
@@ -866,6 +1020,171 @@ class EdgeServingEngine:
             if (len(req.generated) >= req.max_new_tokens or hit_eos
                     or out_of_room):
                 self._finish(slot, req)
+        self.steps += 1
+        return n_active
+
+    def _truncate_slot(self, slot: int) -> None:
+        """KV rollback: free the slot's pages past its write frontier
+        (block-boundary granular).  After a rejected speculation the
+        stale K/V above ``pos`` is already invisible (the extend/decode
+        context masks strictly below the frontier), so rollback is pure
+        bookkeeping — return whole tail pages, keep the partial one the
+        next write lands in."""
+        if not self.paged:
+            return
+        keep = blocks_for_tokens(int(self.pos[slot]) + 1, self.block_size)
+        blocks = self.slot_blocks[slot]
+        if len(blocks) > keep:
+            self.pool.free(blocks[keep:])
+            self._set_table(slot, blocks[:keep])
+
+    def _extend_step(self) -> int:
+        """One multi-token wave: plan per-slot widths, draft proposals
+        for speculative slots, verify/teacher-force everything in a
+        single ``extend_paged`` call, then accept/rollback.
+
+        Slot modes — ``spec`` (no pending prompt, speculative engine):
+        feed ``[t0, d_1..d_{v-1}]``, judge proposals, emit
+        ``n_accepted + 1`` tokens; ``catch``: teacher-force the next
+        ``v`` pending prompt tokens (sampled rows discarded until the
+        prompt is consumed — the multi-token retirement of the old
+        1-token-per-step catch-up); ``plain``: a slot out of room for
+        proposals rides along at width 1 (vanilla semantics).
+        """
+        from repro.serving.spec_decode import (accept_greedy,
+                                               accept_proposals,
+                                               sample_from_logits)
+        B, K = self.scfg.max_slots, self.scfg.spec_gamma
+        eos = self.scfg.eos_id
+        plan: dict[int, tuple] = {}
+        for s in range(B):
+            if not self.active[s]:
+                continue
+            pend = self.pending[s]
+            npend = 0 if pend is None else int(pend.size)
+            room = self.scfg.max_len - 1 - int(self.pos[s])
+            if npend:
+                plan[s] = ("catch", max(1, min(1 + npend, K, room)))
+            elif self.spec is not None and min(K, room) >= 2:
+                plan[s] = ("spec", min(K, room))
+            else:
+                plan[s] = ("plain", 1)
+        if self.paged:
+            spans = {s: v for s, (_, v) in plan.items()}
+            self._ensure_blocks(spans)
+            self._cow_guard(spans)
+            plan = {s: p for s, p in plan.items() if self.active[s]}
+        n_active = int(self.active.sum())
+        if n_active == 0:
+            return 0
+        self.peak_active = max(self.peak_active, n_active)
+        if self.paged:
+            self.peak_pool_used = max(self.peak_pool_used,
+                                      self.pool.num_used)
+
+        spec_slots = [s for s, (m, _) in plan.items() if m == "spec"]
+        proposals, dists = {}, {}
+        if spec_slots:
+            proposals, dists = self.spec.propose(
+                spec_slots, self.tokens[:, 0], self.temps, self.topks,
+                K, self._rng)
+
+        fed = np.zeros((B, K), np.int32)
+        valid = np.ones((B,), np.int32)
+        for s, (mode, v) in plan.items():
+            seq = [int(self.tokens[s, 0])]
+            if mode == "catch":
+                seq += [int(t) for t in self.pending[s][:v - 1]]
+            elif mode == "spec":
+                seq += proposals[s][:v - 1]
+            fed[s, :len(seq)] = seq
+            fed[s, len(seq):] = seq[-1]       # pad (write-dropped)
+            valid[s] = v
+
+        tables = jnp.asarray(self.block_tables) if self.paged else None
+        # all-greedy waves ship only the (B, K) argmax ids
+        need_logits = bool((self.temps[self.active] > 0).any())
+        greedy, logits, self.cache = self._extend(
+            self.params, self.cache, jnp.asarray(fed),
+            jnp.asarray(self.pos), jnp.asarray(valid), tables,
+            need_logits=need_logits)
+        greedy = np.asarray(greedy)                      # (B, K)
+        logits = (np.asarray(logits, np.float32) if need_logits
+                  else None)                             # (B, K, V)
+
+        def sample(s, row, temp, top_k):
+            if temp <= 0:
+                return int(greedy[s, row])
+            return sample_from_logits(logits[s, row], temp, top_k,
+                                      self._rng)
+
+        any_spec = False
+        for s in range(B):
+            if s not in plan or not self.active[s]:
+                continue
+            mode, v = plan[s]
+            req = self.slot_req[s]
+            temp, top_k = float(self.temps[s]), int(self.topks[s])
+            if mode == "catch":
+                self.pos[s] += v
+                rest = self.pending[s][v - 1:]
+                out_of_room = int(self.pos[s]) >= self.scfg.max_len - 1
+                if rest.size:
+                    self.tokens[s, 0] = int(rest[0])
+                    self.pending[s] = rest[1:]
+                    if out_of_room:
+                        self._finish(s, req)
+                    continue
+                self.pending[s] = None
+                tok = sample(s, v - 1, temp, top_k)
+                self.tokens[s, 0] = tok
+                req.generated.append(tok)
+                hit_eos = eos >= 0 and tok == eos
+                if (len(req.generated) >= req.max_new_tokens or hit_eos
+                        or out_of_room):
+                    self._finish(s, req)
+                continue
+            if mode == "plain":
+                self.pos[s] += 1
+                tok = sample(s, 0, temp, top_k)
+                self.tokens[s, 0] = tok
+                req.generated.append(tok)
+                hit_eos = eos >= 0 and tok == eos
+                if (len(req.generated) >= req.max_new_tokens or hit_eos
+                        or int(self.pos[s]) >= self.scfg.max_len - 1):
+                    self._finish(s, req)
+                continue
+            # speculative round
+            any_spec = True
+            if temp <= 0:
+                n_acc, emitted = accept_greedy(proposals[s][:v - 1],
+                                               greedy[s, :v])
+            else:
+                n_acc, emitted = accept_proposals(
+                    proposals[s][:v - 1], dists[s][:v - 1],
+                    logits[s, :v], temp, top_k, self._rng)
+            self.spec.advance(s, n_acc + 1)
+            self.spec_rounds += 1
+            self.spec_proposed += v - 1
+            self.spec_accepted += n_acc
+            # budget/EOS truncation (both imply the request finishes)
+            emit = emitted[:req.max_new_tokens - len(req.generated)]
+            if eos >= 0 and eos in emit:
+                emit = emit[:emit.index(eos) + 1]
+            req.generated.extend(emit)
+            self.spec_emitted += len(emit)
+            # frontier: every emitted token except a final
+            # correction/bonus was fed (and written) this wave
+            self.pos[s] += min(len(emit) + 1, n_acc + 1)
+            if (len(req.generated) >= req.max_new_tokens
+                    or (eos >= 0 and emit and emit[-1] == eos)
+                    or int(self.pos[s]) >= self.scfg.max_len - 1):
+                self._finish(s, req)
+            else:
+                self.tokens[s, 0] = emit[-1]
+                self._truncate_slot(s)       # rejected-tail pages back
+        if any_spec:
+            self.spec_steps += 1
         self.steps += 1
         return n_active
 
@@ -916,6 +1235,21 @@ class EdgeServingEngine:
             self.pool.assert_consistent()
             out.update(pool_blocks=self.pool.num_blocks,
                        pool_free=self.pool.num_free)
+        if self.scfg.spec_decode:
+            out.update(
+                spec_active=self.spec is not None,
+                spec_steps=self.spec_steps,
+                spec_rounds=self.spec_rounds,
+                spec_proposed=self.spec_proposed,
+                spec_accepted=self.spec_accepted,
+                spec_emitted=self.spec_emitted,
+                spec_acceptance=(self.spec_accepted
+                                 / max(self.spec_proposed, 1)),
+                # mean big-model tokens emitted per verify round per
+                # slot: 1.0 = vanilla; > 1 = speculation paying off
+                spec_tokens_per_round=(self.spec_emitted
+                                       / max(self.spec_rounds, 1)),
+            )
         if self.prefix_cache is not None:
             out.update({f"prefix_{k}": v
                         for k, v in self.prefix_cache.stats().items()})
@@ -937,6 +1271,8 @@ class EdgeServingEngine:
             "last_tok": int(self.tokens[slot, 0]),
             "pending": self.pending[slot],
         }
+        if self.spec is not None:
+            req.saved_state["draft"] = self.spec.extract(slot)
         if self.paged:
             req.saved_state["blocks"] = self.slot_blocks[slot]
             self._set_table(slot, [])

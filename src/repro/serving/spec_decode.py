@@ -1,0 +1,401 @@
+"""Speculative decoding: draft/verify serving over the paged KV cache.
+
+The EdgeAI-Hub's collaborative-execution idea (small resident models
+backing a large one — PAPER.md §progressive inference) instantiated at
+the serving layer: a cheap DRAFT model proposes ``gamma`` tokens per
+slot, the big VERIFY model scores all of them in ONE paged forward
+(``model.extend_paged``), and every accepted token costs the big model
+1/gamma-th of a decode wave.  Decode is memory-bound, so verifying
+gamma tokens in one wave is nearly the price of one — accepted drafts
+are (almost) free big-model tokens.
+
+One round, per slot (the engine batches this across slots)
+----------------------------------------------------------
+Let ``t0`` be the slot's pending token (``engine.tokens[slot]``, not
+yet written) and ``pos`` its write frontier.
+
+1. **Propose.**  ``gamma`` batched draft ``decode_step``s against the
+   draft's own dense cache: feed ``t0`` -> sample ``d_1``, feed ``d_1``
+   -> ``d_2``, ...  The last step's sample is discarded — it only
+   exists so the draft's cache holds K/V for every token the verify
+   feed contains (keeping draft and verify frontiers in lockstep, see
+   ``advance``).
+2. **Verify.**  One ``extend_paged`` over ``[t0, d_1..d_{v-1}]``
+   (``v <= gamma``): row ``i`` is the big model's distribution after
+   consuming the first ``i+1`` fed tokens, so row ``i-1`` judges
+   proposal ``d_i`` and row ``v-1`` yields a FREE token when every
+   proposal survives (the standard bonus token).
+3. **Accept** (``accept_proposals``): greedy mode accepts ``d_i`` while
+   it equals the verify argmax — emitted tokens are then bit-identical
+   to vanilla greedy decode.  At temperature > 0 the standard
+   rejection-sampling rule runs instead: accept ``d_i`` w.p.
+   ``min(1, q(d_i)/p(d_i))``; on rejection sample the correction from
+   ``normalize(max(q - p, 0))`` — the emitted distribution equals
+   vanilla sampling from ``q`` regardless of the draft.  Always emits
+   ``n_accepted + 1`` tokens (correction or bonus).
+4. **Roll back.**  Rejected verify writes sit at positions > the new
+   frontier, where the pre-write context mask of every subsequent
+   decode/extend ignores them until they are overwritten in sequence
+   order — KV rollback is bookkeeping: the engine truncates the slot to
+   the accepted length and frees tail pages on block boundaries
+   (``pool.assert_consistent()`` holds after every rejected run).
+
+The draft's cache rolls back by the same masking argument when the
+draft family's decode state is position-masked (fully-paged dense
+trunks).  Families where that is only approximate (gemma local rings
+lose evicted window entries, ssm/hybrid recurrences keep speculated
+state) are still LEGAL drafts: draft state fidelity affects only the
+acceptance rate, never the emitted tokens — correctness is the verify
+model's alone.  The VERIFY model, by contrast, must satisfy
+``model.spec_decodable`` exactly.
+
+Self-draft mode (``ServeConfig.draft_arch="self"``) follows the
+early-exit pillar (``core.earlyexit``): the draft is the verify model's
+own first ``n`` layers under an exit head — no separately trained
+model resident on the hub (embeddings shared by reference; the sliced
+half-trunk is currently a one-time device copy, see
+``make_self_draft``).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# host-side sampling / acceptance (shared with the engine)
+# ---------------------------------------------------------------------------
+
+def processed_dist(logits: np.ndarray, temp: float, top_k: int) -> np.ndarray:
+    """The serving sampling distribution: top-k filter, then temperature
+    softmax, in float64 (mirrors ``EdgeServingEngine._sample_first``)."""
+    lg = np.asarray(logits, np.float64)
+    if top_k and top_k > 0:
+        thresh = np.sort(lg)[::-1][min(top_k, lg.size) - 1]
+        lg = np.where(lg < thresh, -np.inf, lg)
+    lg = lg / max(temp, 1e-6)
+    lg -= lg.max()
+    p = np.exp(lg)
+    return p / p.sum()
+
+
+def sample_from_logits(logits: np.ndarray, temp: float, top_k: int,
+                       rng) -> int:
+    """Greedy argmax at temp<=0, else a draw from ``processed_dist``."""
+    if temp <= 0:
+        return int(np.argmax(logits))
+    p = processed_dist(logits, temp, top_k)
+    return int(rng.choice(p.size, p=p))
+
+
+def accept_greedy(proposals, argmax_row):
+    """Greedy acceptance from per-row verify ARGMAX ids alone (the
+    engine ships only (B, K) int32 to the host on all-greedy waves —
+    full logits cross the device boundary only when some slot needs
+    rejection sampling).  argmax_row: (>= len(proposals)+1,) ids.
+    Returns ``(n_accepted, emitted)``, ``len(emitted) == n_accepted+1``.
+    """
+    emitted: list[int] = []
+    for i, d in enumerate(proposals):
+        if int(argmax_row[i]) != int(d):
+            emitted.append(int(argmax_row[i]))
+            return i, emitted
+        emitted.append(int(d))
+    emitted.append(int(argmax_row[len(proposals)]))
+    return len(proposals), emitted
+
+
+def accept_proposals(proposals, draft_dists, verify_logits: np.ndarray,
+                     temp: float, top_k: int, rng):
+    """Judge draft proposals against the verify logits of one round.
+
+    proposals: ``v-1`` draft tokens ``d_1..d_{v-1}``; draft_dists: their
+    sampling distributions (None entries in greedy mode);
+    verify_logits: (v, V) — row ``i-1`` judges ``d_i``, row ``v-1``
+    yields the bonus/correction after a clean sweep.
+
+    Greedy (temp<=0): accept while ``d_i == argmax``; emitted tokens are
+    exactly the vanilla greedy continuation.  Sampling: the standard
+    rejection rule — emitted tokens are distributed exactly as vanilla
+    sampling from the verify distributions.
+
+    Returns ``(n_accepted, emitted)`` with ``len(emitted) ==
+    n_accepted + 1`` (accepted prefix + correction-or-bonus).
+    """
+    if temp <= 0:
+        return accept_greedy(proposals,
+                             np.argmax(verify_logits, axis=-1))
+    emitted: list[int] = []
+    n_acc = 0
+    for i, d in enumerate(proposals):
+        q = processed_dist(verify_logits[i], temp, top_k)
+        p = draft_dists[i]
+        if rng.random() < min(1.0, float(q[d]) / max(float(p[d]), 1e-300)):
+            emitted.append(int(d))
+            n_acc += 1
+            continue
+        res = np.clip(q - p, 0.0, None)
+        s = res.sum()
+        probs = res / s if s > 0 else q
+        emitted.append(int(rng.choice(probs.size, p=probs)))
+        return n_acc, emitted
+    # clean sweep: the last verify row is a free token
+    emitted.append(sample_from_logits(verify_logits[len(proposals)],
+                                      temp, top_k, rng))
+    return n_acc, emitted
+
+
+# ---------------------------------------------------------------------------
+# draft construction / validation
+# ---------------------------------------------------------------------------
+
+def make_self_draft(cfg: ModelConfig, params: Params,
+                    exit_layers: int = 0, key=None):
+    """Self-draft: the verify model's first ``exit_layers`` layers under
+    an early-exit head (``core.earlyexit.init_exit_heads``).  The
+    embedding/unembedding tables are shared by reference; the sliced
+    trunk stack is a one-time device copy of the first ``exit_layers``
+    layers (a buffer-sharing slice-free variant is a ROADMAP
+    follow-up).  Every model entry point (prefill / decode_step) works
+    on the result unchanged.
+
+    Supported for uniform dense/vlm stacks (``pattern_period <= 1``,
+    the same restriction ``earlyexit`` carries).  Returns
+    ``(draft_cfg, draft_params)``.
+    """
+    from repro.core.earlyexit import init_exit_heads
+    if cfg.family not in ("dense", "vlm") or cfg.pattern_period > 1:
+        raise ValueError(
+            f"self-draft targets uniform dense/vlm stacks, not "
+            f"{cfg.name} (family={cfg.family}, "
+            f"pattern_period={cfg.pattern_period}); pass an explicit "
+            "draft or a registry draft_arch instead")
+    e = exit_layers or max(1, cfg.num_layers // 2)
+    if not 1 <= e < cfg.num_layers:
+        raise ValueError(f"exit_layers {e} outside [1, {cfg.num_layers})")
+    heads = init_exit_heads(cfg, key if key is not None
+                            else jax.random.PRNGKey(0), [e - 1])
+    draft_params = dict(params)
+    draft_params["trunk"] = {"layers": jax.tree.map(
+        lambda a: a[:e], params["trunk"]["layers"])}
+    draft_params["final_norm"] = heads["exits"][0]["ln"]
+    return cfg.replace(name=f"{cfg.name}-selfdraft@{e}", num_layers=e), \
+        draft_params
+
+
+def validate_spec(cfg: ModelConfig, draft_cfg: ModelConfig, gamma: int,
+                  max_len: int) -> list[str]:
+    """Draft/verify compatibility findings (empty list = compatible):
+    vocab match, verify-side ``spec_decodable``, gamma bounds.  Shared
+    by ``ServeConfig`` validation and ``scripts/diagnose.py --spec``."""
+    problems = []
+    if draft_cfg.vocab_size != cfg.vocab_size:
+        problems.append(
+            f"vocab mismatch: draft {draft_cfg.name} has "
+            f"{draft_cfg.vocab_size}, verify {cfg.name} has "
+            f"{cfg.vocab_size} — proposals would index a different "
+            "token space")
+    if (draft_cfg.family in ("vlm", "encdec")
+            and draft_cfg.family != cfg.family):
+        problems.append(
+            f"draft {draft_cfg.name} (family={draft_cfg.family}) "
+            "prefills from non-token extras "
+            f"({'image' if draft_cfg.family == 'vlm' else 'audio'} "
+            "embeds) that requests for a "
+            f"{cfg.family} verify model do not carry — only a "
+            "same-family draft can reuse them")
+    if not M.spec_decodable(cfg):
+        problems.append(
+            f"verify model {cfg.name} (family={cfg.family}, "
+            f"pattern_period={cfg.pattern_period}) is not spec_decodable:"
+            " its decode state cannot roll back a rejected speculation")
+    lo, hi = 2, max(2, max_len // 4)
+    if not lo <= gamma <= hi:
+        problems.append(
+            f"spec_gamma {gamma} outside [{lo}, {hi}] (needs >=1 real "
+            f"proposal per round and <= max_len/4 = {hi} so a round "
+            "cannot span a quarter of the context)")
+    return problems
+
+
+# ---------------------------------------------------------------------------
+# the draft runtime
+# ---------------------------------------------------------------------------
+
+class SpecDecoder:
+    """Draft-model runtime for one engine: a dense decode cache with one
+    row per engine slot, batched admission prefill over FULL prompts
+    (the draft is cheap — it never chunks or radix-shares), and the
+    per-round proposal loop.
+
+    Frontier bookkeeping: ``draft_pos[slot]`` is the number of cache
+    positions holding committed context (draft-position space: the
+    draft's own image prefix, if any, plus prompt plus emitted tokens —
+    the engine's pending ``tokens[slot]`` is NOT yet written on either
+    side).  One round writes the whole verify feed ``[t0, d_1 ..
+    d_{gamma-1}]``; ``advance(slot, n_acc)`` moves the frontier past
+    the ``n_acc + 1`` of those that became context, leaving rejected
+    writes stranded above the frontier where the position mask hides
+    them (fully-paged drafts) or where they cost only acceptance rate
+    (ring/recurrent drafts — see module docstring).
+    """
+
+    def __init__(self, draft_cfg: ModelConfig, draft_params: Params,
+                 max_slots: int, max_len: int):
+        # engine helpers imported lazily: engine <-> spec_decode would
+        # otherwise be a module cycle (engine builds a SpecDecoder)
+        from repro.serving.engine import cache_batch_axes
+        self.cfg = draft_cfg
+        self.params = draft_params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.cache = M.init_cache(draft_cfg, max_slots, max_len)
+        self.axes = cache_batch_axes(draft_cfg, max_len)
+        self.draft_pos = np.zeros((max_slots,), np.int32)
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(1,),
+                               static_argnames=("need_logits",))
+        self._prefills: dict[tuple, Any] = {}
+
+    @property
+    def prefix(self) -> int:
+        return (self.cfg.num_image_tokens if self.cfg.family == "vlm"
+                else 0)
+
+    def _decode_fn(self, params, cache, tokens, pos,
+                   need_logits: bool = False):
+        """One draft step.  Greedy proposal rounds ship only the (B,)
+        argmax ids; the full (B, V) logits come to the host only when
+        some drafting slot samples at temperature > 0 (its proposal
+        DISTRIBUTION feeds the rejection-sampling rule)."""
+        logits, new_cache = M.decode_step(self.cfg, params, cache,
+                                          tokens, pos)
+        logits = logits[:, -1].astype(jnp.float32)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return greedy, (logits if need_logits else None), new_cache
+
+    # -- admission ------------------------------------------------------
+    def _batch_keys(self) -> tuple:
+        if self.cfg.family == "vlm":
+            return ("image_embeds",)
+        if self.cfg.family == "encdec":
+            return ("audio_embeds",)
+        return ()
+
+    def _prefill_fn(self, bucket: int, m: int):
+        key = (bucket, m)
+        if key not in self._prefills:
+            cfg, max_len = self.cfg, self.max_len
+
+            def fn(params, batch, true_len):
+                return M.prefill(cfg, params, batch, max_len,
+                                 true_len=true_len)
+            self._prefills[key] = jax.jit(fn)
+        return self._prefills[key]
+
+    def admit_group(self, reqs, slots) -> None:
+        """Batched draft prefill of the FULL prompts of one admission
+        group, inserted row-wise at ``slots``.  Prompts are padded to a
+        shared power-of-two bucket (compile variants stay O(log
+        max_len)); ``true_len`` keeps the padding exact."""
+        from repro.serving.engine import extract_slot, insert_slot
+        m = len(reqs)
+        n_max = max(len(r.prompt) for r in reqs)
+        bucket = 1 << (n_max - 1).bit_length() if n_max > 1 else 1
+        bucket = min(bucket, self.max_len)     # prompts are < max_len
+        prompts = np.zeros((m, bucket), np.int32)
+        true_len = np.zeros((m,), np.int32)
+        for i, r in enumerate(reqs):
+            p = np.asarray(r.prompt, np.int32)
+            prompts[i, :len(p)] = p
+            prompts[i, len(p):] = p[-1]
+            true_len[i] = len(p)
+        batch = {"tokens": jnp.asarray(prompts)}
+        for k in self._batch_keys():
+            batch[k] = jnp.asarray(
+                np.stack([np.asarray(r.extras[k]) for r in reqs]))
+        _, rows = self._prefill_fn(bucket, m)(self.params, batch,
+                                              jnp.asarray(true_len))
+        for i, slot in enumerate(slots):
+            one = extract_slot(rows, i, self.axes)
+            self.cache = insert_slot(self.cache, one, slot, self.axes)
+            self.draft_pos[slot] = self.prefix + int(true_len[i])
+
+    # -- proposals ------------------------------------------------------
+    def propose(self, spec_slots, seeds, temps, topks, gamma: int, rng):
+        """``gamma`` batched draft steps.  spec_slots: slot ids drafting
+        this round (other slots ride along with write-parked dummies —
+        their row state is untouched at any position below their
+        frontier).  Returns ``(proposals, dists)``: per spec slot,
+        ``gamma - 1`` proposal tokens and their sampling distributions
+        (dists hold None in greedy mode).
+
+        Draft writes land at ``draft_pos + step`` for drafting slots so
+        the round leaves K/V for the full verify feed; non-drafting
+        slots park every write on one reusable position (their frontier,
+        which the next real token overwrites before any read).
+        """
+        B = self.max_slots
+        spec = np.zeros((B,), bool)
+        spec[list(spec_slots)] = True
+        fed = np.zeros((B, 1), np.int32)
+        proposals = {s: [] for s in spec_slots}
+        dists = {s: [] for s in spec_slots}
+        for s in spec_slots:
+            fed[s, 0] = seeds[s]
+        need_logits = bool(any(temps[s] > 0 for s in spec_slots))
+        for step in range(gamma):
+            pos = np.where(spec, self.draft_pos + step, self.draft_pos)
+            pos = np.minimum(pos, self.max_len - 1).astype(np.int32)
+            greedy, logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(fed),
+                jnp.asarray(pos), need_logits=need_logits)
+            greedy = np.asarray(greedy)
+            logits = np.asarray(logits, np.float32) if need_logits \
+                else None
+            for s in spec_slots:
+                if step == gamma - 1:
+                    continue          # last step only writes K/V
+                temp, top_k = float(temps[s]), int(topks[s])
+                if temp <= 0:
+                    tok = int(greedy[s])
+                    dists[s].append(None)
+                else:
+                    p = processed_dist(logits[s], temp, top_k)
+                    tok = int(rng.choice(p.size, p=p))
+                    dists[s].append(p)
+                proposals[s].append(tok)
+                fed[s, 0] = tok
+        return proposals, dists
+
+    def advance(self, slot: int, n_committed: int) -> None:
+        """Move the slot's frontier past the round's committed writes
+        (``n_accepted + 1`` fed tokens became context)."""
+        self.draft_pos[slot] = min(self.draft_pos[slot] + n_committed,
+                                   self.max_len - 1)
+
+    # -- preemption -----------------------------------------------------
+    def extract(self, slot: int) -> dict:
+        """Detach the slot's draft state for ``Request.saved_state``."""
+        from repro.serving.engine import extract_slot
+        return {"cache": extract_slot(self.cache, slot, self.axes),
+                "pos": int(self.draft_pos[slot])}
+
+    def insert(self, slot: int, state: Optional[dict]) -> None:
+        """Restore a preempted slot's draft state; with ``None`` (a
+        resume that predates spec / a forced reclaim) the row keeps its
+        stale content — proposals degrade, emitted tokens do not."""
+        from repro.serving.engine import insert_slot
+        if state is None:
+            self.draft_pos[slot] = 0
+            return
+        self.cache = insert_slot(self.cache, state["cache"], slot,
+                                 self.axes)
+        self.draft_pos[slot] = state["pos"]

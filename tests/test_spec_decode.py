@@ -1,0 +1,429 @@
+"""Speculative decoding: draft/verify over paged KV + multi-token extend.
+
+The load-bearing guarantees:
+* greedy spec output is BIT-identical to vanilla decode per family
+  (acceptance only keeps verify-argmax matches, and ``extend_paged``
+  reproduces sequential decode exactly);
+* a rejected speculation rolls back with zero leaked pages
+  (``pool.assert_consistent`` runs inside every ``drain_step``);
+* spec coexists with the radix prefix cache (shared pages are
+  CoW-forked, hit output == cold output);
+* incompatible drafts are rejected at engine construction.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.serving import (EdgeServingEngine, Request, ServeConfig,
+                           accept_proposals, make_self_draft,
+                           validate_spec)
+
+# one verify arch per spec_decodable family (dense, moe, encdec, vlm)
+SPEC_ARCHS = ["phi3-medium-14b", "granite-moe-1b-a400m", "whisper-base",
+              "internvl2-76b"]
+
+
+def _cfg(arch):
+    cfg = get_smoke_config(arch)
+    if cfg.family == "moe":
+        # extend capacity derives from the static (B*S) token count —
+        # ample capacity removes the one legitimate divergence
+        cfg = cfg.replace(capacity_factor=100.0)
+    return cfg
+
+
+def _params(cfg):
+    return M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _reqs(cfg, lens=(5, 9, 17, 33), max_new=8):
+    rng = np.random.default_rng(3)
+    out = []
+    for uid, n in enumerate(lens):
+        extras = {}
+        if cfg.family == "encdec":
+            extras["audio_embeds"] = rng.normal(
+                0, 0.1, (cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+        if cfg.family == "vlm":
+            extras["image_embeds"] = rng.normal(
+                0, 0.1, (cfg.num_image_tokens, cfg.image_embed_dim)
+            ).astype(np.float32)
+        out.append(Request(uid=uid,
+                           prompt=rng.integers(0, cfg.vocab_size, n,
+                                               dtype=np.int32),
+                           max_new_tokens=max_new, extras=extras))
+    return out
+
+
+def _drain(eng, reqs):
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_until_drained()
+    return {r.uid: tuple(r.generated) for r in done}
+
+
+_SCFG = dict(max_slots=4, max_len=96, prefill_buckets=(8, 16))
+
+
+@pytest.mark.parametrize("arch", SPEC_ARCHS)
+def test_spec_greedy_bit_equals_vanilla(arch):
+    """Per spec_decodable family: spec on == spec off, token for token,
+    under BOTH a high-acceptance draft (the verify model itself — every
+    full-sweep/bonus path fires) and a chance-level cross draft (gemma
+    smoke — the rejection/rollback path fires almost every round).
+    Prompt lengths cross bucket boundaries AND the largest bucket, so
+    the multi-token catch-up rides the same waves."""
+    cfg = _cfg(arch)
+    params = _params(cfg)
+    base = _drain(EdgeServingEngine(cfg, params, ServeConfig(**_SCFG)),
+                  _reqs(cfg))
+
+    ident = EdgeServingEngine(
+        cfg, params, ServeConfig(**_SCFG, spec_decode=True, spec_gamma=4),
+        draft=(cfg, params))
+    assert _drain(ident, _reqs(cfg)) == base
+    st = ident.stats()
+    assert st["spec_active"] and st["spec_rounds"] > 0
+    assert st["spec_acceptance"] > 0          # self-agreement accepts
+
+    dcfg = get_smoke_config("gemma3-1b")
+    dparams = M.init_params(dcfg, jax.random.PRNGKey(9))
+    cross = EdgeServingEngine(
+        cfg, params, ServeConfig(**_SCFG, spec_decode=True, spec_gamma=4),
+        draft=(dcfg, dparams))
+    assert _drain(cross, _reqs(cfg)) == base
+    st = cross.stats()
+    assert st["spec_accepted"] < st["spec_proposed"]  # rejections ran
+    if cross.paged:
+        assert cross.pool.num_free + (
+            cross.prefix_cache.stats()["cached_blocks"]
+            if cross.prefix_cache else 0) == cross.pool.num_blocks
+
+
+def test_spec_dense_twin_matches_paged():
+    """spec over the dense (paged=False) engine is wave-for-wave
+    identical to the paged one — extend == extend_paged bit-for-bit."""
+    cfg = _cfg("phi3-medium-14b")
+    params = _params(cfg)
+    out = {}
+    for paged in (True, False):
+        eng = EdgeServingEngine(
+            cfg, params,
+            ServeConfig(**_SCFG, paged=paged, spec_decode=True,
+                        spec_gamma=4),
+            draft=(cfg, params))
+        out[paged] = (_drain(eng, _reqs(cfg)), eng.stats()["spec_accepted"])
+    assert out[True] == out[False]
+
+
+def test_spec_rejection_rollback_leaks_nothing():
+    """A chance-level draft rejects nearly every proposal: every round
+    allocates verify-span pages and rolls them back.  assert_consistent
+    already runs inside drain_step; afterwards every page must be free
+    (prefix cache off so retirement cannot absorb a leak)."""
+    cfg = _cfg("phi3-medium-14b")
+    params = _params(cfg)
+    dcfg = get_smoke_config("gemma2-9b")
+    dparams = M.init_params(dcfg, jax.random.PRNGKey(5))
+    eng = EdgeServingEngine(
+        cfg, params,
+        ServeConfig(**_SCFG, prefix_cache=False, spec_decode=True,
+                    spec_gamma=4),
+        draft=(dcfg, dparams))
+    _drain(eng, _reqs(cfg, lens=(5, 9, 13, 21, 33, 7)))
+    st = eng.stats()
+    assert st["spec_rounds"] > 0
+    assert eng.pool.num_free == eng.pool.num_blocks   # zero leaked pages
+    assert all(not b for b in eng.slot_blocks)
+
+
+def test_spec_with_prefix_cache_hit():
+    """Spec + radix cache: the second tenant shares the first one's
+    prompt pages; a verify wave whose span starts inside a shared page
+    must CoW-fork, never write a reader's chain — and hit output equals
+    cold output."""
+    cfg = _cfg("phi3-medium-14b")
+    params = _params(cfg)
+    rng = np.random.default_rng(11)
+    sys_prompt = rng.integers(0, cfg.vocab_size, 24, dtype=np.int32)
+
+    def req(uid):
+        return Request(uid=uid, prompt=sys_prompt.copy(),
+                       max_new_tokens=8)
+
+    scfg = ServeConfig(**_SCFG, prefix_cache=True, spec_decode=True,
+                       spec_gamma=4)
+    eng = EdgeServingEngine(cfg, params, scfg, draft=(cfg, params))
+    eng.submit(req(0))
+    eng.run_until_drained()                   # cold; chain retired
+    hits0 = eng.prefix_cache.hits
+    eng.submit(req(1))
+    eng.run_until_drained()                   # identical prompt: a hit
+    assert eng.prefix_cache.hits > hits0
+    by_uid = {r.uid: tuple(r.generated) for r in eng.completed}
+    assert by_uid[0] == by_uid[1]             # sharing is invisible
+    eng.pool.assert_consistent()
+
+    cold = EdgeServingEngine(cfg, params,
+                             ServeConfig(**_SCFG, prefix_cache=False))
+    cold.submit(req(2))
+    cold.run_until_drained()
+    assert tuple(cold.completed[0].generated) == by_uid[0]
+
+
+def test_spec_preempt_resume_exact():
+    """Preempting a speculating slot carries the draft state too;
+    resume continues token-for-token (identity draft keeps acceptance
+    high so the full-sweep path crosses the preemption)."""
+    cfg = _cfg("phi3-medium-14b")
+    params = _params(cfg)
+    scfg = ServeConfig(max_slots=1, max_len=96, prefill_buckets=(8, 16),
+                       spec_decode=True, spec_gamma=4)
+
+    e0 = EdgeServingEngine(cfg, params, scfg, draft=(cfg, params))
+    base = _drain(e0, _reqs(cfg, lens=(9,), max_new=12))[0]
+
+    eng = EdgeServingEngine(cfg, params, scfg, draft=(cfg, params))
+    req = _reqs(cfg, lens=(9,), max_new=12)[0]
+    eng.submit(req)
+    eng.step()
+    eng.step()
+    r = eng.preempt(0)
+    assert r.saved_state is not None and "draft" in r.saved_state
+    eng.submit(r)
+    done = eng.run_until_drained()
+    assert tuple(done[-1].generated) == base
+
+
+def test_vocab_mismatch_rejected_at_validation():
+    cfg = _cfg("phi3-medium-14b")          # smoke vocab 512
+    params = _params(cfg)
+    dcfg = get_smoke_config("gemma3-1b").replace(vocab_size=256)
+    dparams = M.init_params(dcfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="vocab mismatch"):
+        EdgeServingEngine(cfg, params,
+                          ServeConfig(**_SCFG, spec_decode=True),
+                          draft=(dcfg, dparams))
+    assert validate_spec(cfg, dcfg, 4, 96)  # the shared checker agrees
+
+
+def test_extras_requiring_draft_rejected_for_text_verify():
+    """A vlm/encdec draft prefills from image/audio extras that a
+    text-model's requests never carry: rejected at construction, not a
+    KeyError mid-admission."""
+    cfg = _cfg("phi3-medium-14b")
+    params = _params(cfg)
+    vcfg = get_smoke_config("internvl2-76b")
+    vparams = M.init_params(vcfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="extras"):
+        EdgeServingEngine(cfg, params,
+                          ServeConfig(**_SCFG, spec_decode=True),
+                          draft=(vcfg, vparams))
+    # ...while a SAME-family extras draft stays legal (vlm drafts vlm)
+    assert not validate_spec(vcfg, vcfg, 4, 96)
+
+
+def test_gamma_bounds_rejected():
+    cfg = _cfg("phi3-medium-14b")
+    params = _params(cfg)
+    for gamma in (1, 96):
+        with pytest.raises(ValueError, match="spec_gamma"):
+            EdgeServingEngine(
+                cfg, params,
+                ServeConfig(**_SCFG, spec_decode=True, spec_gamma=gamma),
+                draft=(cfg, params))
+
+
+def test_spec_quietly_disabled_on_recurrent_families():
+    """ssm/hybrid cannot roll back a rejected run: spec_decode=True
+    degrades to the vanilla path (mirroring the prefix_cache gate) and
+    the engine still drains."""
+    for arch in ("mamba2-370m", "zamba2-7b"):
+        cfg = get_smoke_config(arch)
+        params = _params(cfg)
+        eng = EdgeServingEngine(cfg, params,
+                                ServeConfig(**_SCFG, spec_decode=True))
+        assert eng.spec is None and not eng.extend_ok
+        assert not M.spec_decodable(cfg) and not M.extendable(cfg)
+        done = _drain(eng, [Request(
+            uid=0, prompt=np.arange(6, dtype=np.int32), max_new_tokens=4)])
+        assert len(done[0]) == 4
+        assert eng.stats()["spec_active"] is False
+
+
+def test_spec_gated_off_on_local_ring_verify():
+    """gemma local rings cannot roll back (a rejected write evicts live
+    window context): spec quietly disabled, but multi-token catch-up
+    still engages (teacher-forced extend never rolls back)."""
+    cfg = get_smoke_config("gemma3-1b")
+    params = _params(cfg)
+    eng = EdgeServingEngine(cfg, params,
+                            ServeConfig(**_SCFG, spec_decode=True))
+    assert eng.spec is None and eng.extend_ok
+    assert not M.spec_decodable(cfg) and M.extendable(cfg)
+
+
+def test_self_draft_shares_weights():
+    """Self-draft is a view: first-half layers + exit head, embeddings
+    by reference (zero extra resident params beyond the head norm)."""
+    cfg = _cfg("phi3-medium-14b")
+    params = _params(cfg)
+    dcfg, dparams = make_self_draft(cfg, params, key=jax.random.PRNGKey(0))
+    assert dcfg.num_layers == max(1, cfg.num_layers // 2)
+    assert dparams["embed"]["table"] is params["embed"]["table"]
+    with pytest.raises(ValueError, match="self-draft"):
+        make_self_draft(get_smoke_config("gemma3-1b"),
+                        _params(get_smoke_config("gemma3-1b")))
+
+
+def test_accept_proposals_rules():
+    """The acceptance rule in isolation: greedy exact-match prefix +
+    correction; rejection sampling emits from the residual and a clean
+    sweep emits the bonus."""
+    V = 8
+    lg = np.full((3, V), -10.0, np.float32)
+    lg[0, 2] = lg[1, 5] = lg[2, 1] = 10.0      # argmax: 2, 5, 1
+    rng = np.random.default_rng(0)
+    # full sweep: both proposals match -> bonus from row 2
+    n, emitted = accept_proposals([2, 5], [None, None], lg, 0.0, 0, rng)
+    assert (n, emitted) == (2, [2, 5, 1])
+    # first mismatch: correction from row 0, nothing after
+    n, emitted = accept_proposals([3, 5], [None, None], lg, 0.0, 0, rng)
+    assert (n, emitted) == (0, [2])
+    # rejection sampling: draft is certain of a token the target gives
+    # zero mass -> always rejected, correction ~ residual == target
+    q_target = np.zeros(V)
+    q_target[4] = 1.0
+    p_draft = np.zeros(V)
+    p_draft[0] = 1.0
+    lg2 = np.log(np.maximum(q_target, 1e-9))[None, :].repeat(2, axis=0)
+    n, emitted = accept_proposals([0], [p_draft], lg2, 1.0, 0, rng)
+    assert (n, emitted) == (0, [4])
+    # ...and a draft that IS the target distribution always accepts
+    n, emitted = accept_proposals([4], [q_target], lg2, 1.0, 0, rng)
+    assert n == 1 and emitted[0] == 4 and len(emitted) == 2
+
+
+def test_rejection_sampling_emits_target_distribution():
+    """The rejection-sampling identity: whatever the draft proposes,
+    the FIRST emitted token is distributed exactly as vanilla sampling
+    from the verify distribution.  Monte-Carlo over the acceptance rule
+    with a deliberately mismatched draft."""
+    from repro.serving.spec_decode import processed_dist
+    rng = np.random.default_rng(0)
+    V, temp = 16, 1.0
+    verify_logits = rng.normal(0, 2.0, (2, V)).astype(np.float32)
+    q = processed_dist(verify_logits[0], temp, 0)
+    p = processed_dist(rng.normal(0, 2.0, V).astype(np.float32), temp, 0)
+    counts = np.zeros(V)
+    n_trials = 20_000
+    for _ in range(n_trials):
+        d = int(rng.choice(V, p=p))            # proposal ~ draft dist
+        _, emitted = accept_proposals([d], [p], verify_logits, temp, 0,
+                                      rng)
+        counts[emitted[0]] += 1
+    tv = 0.5 * np.abs(counts / n_trials - q).sum()
+    assert tv < 0.03, tv                        # ~1/sqrt(N) noise floor
+
+
+def test_extend_paged_matches_sequential_decode():
+    """Model-level: one extend_paged call == K sequential paged decode
+    steps, logits AND cache bit-for-bit, for every attention family."""
+    import jax.numpy as jnp
+    for arch in SPEC_ARCHS + ["gemma3-1b"]:
+        cfg = _cfg(arch)
+        params = _params(cfg)
+        rng = np.random.default_rng(0)
+        max_len, bs, B, K = 64, 8, 2, 4
+        n_blk = max_len // bs
+        cache = M.init_paged_cache(cfg, B, max_len, B * n_blk, bs)
+        prompt = rng.integers(0, cfg.vocab_size, (B, 6)).astype(np.int32)
+        batch = {"tokens": jnp.asarray(prompt)}
+        if cfg.family == "encdec":
+            batch["audio_embeds"] = jnp.asarray(rng.normal(
+                0, .1, (B, cfg.encoder_seq, cfg.d_model)), jnp.float32)
+        if cfg.family == "vlm":
+            batch["image_embeds"] = jnp.asarray(rng.normal(
+                0, .1, (B, cfg.num_image_tokens, cfg.image_embed_dim)),
+                jnp.float32)
+        prefix = cfg.num_image_tokens if cfg.family == "vlm" else 0
+        tables = np.stack([np.arange(n_blk) + i * n_blk
+                           for i in range(B)]).astype(np.int32)
+        n_wblk = (prefix + 6 + bs - 1) // bs + 1
+        _, cache = M.prefill_paged(
+            cfg, params, batch, max_len, cache, slots=jnp.arange(B),
+            write_tables=jnp.asarray(tables[:, :n_wblk]))
+        pos0 = prefix + 6
+        toks = rng.integers(0, cfg.vocab_size, (B, K)).astype(np.int32)
+        seq, c1 = [], cache
+        for i in range(K):
+            lg, c1 = M.decode_step_paged(
+                cfg, params, c1, jnp.asarray(toks[:, i:i + 1]),
+                jnp.full((B,), pos0 + i, jnp.int32), jnp.asarray(tables))
+            seq.append(np.asarray(lg[:, -1], np.float32))
+        elg, c2 = M.extend_paged(cfg, params, cache, jnp.asarray(toks),
+                                 jnp.full((B,), pos0, jnp.int32),
+                                 jnp.asarray(tables))
+        assert np.array_equal(np.asarray(elg, np.float32),
+                              np.stack(seq, 1)), arch
+        for a, b in zip(jax.tree.leaves(c1), jax.tree.leaves(c2)):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), arch
+
+
+def test_extend_pad_rows_are_inert():
+    """Rows past ``valid_len`` are host padding: their token CONTENT
+    must not leak into real rows' logits or the written cache — in
+    particular MoE pads must never steal expert capacity (regression:
+    at capacity_factor=1.0 a pad duplicating the last real token used
+    to overflow its experts and drop a real token's contribution)."""
+    import jax.numpy as jnp
+    for arch in ("kimi-k2-1t-a32b", "phi3-medium-14b"):
+        # capacity_factor=1.0 makes kimi's experts overflow if pads
+        # compete (the configuration the bug reproduced on)
+        cfg = get_smoke_config(arch).replace(capacity_factor=1.0)
+        params = _params(cfg)
+        rng = np.random.default_rng(0)
+        max_len, bs, B, K = 64, 8, 2, 4
+        n_blk = max_len // bs
+        tables = np.stack([np.arange(n_blk) + i * n_blk
+                           for i in range(B)]).astype(np.int32)
+        prompt = rng.integers(0, cfg.vocab_size, (B, 6)).astype(np.int32)
+        cache = M.init_paged_cache(cfg, B, max_len, B * n_blk, bs)
+        _, cache = M.prefill_paged(
+            cfg, params, {"tokens": jnp.asarray(prompt)}, max_len, cache,
+            slots=jnp.arange(B), write_tables=jnp.asarray(tables[:, :1]))
+        real = rng.integers(0, cfg.vocab_size, (B, 2)).astype(np.int32)
+        valid = jnp.full((B,), 2, jnp.int32)
+
+        def run(pad_tok):
+            toks = np.concatenate(
+                [real, np.full((B, K - 2), pad_tok, np.int32)], axis=1)
+            lg, c2 = M.extend_paged(cfg, params, cache,
+                                    jnp.asarray(toks),
+                                    jnp.full((B,), 6, jnp.int32),
+                                    jnp.asarray(tables), valid)
+            return np.asarray(lg[:, :2], np.float32), c2
+
+        la, ca = run(int(real[0, -1]))      # pad == last real token
+        lb, cb = run(int((real[0, -1] + 1) % cfg.vocab_size))
+        assert np.array_equal(la, lb), arch
+        for a, b in zip(jax.tree.leaves(ca), jax.tree.leaves(cb)):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), arch
+
+
+def test_catchup_extend_long_prompt_matches_reference():
+    """The retired 1-token catch-up: a prompt far past the largest
+    bucket now advances spec_gamma tokens per wave and still matches
+    the sequential reference engine exactly (greedy)."""
+    cfg = _cfg("phi3-medium-14b")
+    params = _params(cfg)
+    base = _drain(EdgeServingEngine(
+        cfg, params, ServeConfig(**_SCFG, spec_gamma=2)),
+        _reqs(cfg, lens=(61,)))
+    for gamma in (4, 8):
+        eng = EdgeServingEngine(cfg, params,
+                                ServeConfig(**_SCFG, spec_gamma=gamma))
+        assert eng.extend_ok
+        assert _drain(eng, _reqs(cfg, lens=(61,))) == base
