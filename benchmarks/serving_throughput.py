@@ -9,9 +9,14 @@ first generated token, queueing included), plus the paged-KV admission
 numbers: peak concurrent requests and peak pool pages in flight, a
 same-KV-byte-budget demo showing the paged engine admitting more
 concurrent tenants than ``max_slots`` dense strips would allow, and a
-shared-prefix scenario (N users, one household system prompt, on a
-fully-paged arch) reporting radix prefix-cache hit-rate and TTFT on
-cache hits vs a cold prefill, and a speculative-decoding scenario
+shared-prefix scenario (N users, one household system prompt ending
+MID-page, on a fully-paged arch) reporting radix prefix-cache hit-rate,
+TTFT on cache hits vs a cold prefill, the token-granular hit-token
+count vs the block-granular counterfactual (``shared_hit_tokens`` >
+``shared_hit_tokens_block``), and a restart-warm leg (persist the hot
+chains via ``ServeConfig.prefix_persist_path`` + ``engine.close()``,
+rebuild the engine from the store, re-serve: ``persist_*`` fields +
+``shared_ttft_warm_ms``), and a speculative-decoding scenario
 (mixed traffic, verify=phi3 with a gemma3-1b cross draft AND the
 early-exit self-draft) reporting tokens/sec, acceptance rate and mean
 tokens per verify step against the non-speculative baseline — greedy
@@ -61,6 +66,12 @@ EXACT_FIELDS = ("requests", "decode_steps", "tokens", "peak_active",
                 "demo_dense_slots", "demo_paged_concurrent",
                 "shared_requests", "shared_hits", "shared_hit_blocks",
                 "shared_tokens",
+                # token-granular matching: total matched tokens must
+                # strictly beat the PR-3 block-granular counterfactual
+                "shared_hit_tokens", "shared_hit_tokens_block",
+                # restart-warm (persisted prefix store) scenario
+                "persist_chains", "persist_blocks", "persist_warm_hits",
+                "persist_warm_tokens", "persist_warm_matches",
                 # speculative scenario: greedy spec == vanilla bit-match
                 # plus the (seed-deterministic) protocol counters
                 "spec_requests", "spec_tokens", "spec_matches_vanilla",
@@ -117,23 +128,37 @@ def _shared_prefix_demo(seed: int = 0, n_users: int = 8) -> dict:
     shares the prefix pages by reference and prefills only its own
     tail — reported as cache hit-rate and TTFT cold vs hit (all
     variants pre-warmed on a throwaway system prompt, so the times are
-    serving latency, not XLA compiles)."""
+    serving latency, not XLA compiles).
+
+    The system prompt deliberately ends MID-page (45 tokens, 16-token
+    pages) and every user tail opens with the same 5 assistant-persona
+    tokens: a block-granular matcher would round each hit down to 32
+    tokens, while token-granular matching serves 45 (and 50 once the
+    first tail chain is indexed) — ``shared_hit_tokens`` vs
+    ``shared_hit_tokens_block`` is that gain, gated exactly.
+
+    A restart-warm variant then persists the warm cache to a store
+    (``ServeConfig.prefix_persist_path`` + ``engine.close()``), builds
+    a FRESH engine from it and re-serves a user: the hit must be
+    bit-identical to the live-cache serve and ``shared_ttft_warm_ms``
+    reports the restarted hub's TTFT."""
+    import os
+    import tempfile
+
     cfg = get_smoke_config(SHARED_ARCH)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    eng = EdgeServingEngine(cfg, params, ServeConfig(
-        max_slots=4, max_len=192, prefill_buckets=(16, 32, 64),
-        prefix_cache=True))
     rng = np.random.default_rng(seed)
-    sys_warm = rng.integers(0, cfg.vocab_size, 48, dtype=np.int32)
-    sys_meas = rng.integers(0, cfg.vocab_size, 48, dtype=np.int32)
+    sys_warm = rng.integers(0, cfg.vocab_size, 45, dtype=np.int32)
+    sys_meas = rng.integers(0, cfg.vocab_size, 45, dtype=np.int32)
+    tail_common = rng.integers(0, cfg.vocab_size, 5, dtype=np.int32)
 
     def user(uid, sys_prompt):
         tail = np.random.default_rng(1000 + uid).integers(
-            0, cfg.vocab_size, 8, dtype=np.int32)
-        return Request(uid=uid, prompt=np.concatenate([sys_prompt, tail]),
-                       max_new_tokens=8)
+            0, cfg.vocab_size, 3, dtype=np.int32)
+        return Request(uid=uid, prompt=np.concatenate(
+            [sys_prompt, tail_common, tail]), max_new_tokens=8)
 
-    def serve(req):
+    def serve(eng, req):
         """Submit + drain alone (clean TTFT, no queueing)."""
         t0 = time.perf_counter()
         eng.submit(req)
@@ -144,27 +169,68 @@ def _shared_prefix_demo(seed: int = 0, n_users: int = 8) -> dict:
                 ttft = (time.perf_counter() - t0) * 1e3
         return ttft
 
-    # warm both compile variants (cold bucket + hit suffix bucket)
-    serve(user(900, sys_warm))
-    serve(user(901, sys_warm))
-    h0, m0 = eng.prefix_cache.hits, eng.prefix_cache.misses
-    hb0 = eng.prefix_cache.hit_blocks
-    tok0 = sum(len(r.generated) for r in eng.completed)
+    store = tempfile.NamedTemporaryFile(suffix=".npz", delete=False)
+    store.close()
+    try:
+        eng = EdgeServingEngine(cfg, params, ServeConfig(
+            max_slots=4, max_len=192, prefill_buckets=(16, 32, 64),
+            prefix_cache=True, prefix_persist_path=store.name))
+        # warm both compile variants (cold bucket + hit suffix bucket)
+        serve(eng, user(900, sys_warm))
+        serve(eng, user(901, sys_warm))
+        h0, m0 = eng.prefix_cache.hits, eng.prefix_cache.misses
+        hb0 = eng.prefix_cache.hit_blocks
+        ht0 = eng.prefix_cache.hit_tokens
+        htb0 = eng.prefix_cache.hit_tokens_block
+        tok0 = sum(len(r.generated) for r in eng.completed)
 
-    ttft_cold = serve(user(0, sys_meas))
-    ttft_hits = [serve(user(uid, sys_meas)) for uid in range(1, n_users)]
-    eng.pool.assert_consistent()
-    return {
-        "shared_requests": n_users,
-        "shared_hits": eng.prefix_cache.hits - h0,
-        "shared_misses": eng.prefix_cache.misses - m0,
-        "shared_hit_blocks": eng.prefix_cache.hit_blocks - hb0,
-        "shared_tokens": sum(len(r.generated)
-                             for r in eng.completed) - tok0,
-        "shared_ttft_cold_ms": float(ttft_cold),
-        "shared_ttft_hit_p50_ms": float(np.percentile(ttft_hits, 50)),
-        "shared_ttft_hit_p99_ms": float(np.percentile(ttft_hits, 99)),
-    }
+        ttft_cold = serve(eng, user(0, sys_meas))
+        hit_users = [user(uid, sys_meas) for uid in range(1, n_users)]
+        ttft_hits = [serve(eng, u) for u in hit_users]
+        eng.pool.assert_consistent()
+        out = {
+            "shared_requests": n_users,
+            "shared_hits": eng.prefix_cache.hits - h0,
+            "shared_misses": eng.prefix_cache.misses - m0,
+            "shared_hit_blocks": eng.prefix_cache.hit_blocks - hb0,
+            "shared_hit_tokens": eng.prefix_cache.hit_tokens - ht0,
+            "shared_hit_tokens_block":
+                eng.prefix_cache.hit_tokens_block - htb0,
+            "shared_tokens": sum(len(r.generated)
+                                 for r in eng.completed) - tok0,
+            "shared_ttft_cold_ms": float(ttft_cold),
+            "shared_ttft_hit_p50_ms": float(np.percentile(ttft_hits, 50)),
+            "shared_ttft_hit_p99_ms": float(np.percentile(ttft_hits, 99)),
+        }
+        assert out["shared_hit_tokens"] > out["shared_hit_tokens_block"], (
+            "token-granular matching must beat the block-granular "
+            "baseline on this workload", out)
+
+        # ---- restart-warm: persist, rebuild, re-serve ----------------
+        saved = eng.close()
+        warm_eng = EdgeServingEngine(cfg, params, ServeConfig(
+            max_slots=4, max_len=192, prefill_buckets=(16, 32, 64),
+            prefix_cache=True, prefix_persist_path=store.name))
+        assert warm_eng.persist_rejected == "", warm_eng.persist_rejected
+        serve(warm_eng, user(902, sys_warm))     # compile warm-up
+        wh0 = warm_eng.prefix_cache.hits
+        replay = user(1, sys_meas)
+        ttft_warm = serve(warm_eng, replay)
+        warm_eng.pool.assert_consistent()
+        out.update({
+            "persist_chains": int(saved["persist_saved_chains"]),
+            "persist_blocks": int(saved["persist_saved_blocks"]),
+            "persist_loaded_blocks": int(warm_eng.persist_loaded_blocks),
+            "persist_warm_hits": int(warm_eng.prefix_cache.hits - wh0),
+            "persist_warm_tokens": len(replay.generated),
+            # restart-warm must reproduce the live-cache serve bitwise
+            "persist_warm_matches": (tuple(replay.generated)
+                                     == tuple(hit_users[0].generated)),
+            "shared_ttft_warm_ms": float(ttft_warm),
+        })
+        return out
+    finally:
+        os.unlink(store.name)
 
 
 def _spec_demo(seed: int = 0, n_requests: int = 12) -> dict:
@@ -332,6 +398,7 @@ def bench():
         ("serving.shared_ttft_cold_ms", us, r["shared_ttft_cold_ms"]),
         ("serving.shared_ttft_hit_p50_ms", us,
          r["shared_ttft_hit_p50_ms"]),
+        ("serving.shared_ttft_warm_ms", us, r["shared_ttft_warm_ms"]),
         ("serving.spec_self_tok_per_s", us, r["spec_self_tok_per_s"]),
         ("serving.spec_self_tokens_per_step", us,
          r["spec_self_tokens_per_step"]),

@@ -2,9 +2,26 @@
 # Tier-1 gate: compat status, fast import sweep, then the test suite.
 # The import sweep catches AxisType-style JAX version breaks in seconds
 # instead of surfacing them as collection errors three minutes in.
+#
+#   scripts/check.sh          full gate: compat + imports + serving
+#                             perf baseline + tier-1 suite; FAILS if any
+#                             single test exceeds REPRO_TEST_TIME_LIMIT
+#                             seconds (default 120 — keeps the growing
+#                             suite tractable; see tests/conftest.py)
+#   scripts/check.sh --fast   skip the benchmark gate; run tier-1 with
+#                             --durations=15 and no per-test time limit
+#                             (the quick inner-loop check)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+FAST=0
+for arg in "$@"; do
+    case "$arg" in
+        --fast) FAST=1 ;;
+        *) echo "unknown flag: $arg (supported: --fast)" >&2; exit 2 ;;
+    esac
+done
 
 echo "== compat ==" >&2
 python scripts/diagnose.py --compat >&2
@@ -28,9 +45,18 @@ for mod in MODULES:
     print(f"  ok {mod}")
 PY
 
+if [ "$FAST" = "1" ]; then
+    echo "== tier-1 tests (fast: no benchmark gate) ==" >&2
+    python -m pytest -x -q --durations=15
+    exit 0
+fi
+
 echo "== serving perf baseline ==" >&2
 python -m benchmarks.serving_throughput --requests 12 \
     --check benchmarks/serving_baseline.json >&2
 
 echo "== tier-1 tests ==" >&2
-python -m pytest -x -q
+# any single test exceeding the limit fails the gate (slow-test creep
+# is a regression too); override/disable with REPRO_TEST_TIME_LIMIT=0
+export REPRO_TEST_TIME_LIMIT="${REPRO_TEST_TIME_LIMIT-120}"
+python -m pytest -x -q --durations=15

@@ -8,6 +8,9 @@ ops by bytes / flops / collective bytes (trip-scaled, per chip).
   PYTHONPATH=src python scripts/diagnose.py --compat   # JAX/shim status
   PYTHONPATH=src python scripts/diagnose.py --spec [verify] [draft] \
       [gamma] [max_len]   # draft/verify speculative compatibility
+  PYTHONPATH=src python scripts/diagnose.py --cache [store.npz]
+      # per-arch prefix-sharing capability; with a path, also a
+      # persisted prefix-store report (header + per-chain summary)
 """
 import json
 import sys
@@ -54,9 +57,53 @@ def spec_report(args: list) -> None:
     print("  ok (vocab match, verify spec_decodable, gamma in bounds)")
 
 
+def cache_report(args: list) -> None:
+    """Prefix-sharing capability per arch + (optionally) a persisted
+    prefix-store report: validates the header the same way the engine
+    does at rehydrate time and summarizes the stored chains."""
+    from repro.configs.registry import ARCH_IDS
+    from repro.configs import get_smoke_config
+    caps = {arch: {"family": get_smoke_config(arch).family,
+                   "prefix_sharable": M.prefix_sharable(
+                       get_smoke_config(arch))}
+            for arch in ARCH_IDS}
+    print("prefix-sharing capabilities:", json.dumps(caps, indent=1))
+    if not args:
+        return
+    import numpy as np
+    path = args[0]
+    try:
+        with np.load(path) as data:
+            meta = json.loads(bytes(data["meta"]).decode())
+            n = int(data["n_chains"])
+            chains = []
+            total_blocks = 0
+            for i in range(n):
+                key = data[f"key_{i}"]
+                nb = data[f"pages_{i}_0"].shape[1] if n else 0
+                total_blocks += nb
+                chains.append({"namespace": int(data[f"ns_{i}"]),
+                               "tokens": int(len(key)), "blocks": int(nb)})
+    except Exception as e:   # same operator-facing verdict as the engine
+        print(f"prefix store {path}: UNREADABLE/CORRUPT ({e!r}) — an "
+              "engine pointed at it will reject it and start cold")
+        sys.exit(1)
+    print(f"prefix store {path}:")
+    print("  header:", json.dumps(meta))
+    print(f"  chains: {n}, total blocks: {total_blocks}")
+    for i, c in enumerate(chains[:16]):
+        print(f"  chain {i}: {c['tokens']} tokens / {c['blocks']} pages "
+              f"(namespace {c['namespace']})")
+    if n > 16:
+        print(f"  ... and {n - 16} more")
+
+
 def main():
     from repro.compat import report
     print("compat:", json.dumps(report()))
+    if "--cache" in sys.argv:
+        cache_report([a for a in sys.argv[1:] if not a.startswith("-")])
+        return
     if "--spec" in sys.argv:
         spec_report([a for a in sys.argv[1:] if not a.startswith("-")])
         return

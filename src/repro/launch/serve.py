@@ -44,6 +44,14 @@ def main() -> None:
     ap.add_argument("--gamma", type=int, default=4,
                     help="speculation width (proposals per round + 1); "
                          "also the multi-token catch-up chunk")
+    ap.add_argument("--persist", metavar="PATH", default=None,
+                    help="prefix-store path: rehydrate the radix prefix "
+                         "cache from PATH at startup (warm TTFT after a "
+                         "hub restart) and save the hot chains back on "
+                         "exit; a corrupt or mismatched-config store is "
+                         "rejected cleanly (cold start).  Only engages "
+                         "on prefix-sharable archs (see "
+                         "scripts/diagnose.py --cache)")
     ap.add_argument("--min-prompt", type=int, default=4)
     ap.add_argument("--max-prompt", type=int, default=24)
     ap.add_argument("--params", default=None,
@@ -61,7 +69,8 @@ def main() -> None:
                        temperature=args.temperature, top_k=args.top_k,
                        policy=args.policy, spec_decode=args.spec,
                        draft_arch=args.draft if args.spec else None,
-                       spec_gamma=args.gamma)
+                       spec_gamma=args.gamma,
+                       prefix_persist_path=args.persist)
     eng = EdgeServingEngine(cfg, params, scfg)
 
     rng = np.random.default_rng(0)
@@ -115,6 +124,16 @@ def main() -> None:
             "spec_accept_rate": round(st["spec_acceptance"], 3),
             "spec_tokens_per_step": round(st["spec_tokens_per_round"], 3),
         })
+    if args.persist:
+        st = eng.stats()
+        out.update({
+            "persist_loaded_chains": st.get("persist_loaded_chains", 0),
+            "persist_loaded_blocks": st.get("persist_loaded_blocks", 0),
+            "persist_rejected": st.get("persist_rejected", ""),
+            "prefix_hits": st.get("prefix_hits", 0),
+            "prefix_hit_tokens": st.get("prefix_hit_tokens", 0),
+        })
+        out.update(eng.close())         # save the warm chains back
     print(json.dumps(out))
     for r in done[:3]:
         print(f"  req {r.uid}: {list(map(int, r.generated[:10]))}...")

@@ -530,15 +530,22 @@ def attention_prefill_paged(cfg: ModelConfig, params, x, positions, pages,
     prefix's pages instead of recomputing them.
 
     x: (B, S, d) suffix activations; positions: (B, S) ABSOLUTE
-    positions (``ctx_len + arange(S)``); pages: this layer's pool dict;
-    write_tables: (B, n_wblk) physical pages covering the suffix span
-    (suffix always starts at a block boundary — the radix cache matches
-    whole blocks only); ctx_tables/ctx_len: shared-prefix pages and
-    per-row valid context length, or None for a cold (no-context)
-    prefill.
+    positions (``ctx_len + arange(S)``); pages: this layer's pool dict.
 
-    Cold prefills delegate the compute to ``attention_fwd`` so the cold
-    paged admission is the exact same math as the dense-strip path.
+    Cold rows (``ctx_tables=None``): ``write_tables`` is (B, n_wblk) —
+    physical pages covering the suffix span from logical block 0 — and
+    the compute delegates to ``attention_fwd`` so the cold paged
+    admission is the exact same math as the dense-strip path.
+
+    Hit rows: the prefix match is TOKEN-granular, so the suffix write
+    starts at ``ctx_len`` which may land mid-page (the engine has
+    already CoW-forked that partial page private).  ``ctx_tables`` and
+    ``write_tables`` are then BOTH the row's full block table (logical
+    block ``i`` -> physical page): the context is the gathered view of
+    that table masked to positions ``< ctx_len`` (per row), and the
+    suffix K/V is scattered token-by-token at absolute positions
+    ``ctx_len + i`` through the same table (``scatter_kv_tokens``) —
+    overwriting, in order, exactly the stale tail the mask was hiding.
     Returns (out (B, S, d), new_pages).
     """
     B, S, d = x.shape
@@ -555,8 +562,9 @@ def attention_prefill_paged(cfg: ModelConfig, params, x, positions, pages,
     ck, cv = gather_kv_pages(pages, ctx_tables)
     Tc = ck.shape[1]
     # context part: logical positions [0, Tc) valid where < ctx_len
-    # (pad rows of a mixed-depth admission group mask out here);
-    # suffix part: plain causal within the suffix
+    # (token-granular — a partial final page contributes exactly its
+    # matched tokens; pad rows of a mixed-depth admission group mask
+    # out here); suffix part: plain causal within the suffix
     ctx_ok = jnp.arange(Tc, dtype=jnp.int32)[None, :] < ctx_len[:, None]
     mask = jnp.concatenate(
         [jnp.broadcast_to(ctx_ok[:, None, :], (B, S, Tc)),
@@ -569,7 +577,8 @@ def attention_prefill_paged(cfg: ModelConfig, params, x, positions, pages,
                                     softcap=cfg.attn_logit_softcap)
     o = jnp.einsum("bshq,hqd->bsd", out.reshape(B, S, H, hd),
                    params["wo"].astype(x.dtype))
-    return o, scatter_kv_pages(pages, k, v, write_tables)
+    return o, scatter_kv_tokens(pages, k, v, write_tables,
+                                jnp.asarray(ctx_len, jnp.int32))
 
 
 def attention_decode_paged(cfg: ModelConfig, params, x, cache, pos,

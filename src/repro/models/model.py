@@ -270,9 +270,13 @@ def prefill_paged(cfg: ModelConfig, params: Params, batch: dict, max_len,
     SSM state, cross K/V) at ``slots`` (m,).  With ``ctx_tables`` /
     ``ctx_len`` the rows are radix-cache-hit SUFFIXES that attend the
     shared prefix's pages and skip its prefill FLOPs entirely (only
-    legal when ``prefix_sharable(cfg)``).  ``write_tables=None`` is the
-    dense engine's fused admission.  Returns (last-true-token logits,
-    updated cache)."""
+    legal when ``prefix_sharable(cfg)``); ``ctx_len`` is TOKEN-granular
+    (a hit may start mid-page — the engine pre-forks that page) and
+    ``ctx_tables``/``write_tables`` are then both the row's FULL block
+    table, read below ``ctx_len`` and scattered into from ``ctx_len``
+    (see ``layers.attention_prefill_paged``).  ``write_tables=None`` is
+    the dense engine's fused admission.  Returns (last-true-token
+    logits, updated cache)."""
     tokens = batch["tokens"]
     kw = dict(slots=slots, write_tables=write_tables,
               ctx_tables=ctx_tables, ctx_len=ctx_len, true_len=true_len)

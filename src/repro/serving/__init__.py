@@ -24,13 +24,26 @@ Admission semantics (the contract tests rely on)
   shadow-copied), and finished chains are returned to a radix index
   (``serving.prefix_cache.RadixPrefixCache``) instead of freed.  A
   later request with the same prefix shares those pages by reference
-  (block-granular, copy-on-write via ``KVBlockPool.fork`` +
-  ``_cow_guard``) and prefills only its unmatched suffix at the
-  chain's end position — the common household system/persona prompt
-  is prefilled ONCE per hub, not once per request.  Sharing is
-  behaviour-invariant (hit decode is bit-identical to cold, verified
-  per family) and only engages where the full decode state lives in
-  pages (``model.prefix_sharable``); LRU chains are evicted under pool
+  and prefills only its unmatched suffix at the chain's end position —
+  the common household system/persona prompt is prefilled ONCE per
+  hub, not once per request.  Matching is TOKEN-granular: a hit may
+  end mid-page (divergence inside a cached page, or a chain's indexed
+  partial tail); admission CoW-forks that one page
+  (``KVBlockPool.fork`` + device copy, ``_cow_guard`` as the per-wave
+  backstop) and the suffix prefill writes from the matched token
+  onward.  Sharing is also IN-FLIGHT: every committed wave publishes
+  each live slot's pages below its frontier into the tree
+  (``_publish_frontiers``), so concurrent same-prefix tenants share a
+  chain that is still decoding — readers pin strictly below the
+  frontier, writers and spec-decode rollback only touch at/above it.
+  With ``ServeConfig.prefix_persist_path``, ``engine.close()``
+  PERSISTS the hot refcount-free chains (keys + page bytes) to a
+  host-side store and a restarted engine rehydrates them for
+  warm-TTFT hits; corrupt/mismatched stores are rejected cleanly.
+  Sharing is behaviour-invariant (hit decode — token-granular,
+  in-flight or restart-warm — is bit-identical to cold, verified per
+  family) and only engages where the full decode state lives in pages
+  (``model.prefix_sharable``); LRU chains are evicted under pool
   pressure, never from under a reader.
 * **Exact padded prefill.** Prompts are right-padded to the smallest
   ``ServeConfig.prefill_buckets`` entry that fits and prefilled batched

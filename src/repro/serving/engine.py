@@ -44,28 +44,56 @@ Admission prefill writes prompt K/V DIRECTLY into pages
 copied), which is what lets a radix-cache hit skip prefix prefill
 entirely: admission looks the prompt up in ``prefix_cache``
 (``serving.prefix_cache.RadixPrefixCache``), increfs the matched chain
-(block-granular, always whole pages) and prefills ONLY the unmatched
-suffix at the chain's end position.  The ownership rules:
+and prefills ONLY the unmatched suffix at the chain's end position.
+Matching is TOKEN-granular: a hit may end in the middle of a page —
+because the query diverges inside a cached page, or because the cached
+chain itself ends mid-page (finished chains retire WITH their partial
+tail page indexed).  Admission then CoW-forks that one page
+(``KVBlockPool.fork`` + device page copy) so the row owns it
+privately, and the suffix prefill reads the forked prefix bytes below
+``ctx_len`` while scattering its own K/V from ``ctx_len`` onward
+through the row's full block table.  The ownership rules:
 
 * a slot's block table may reference pages with refcount > 1 (shared
-  prefix, detached twins); such pages are READ-ONLY by construction —
-  suffix writes start at the next block boundary.  The per-step
-  ``_cow_guard`` is the backstop: any slot whose next write position
-  lands in a page with >1 owner trades it for a private copy
-  (``KVBlockPool.fork`` + device page copy) before the wave runs;
+  prefix, detached twins, in-flight published frontiers); such pages
+  are READ-ONLY by construction — every page a suffix/decode/verify
+  wave could write is either freshly allocated or was forked private
+  at admission.  The per-step ``_cow_guard`` is the backstop: any slot
+  whose write span lands in a page with >1 owner trades it for a
+  private copy before the wave runs;
+* IN-FLIGHT sharing: after every committed wave each live slot
+  publishes its pages below the frontier ``floor(pos / block_size) *
+  block_size`` into the radix tree (``_publish_frontiers``; the cache
+  takes its own reference, duplicate re-publications dedup to
+  nothing).  A later request can therefore hit a chain that is still
+  decoding: readers pin pages strictly below the frontier, the writer
+  only writes at/above ``pos``, and spec-decode rollback
+  (``_truncate_slot``) frees only pages above ``pos`` — published
+  pages are never written, truncated or evicted from under a reader;
 * finished chains are indexed under a key of the full token sequence
   (plus a digest namespace for non-token inputs: VLM image embeds,
   enc-dec audio — their K/V depends on more than token ids); the cache
   holds one reference per indexed page;
 * eviction (LRU leaf chains whose pages have refcount 1) runs lazily
-  under pool pressure (``_reserve``) — a chain pinned by any reader is
-  never evicted, so sharing cannot yank KV from a running request;
-* sharing is behaviour-invariant: tokens decoded after a prefix hit
+  under pool pressure (``_reserve``) — a chain pinned by any reader or
+  published by a live slot is never evicted;
+* PERSISTENCE: with ``ServeConfig.prefix_persist_path`` set,
+  ``close()`` serializes the hot refcount-free chains (token keys +
+  page bytes per pool leaf; chains evicted under pressure are spilled
+  to the host first) via ``prefix_cache.save_store``, and a new engine
+  constructed with the same path rehydrates them — a restarted hub
+  serves warm-TTFT hits from step one.  The store header pins page
+  geometry, a config digest and a params fingerprint; a corrupt or
+  mismatched store is rejected cleanly (``stats()['persist_rejected']``)
+  and the engine starts cold;
+* sharing is behaviour-invariant: tokens decoded after a prefix hit —
+  block-aligned, token-granular, in-flight or rehydrated-from-disk —
   are bit-identical to a cold run (asserted per family in
-  ``tests/test_prefix_cache.py``).  Configs whose decode state is not
-  fully reconstructible from pages (local-ring gemma patterns,
-  ssm/hybrid recurrences) never share — ``model.prefix_sharable``
-  gates the cache off and admission stays the cold path.
+  ``tests/test_prefix_cache.py`` / ``tests/test_prefix_persist.py``).
+  Configs whose decode state is not fully reconstructible from pages
+  (local-ring gemma patterns, ssm/hybrid recurrences) never share —
+  ``model.prefix_sharable`` gates the cache off and admission stays
+  the cold path.
 
 Local ring-window layers stay dense at ``W`` and SSM state is O(1), so
 families with no global KV layers (ssm, hybrid) transparently run the
@@ -138,6 +166,7 @@ from __future__ import annotations
 
 import hashlib
 import itertools
+import os
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Any, Callable, Optional
@@ -150,7 +179,8 @@ from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.serving.kv_pool import KVBlockPool, PoolExhausted, \
     blocks_for_tokens
-from repro.serving.prefix_cache import RadixPrefixCache
+from repro.serving.prefix_cache import (PrefixStoreError, RadixPrefixCache,
+                                        dump_chains, load_store, save_store)
 
 # NOTE: repro.core.scheduler is imported lazily in _rank —
 # core/__init__ pulls in hub.py, which imports this module back.
@@ -257,8 +287,19 @@ class ServeConfig:
     kv_pool_blocks: Optional[int] = None  # None -> max_slots*max_len/bs
     # radix prefix cache: finished chains stay indexed for copy-free
     # sharing (only engages on prefix-sharable configs, see
-    # model.prefix_sharable; pages are reclaimed LRU under pressure)
+    # model.prefix_sharable; pages are reclaimed LRU under pressure).
+    # Matching is TOKEN-granular (a hit may end mid-page; the partial
+    # page is CoW-forked at admission) and live slots publish their
+    # committed-prefix frontier every wave, so concurrent same-prefix
+    # tenants share in flight, not just after the first one finishes.
     prefix_cache: bool = True
+    # host-side prefix store: on close() the hot refcount-free chains
+    # (token keys + page bytes) are serialized here, and a new engine
+    # constructed with the same path rehydrates them — a restarted hub
+    # serves warm-TTFT hits immediately.  A corrupt or mismatched-
+    # config store is rejected cleanly (fresh cold start, no crash);
+    # see serving/prefix_cache.py save_store/load_store.
+    prefix_persist_path: Optional[str] = None
     # read paged decode KV through the Pallas paged_attention kernel
     # (scalar-prefetched block tables) instead of the jnp gather —
     # the TPU serving path; default off (gather is the portable twin)
@@ -338,6 +379,22 @@ class EdgeServingEngine:
                              and M.prefix_sharable(cfg))
         self.prefix_cache = (RadixPrefixCache(self.pool, bs)
                              if self.sharable else None)
+        # persistence: chains evicted under pressure are spilled to the
+        # host (page bytes captured BEFORE the pool reclaims them) and
+        # merged into the close()-time store; a store left by a previous
+        # engine with the same path/config rehydrates below
+        self._spilled: list = []
+        self.persist_loaded_chains = 0
+        self.persist_loaded_blocks = 0
+        self.persist_rejected = ""
+        if self.sharable and scfg.prefix_persist_path:
+            self.prefix_cache.on_evict = self._spill_chain
+            self._load_prefix_store(scfg.prefix_persist_path)
+        # in-flight sharing: tokens (page-aligned) each slot has already
+        # published to the radix tree; readers admitted below this
+        # frontier share a chain that is STILL decoding
+        self.slot_published = [0] * B
+        self.published_frontiers = 0
         # multi-token extend path (speculative verify + chunked catch-up
         # consuming spec_gamma tokens per wave): every family that
         # implements extend/extend_paged, on BOTH engines (the dense
@@ -492,8 +549,10 @@ class EdgeServingEngine:
         engine cache (pages + slot rows) in the same call, and the
         cache buffers are donated so admission updates them in place.
 
-        ``n_ctx``: static width (in blocks) of the shared-prefix
-        context tables; 0 compiles the cold no-context variant.
+        ``n_ctx``: static width (in blocks) of the shared-prefix FULL
+        tables (context + write span in one view — token-granular hits
+        write mid-page through the same table they read); 0 compiles
+        the cold no-context variant.
         """
         key = (bucket, m, extras_sig, n_ctx, self.paged)
         if key not in self._prefills:
@@ -501,11 +560,11 @@ class EdgeServingEngine:
 
             if n_ctx:
                 def fn(params, batch, true_len, cache, slots,
-                       write_tables, ctx_tables, ctx_len):
+                       full_tables, ctx_len):
                     return M.prefill_paged(
                         cfg, params, batch, scfg.max_len, cache,
-                        slots=slots, write_tables=write_tables,
-                        ctx_tables=ctx_tables, ctx_len=ctx_len,
+                        slots=slots, write_tables=full_tables,
+                        ctx_tables=full_tables, ctx_len=ctx_len,
                         true_len=true_len)
             elif paged:
                 def fn(params, batch, true_len, cache, slots,
@@ -536,14 +595,24 @@ class EdgeServingEngine:
     def _key_ns(self, req: Request) -> int:
         """Namespace digest for non-token inputs: requests whose K/V
         depends on more than the token ids (VLM images, enc-dec audio)
-        only ever share with requests carrying identical extras."""
+        only ever share with requests carrying identical extras.
+        Memoized on the request — extras are immutable for its
+        lifetime, and ``_publish_frontiers`` asks once per page
+        crossing (hashing a VLM image tensor per wave would be pure
+        rework on the decode loop)."""
+        ns = getattr(req, "_ns_digest", None)
+        if ns is not None:
+            return ns
         if not req.extras:
-            return 0
-        h = hashlib.sha1()
-        for k in sorted(req.extras):
-            h.update(k.encode())
-            h.update(np.ascontiguousarray(req.extras[k]).tobytes())
-        return int.from_bytes(h.digest()[:8], "little") & (2 ** 63 - 1)
+            ns = 0
+        else:
+            h = hashlib.sha1()
+            for k in sorted(req.extras):
+                h.update(k.encode())
+                h.update(np.ascontiguousarray(req.extras[k]).tobytes())
+            ns = int.from_bytes(h.digest()[:8], "little") & (2 ** 63 - 1)
+        req._ns_digest = ns
+        return ns
 
     def _key_tokens(self, req: Request) -> np.ndarray:
         """Logical token sequence whose positions map 1:1 onto the
@@ -560,11 +629,13 @@ class EdgeServingEngine:
 
     def _lookup(self, req: Request) -> None:
         """Radix lookup for a fresh request: acquire (incref) the
-        longest usable shared chain and stash it on the request for the
-        admission pass.  Capped at one token short of the prompt (the
-        suffix prefill must produce admission logits) and — for VLM —
-        at least the image prefix (a shorter match cannot seed a
-        text-only suffix prefill)."""
+        longest usable shared chain — TOKEN-granular, possibly ending
+        mid-page and possibly inside a chain another slot is still
+        decoding — and stash it on the request for the admission pass.
+        Capped at one token short of the prompt (the suffix prefill
+        must produce admission logits) and — for VLM — at least the
+        image prefix (a shorter match cannot seed a text-only suffix
+        prefill)."""
         self._release_ctx(req)          # drop any stale acquisition
         if not self.sharable or req.saved_state is not None:
             return
@@ -574,7 +645,8 @@ class EdgeServingEngine:
             key, namespace=self._key_ns(req), max_tokens=len(key) - 1)
         if n and n < self._prefix:
             self.pool.free(blocks)
-            self.prefix_cache.unrecord_hit(len(blocks))
+            self.prefix_cache.unrecord_hit(
+                len(blocks), n, (n // self.block_size) * self.block_size)
             blocks, n = [], 0
         req._ctx_blocks = blocks
         req._ctx_len = n
@@ -585,8 +657,10 @@ class EdgeServingEngine:
         the hit accounting back so retries don't inflate the stats."""
         blocks = getattr(req, "_ctx_blocks", None)
         if blocks:
+            n = req._ctx_len
             self.pool.free(blocks)
-            self.prefix_cache.unrecord_hit(len(blocks))
+            self.prefix_cache.unrecord_hit(
+                len(blocks), n, (n // self.block_size) * self.block_size)
         req._ctx_blocks, req._ctx_len = [], 0
 
     # -- paged-pool bookkeeping ----------------------------------------
@@ -604,6 +678,10 @@ class EdgeServingEngine:
                 int(req.saved_state["pos"]) + 1, bs) - held)
         L = getattr(req, "_ctx_len", 0)
         if L:
+            # token-granular hits: floor(L/bs) pages are shared whole;
+            # a partial final page (L % bs != 0) is counted as NEEDED
+            # because admission CoW-forks it (the fork's alloc draws
+            # one page from the free list)
             suffix = len(req.prompt) - (L - self._prefix)
             n1 = min(suffix, self.scfg.prefill_buckets[-1])
             return blocks_for_tokens(L + n1 + 1, bs) - L // bs
@@ -658,6 +736,9 @@ class EdgeServingEngine:
         self.tokens[slot, 0] = st["last_tok"]
         self.pending[slot] = st["pending"]
         self._place(req, slot)
+        # resume in-flight publication where the preempted slot left it
+        # (re-publishing would only dedup, but skip the wasted walks)
+        self.slot_published[slot] = int(st.get("published", 0))
 
     @staticmethod
     def _pow2(n: int) -> int:
@@ -718,7 +799,11 @@ class EdgeServingEngine:
             bucket = self._bucket(n1)
             sig = tuple(sorted(
                 (k, np.asarray(v).shape) for k, v in req.extras.items()))
-            n_ctx = self._pow2(L // self.block_size) if L else 0
+            # hit rows read AND write through one full table covering
+            # [0, L + n1) — pow2-bucketed so mixed-depth hits share a
+            # compile
+            n_ctx = (self._pow2(blocks_for_tokens(L + n1, self.block_size))
+                     if L else 0)
             fresh.setdefault((bucket, sig, n_ctx), []).append((req, slot))
 
         for (bucket, sig, n_ctx), group in fresh.items():
@@ -729,7 +814,10 @@ class EdgeServingEngine:
         """One fused admission call: batched (suffix-)prefill that
         writes prompt K/V straight into pages + slot rows.  ``n_ctx``
         > 0 means every row is a prefix-cache hit admitted at its
-        shared chain's end position."""
+        shared chain's end position — which, with token-granular
+        matching, may be MID-page: the partial page is CoW-forked here
+        (private copy) so the suffix write never lands in a page the
+        cache or another reader still holds."""
         bs = self.block_size
         if self.paged:
             # allocation pass first: a row whose pages cannot be
@@ -738,9 +826,31 @@ class EdgeServingEngine:
             admitted = []
             for req, slot in group:
                 need = self._blocks_needed(req)
+                L = getattr(req, "_ctx_len", 0)
                 try:
                     self._reserve(need)
-                    fresh_alloc = self.pool.alloc(need)
+                    fresh_n = need
+                    if L % bs:
+                        # fork the partially-matched final page: trade
+                        # the reader's ref on the shared page for a
+                        # private copy the suffix may write into.
+                        # `need` already counts this page, so the fresh
+                        # alloc shrinks by one either way: normally the
+                        # fork draws that page itself (cache + reader
+                        # refs), and if the cache released its ref
+                        # mid-scan (a retire upgraded the tail) fork
+                        # hands back the now-private page with no
+                        # allocation at all.
+                        fresh_n = need - 1
+                        old = req._ctx_blocks[-1]
+                        new = self.pool.fork(old)
+                        if new != old:
+                            self.cache = self._copy_page(
+                                self.cache, jnp.asarray(old),
+                                jnp.asarray(new))
+                            req._ctx_blocks[-1] = new
+                            self.cow_forks += 1
+                    fresh_alloc = self.pool.alloc(fresh_n)
                 except PoolExhausted:
                     self._release_ctx(req)
                     self.queue.append(req)
@@ -755,12 +865,13 @@ class EdgeServingEngine:
         prompts = np.zeros((m, bucket), np.int32)
         true_len = np.zeros((m,), np.int32)
         ctx_len = np.zeros((m,), np.int32)
-        ctx_tables = np.full((m, n_ctx), -1, np.int32)
-        # write span: suffixes start at their chain's block boundary;
-        # cold rows start at 0 and include the VLM image prefix
-        span = bucket if n_ctx else self._prefix + bucket
-        n_wblk = blocks_for_tokens(span, bs)
-        write_tables = np.full((m, n_wblk), -1, np.int32)
+        # hit rows: ONE full table per row (context + write span, from
+        # logical block 0) — reads mask below ctx_len, writes scatter
+        # from ctx_len; cold rows: a write-span table from block 0
+        # including the VLM image prefix
+        span = self._prefix + bucket
+        n_wblk = n_ctx if n_ctx else blocks_for_tokens(span, bs)
+        tables = np.full((m, n_wblk), -1, np.int32)
         suffixes = []
         for i, (req, slot) in enumerate(group):
             L = getattr(req, "_ctx_len", 0)
@@ -773,10 +884,8 @@ class EdgeServingEngine:
             true_len[i] = n1
             ctx_len[i] = L
             if self.paged:
-                ctx = getattr(req, "_ctx_blocks", None) or []
-                ctx_tables[i, :len(ctx)] = ctx
-                fresh = self.slot_blocks[slot][L // bs:]
-                write_tables[i, :len(fresh)] = fresh[:n_wblk]
+                blk = self.slot_blocks[slot][:n_wblk]
+                tables[i, :len(blk)] = blk
         batch = {"tokens": jnp.asarray(prompts)}
         for k, _ in extras_sig:
             batch[k] = jnp.asarray(
@@ -785,9 +894,9 @@ class EdgeServingEngine:
         args = [self.params, batch, jnp.asarray(true_len), self.cache,
                 slots_arr]
         if self.paged:
-            args.append(jnp.asarray(write_tables))
+            args.append(jnp.asarray(tables))
         if n_ctx:
-            args += [jnp.asarray(ctx_tables), jnp.asarray(ctx_len)]
+            args.append(jnp.asarray(ctx_len))
         logits, self.cache = self._prefill_fn(bucket, m, extras_sig,
                                               n_ctx)(*args)
         if self.spec is not None:
@@ -829,6 +938,10 @@ class EdgeServingEngine:
                 self.pending[slot] = None
                 self.tokens[slot, 0] = tok
             self._place(req, slot)
+            # the matched prefix is already indexed (that is what we
+            # hit) — publication resumes from its page boundary
+            self.slot_published[slot] = (L // self.block_size
+                                         * self.block_size)
 
     # ------------------------------------------------------------------
     # decode
@@ -1020,6 +1133,7 @@ class EdgeServingEngine:
             if (len(req.generated) >= req.max_new_tokens or hit_eos
                     or out_of_room):
                 self._finish(slot, req)
+        self._publish_frontiers()
         self.steps += 1
         return n_active
 
@@ -1185,25 +1299,62 @@ class EdgeServingEngine:
                 self._truncate_slot(s)       # rejected-tail pages back
         if any_spec:
             self.spec_steps += 1
+        self._publish_frontiers()
         self.steps += 1
         return n_active
 
+    def _publish_frontiers(self) -> None:
+        """In-flight sharing: after every committed wave, publish each
+        live slot's full pages below its frontier (``pos`` rounded down
+        to a page boundary) into the radix tree.  The cache takes its
+        own reference (``share`` + ``insert``; duplicates of the slot's
+        earlier publications come straight back and are released), so a
+        later request can hit a chain that is STILL decoding: readers
+        pin pages strictly below the frontier, the writer only ever
+        writes at/above ``pos``, and spec-decode rollback
+        (``_truncate_slot``) only frees pages above ``pos`` — published
+        pages are never written or yanked.  Published pages show
+        refcount 2 (slot + cache) while the slot runs, so eviction and
+        the admission budget both already treat them as pinned."""
+        if self.prefix_cache is None:
+            return
+        bs = self.block_size
+        for s in range(self.scfg.max_slots):
+            if not self.active[s] or self.slot_req[s] is None:
+                continue
+            frontier = (int(self.pos[s]) // bs) * bs
+            if frontier <= self.slot_published[s]:
+                continue
+            req = self.slot_req[s]
+            key = self._key_tokens(req)
+            n_blk = frontier // bs
+            if len(key) < frontier or len(self.slot_blocks[s]) < n_blk:
+                continue                      # reclaim-rebuilt slot mid-fold
+            blocks = self.slot_blocks[s][:n_blk]
+            self.pool.share(blocks)
+            dups = self.prefix_cache.insert(key[:frontier], blocks,
+                                            namespace=self._key_ns(req))
+            self.pool.free(dups)
+            self.slot_published[s] = frontier
+            self.published_frontiers += 1
+
     def _retire_chain(self, req: Request, blocks: list[int],
                       n_valid: int) -> None:
-        """Return a finished request's pages: index the full pages (the
-        chain's first ``n_valid`` token positions hold valid K/V) in the
-        radix cache — adopting the engine's references — and free the
-        partial tail page plus any duplicates of an already-indexed
-        prefix.  Non-sharable configs free everything, as before."""
+        """Return a finished request's pages: index the chain (the
+        first ``n_valid`` token positions hold valid K/V — INCLUDING a
+        partial tail page, which token-granular matching can now serve)
+        in the radix cache — adopting the engine's references — and
+        free any duplicates of an already-indexed prefix plus pages
+        past the valid span.  Non-sharable configs free everything, as
+        before."""
         if not self.sharable or not blocks:
             self.pool.free(blocks)
             return
         key = self._key_tokens(req)[:n_valid]
-        full = n_valid // self.block_size
+        nb = blocks_for_tokens(n_valid, self.block_size)
         leftovers = self.prefix_cache.insert(
-            key[:full * self.block_size], blocks[:full],
-            namespace=self._key_ns(req))
-        self.pool.free(list(leftovers) + list(blocks[full:]))
+            key, blocks[:nb], namespace=self._key_ns(req))
+        self.pool.free(list(leftovers) + list(blocks[nb:]))
 
     def _finish(self, slot: int, req: Request) -> None:
         req.done = True
@@ -1211,6 +1362,7 @@ class EdgeServingEngine:
         self.active[slot] = False
         self.slot_req[slot] = None
         self.pending[slot] = None
+        self.slot_published[slot] = 0
         if self.paged:
             # KV is valid for [0, pos): everything written by prefill,
             # catch-up and decode waves (the final sampled token was
@@ -1218,6 +1370,150 @@ class EdgeServingEngine:
             self._retire_chain(req, self.slot_blocks[slot],
                                int(self.pos[slot]))
             self._set_table(slot, [])
+
+    # ------------------------------------------------------------------
+    # prefix-store persistence (warm TTFT across engine restarts)
+    # ------------------------------------------------------------------
+    def _persist_meta(self) -> dict:
+        """Prefix-store header: page geometry, a config digest and a
+        params fingerprint.  ``load_store`` refuses a store whose
+        header differs — persisted KV bytes are only valid for the
+        exact (config, params, page layout) that produced them."""
+        from repro.serving.prefix_cache import PERSIST_VERSION
+        cfg_digest = hashlib.sha1(repr(self.cfg).encode()).hexdigest()
+        fp = hashlib.sha1()
+        for lv in jax.tree.leaves(self.params):
+            # shape/dtype of every leaf plus a value sample FROM every
+            # leaf: a checkpoint that differs anywhere (partial
+            # fine-tune, different seed) must trip the fingerprint —
+            # persisted KV is a function of the weights
+            fp.update(str((tuple(lv.shape), str(lv.dtype))).encode())
+            fp.update(np.asarray(jnp.ravel(lv)[:64]).tobytes())
+        sig = []
+        for lv, ax in zip(jax.tree.leaves(self.cache),
+                          jax.tree.leaves(self.axes)):
+            if ax < 0:              # pool leaf: (stack, nB, bs, kv...)
+                shape = lv.shape[:1] + lv.shape[2:]
+                sig.append([list(shape), str(lv.dtype)])
+        return {"version": PERSIST_VERSION, "config": cfg_digest,
+                "params": fp.hexdigest(), "block_size": self.block_size,
+                "leaves": sig}
+
+    def _chain_pages_host(self, blocks) -> list[np.ndarray]:
+        """Gather one chain's page bytes to the host: one
+        ``(stack, n_chain_blocks, block_size, kv...)`` array per pool
+        leaf, in cache-leaf order."""
+        ids = np.asarray(blocks, np.int32)
+        return [np.asarray(lv[:, ids])
+                for lv, ax in zip(jax.tree.leaves(self.cache),
+                                  jax.tree.leaves(self.axes)) if ax < 0]
+
+    def _spill_chain(self, ns: int, key, n_leaf: int, blocks) -> None:
+        """``RadixPrefixCache.on_evict`` hook (persist mode only):
+        capture an evicted chain's pages BEFORE the pool reclaims them
+        so pressure-evicted chains still make it into the close()-time
+        store.  Spill is capped at one pool's worth of pages — beyond
+        that a restart could not rehydrate them anyway."""
+        held = sum(blocks_for_tokens(len(k), self.block_size)
+                   for _, k, _ in self._spilled)
+        if held + len(blocks) > self.pool.num_blocks:
+            return
+        self._spilled.append((ns, np.asarray(key, np.int64),
+                              self._chain_pages_host(blocks)))
+
+    def close(self) -> dict:
+        """Flush the radix cache's hot refcount-free chains (plus any
+        pressure-spilled ones) to ``ServeConfig.prefix_persist_path``
+        so the NEXT engine with this path starts with a warm cache.
+        Safe to call on any engine (no-op without a path / on
+        non-sharable configs); returns a save summary."""
+        path = self.scfg.prefix_persist_path
+        if not path or not self.sharable:
+            return {"persist_saved_chains": 0, "persist_saved_blocks": 0}
+        # resident chains carry their block ids; spilled chains already
+        # carry host page bytes.  Dedup on (namespace, key) FIRST —
+        # gathering device pages for a chain the dedup would discard is
+        # pure wasted transfer at shutdown.
+        cand = [(ns, key, ("blocks", blocks))
+                for ns, key, blocks in
+                dump_chains(self.prefix_cache,
+                            max_blocks=self.pool.num_blocks)]
+        cand += [(ns, key, ("pages", pages))
+                 for ns, key, pages in self._spilled]
+        # BIDIRECTIONAL prefix dedup (exact duplicates keep the first,
+        # hot-first, occurrence): a chain that is a prefix of any other
+        # stored chain is fully covered by it — same tokens produce the
+        # same KV bytes — and a store holding both a partial-tail chain
+        # AND its extension would drive insert's replacement path at
+        # rehydrate (page churn for nothing).
+        chains = []
+        for i, (ns, key, payload) in enumerate(cand):
+            covered = False
+            for j, (n2, k2, _) in enumerate(cand):
+                if j == i or n2 != ns or len(key) > len(k2):
+                    continue
+                if len(key) == len(k2) and j > i:
+                    continue                   # equal twins: first wins
+                if np.array_equal(key, k2[:len(key)]):
+                    covered = True
+                    break
+            if not covered:
+                kind, data = payload
+                pages = (self._chain_pages_host(data) if kind == "blocks"
+                         else data)
+                chains.append((ns, key, pages))
+        info = save_store(path, self._persist_meta(), chains)
+        return {"persist_saved_chains": info["chains"],
+                "persist_saved_blocks": info["blocks"]}
+
+    def _load_prefix_store(self, path: str) -> None:
+        """Rehydrate a persisted prefix store at construction: allocate
+        pool pages, scatter the stored page bytes into the device cache
+        and index the chains in the radix tree.  A mismatched or
+        corrupt store is REJECTED (reason in ``persist_rejected`` /
+        ``stats()``) and the engine simply starts cold."""
+        if not os.path.exists(path):
+            return
+        try:
+            chains = load_store(path, self._persist_meta())
+        except PrefixStoreError as e:
+            self.persist_rejected = str(e)
+            return
+        leaves, treedef = jax.tree_util.tree_flatten(self.cache)
+        axes = jax.tree.leaves(self.axes)
+        pool_idx = [i for i, a in enumerate(axes) if a < 0]
+        # physical page id -> per-pool-leaf page bytes.  LAST write wins:
+        # a page freed mid-load (insert's dup return, or its internal
+        # partial-tail replacement) can be re-alloc'd by a later chain,
+        # and that later chain owns the page — dict overwrite keeps
+        # exactly its payload, never a stale one, and the final
+        # refcount filter drops pages that ended up back in the pool.
+        pending: dict[int, list[np.ndarray]] = {}
+        for ns, key, pages in chains:        # hot-first store order
+            nb = blocks_for_tokens(len(key), self.block_size)
+            if not self.pool.can_alloc(nb):
+                continue
+            ids = self.pool.alloc(nb)
+            dups = self.prefix_cache.insert(key, ids, namespace=ns)
+            nd = len(dups)       # dups are always a PREFIX of ids
+            for k in range(nd, nb):
+                pending[ids[k]] = [pages[j][:, k]
+                                   for j in range(len(pool_idx))]
+            self.pool.free(dups)
+            self.persist_loaded_chains += 1
+            self.persist_loaded_blocks += nb - nd
+        pending = {bid: v for bid, v in pending.items()
+                   if self.pool.refcount(bid) > 0}
+        if pending:
+            # ONE scatter per pool leaf — per-chain .at[].set would copy
+            # the full (possibly multi-GB) pool tensor once per chain
+            order = list(pending)
+            arr = np.asarray(order, np.int32)
+            for j, li in enumerate(pool_idx):
+                chunk = np.stack([pending[b][j] for b in order], axis=1)
+                leaves[li] = leaves[li].at[:, arr].set(
+                    jnp.asarray(chunk, leaves[li].dtype))
+        self.cache = jax.tree_util.tree_unflatten(treedef, leaves)
 
     # ------------------------------------------------------------------
     def stats(self) -> dict:
@@ -1234,7 +1530,8 @@ class EdgeServingEngine:
         if self.paged:
             self.pool.assert_consistent()
             out.update(pool_blocks=self.pool.num_blocks,
-                       pool_free=self.pool.num_free)
+                       pool_free=self.pool.num_free,
+                       pool_shared=self.pool.num_shared)
         if self.scfg.spec_decode:
             out.update(
                 spec_active=self.spec is not None,
@@ -1253,6 +1550,14 @@ class EdgeServingEngine:
         if self.prefix_cache is not None:
             out.update({f"prefix_{k}": v
                         for k, v in self.prefix_cache.stats().items()})
+            out["published_frontiers"] = self.published_frontiers
+            if self.scfg.prefix_persist_path:
+                out.update(
+                    persist_loaded_chains=self.persist_loaded_chains,
+                    persist_loaded_blocks=self.persist_loaded_blocks,
+                    persist_spilled_chains=len(self._spilled),
+                    persist_rejected=self.persist_rejected,
+                )
         return out
 
     # ------------------------------------------------------------------
@@ -1275,10 +1580,12 @@ class EdgeServingEngine:
             req.saved_state["draft"] = self.spec.extract(slot)
         if self.paged:
             req.saved_state["blocks"] = self.slot_blocks[slot]
+            req.saved_state["published"] = self.slot_published[slot]
             self._set_table(slot, [])
         self.active[slot] = False
         self.slot_req[slot] = None
         self.pending[slot] = None
+        self.slot_published[slot] = 0
         return req
 
     # ------------------------------------------------------------------

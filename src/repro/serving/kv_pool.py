@@ -68,6 +68,14 @@ class KVBlockPool:
     def num_used(self) -> int:
         return self.num_blocks - len(self._free)
 
+    @property
+    def num_shared(self) -> int:
+        """Pages with more than one owner right now — prefix-cache
+        chains pinned by readers, in-flight published frontiers,
+        detached preemption twins.  Observability for how much KV the
+        sharing machinery is actually deduplicating."""
+        return int((self._refcount > 1).sum())
+
     def refcount(self, block_id: int) -> int:
         return int(self._refcount[block_id])
 

@@ -7,12 +7,16 @@ paged KV cache those prefix pages can be SHARED by reference instead of
 re-prefilled and re-stored per request.
 
 This module is the host-side index that makes the sharing findable: a
-radix tree mapping token-id prefixes to page chains at BLOCK
-granularity.  Only whole ``block_size``-token pages are ever indexed —
-a shared page is by construction never written again (suffix writes
-start at the next block boundary), which is what keeps sharing
-zero-copy; the engine's copy-on-write guard (``KVBlockPool.fork``) is
-the backstop for any path that would write a page with >1 owner.
+radix tree mapping token-id prefixes to page chains at TOKEN
+granularity.  Full ``block_size``-token pages are shared zero-copy
+(suffix writes land past them); a match that ends mid-page — a partial
+final block, either because the query diverges inside a cached page or
+because the cached chain itself ends mid-page — is still returned, and
+the ENGINE copy-on-write-forks that one page (``KVBlockPool.fork`` +
+device page copy) so its suffix writes never touch the shared copy.
+Tree structure stays block-aligned: edges split only on page
+boundaries, and an edge whose key length is not a page multiple is
+always a leaf (a finished chain's partial tail page, adopted verbatim).
 
 Ownership protocol (mirrors vLLM/SGLang)
 ----------------------------------------
@@ -22,32 +26,63 @@ Ownership protocol (mirrors vLLM/SGLang)
   pages like any allocation (frees on finish, detaches on preempt).
 * ``insert(key, blocks)`` adopts the caller's references for pages that
   extend the tree and returns the caller's now-duplicate ids (prefix
-  already indexed under different physical pages) for the caller to
-  free.  Inserting never allocates.
-* ``evict(n)`` releases LRU subtrees whose pages have pool refcount 1
-  (the cache is the sole owner — nothing active reads them) until ``n``
-  pages went back to the free list.  Chains pinned by readers are
+  already indexed, possibly under different physical pages) for the
+  caller to free.  Inserting never allocates.  A chain that diverges
+  from a resident chain in the MIDDLE of a page cannot be keyed apart
+  in a radix over pages — the resident chain wins and the incoming
+  tail is returned unadopted.  A chain that extends a resident partial
+  tail replaces that tail page (the cache releases its own reference on
+  the superseded page) and adopts the longer chain.
+* ``evict(n)`` releases LRU leaf chains whose pages have pool refcount
+  1 (the cache is the sole owner — nothing active reads them) until
+  ``n`` pages went back to the free list.  Chains pinned by readers are
   skipped, so eviction can never yank KV out from under a running
-  request.
+  request.  ``on_evict`` (if set) observes each victim chain BEFORE its
+  pages are freed — the engine's persistence spill hook.
+* In-flight sharing is the same protocol driven by the engine: a live
+  slot increfs its full pages below the committed frontier and
+  ``insert``s them; duplicates (its own earlier publication) come back
+  and are freed, so the cache still ends up holding exactly one
+  reference per page while the writer keeps decoding ABOVE the
+  published frontier.
 
 Keys are ``np.int64`` sequences: plain token ids for text-only
 families, with a per-request ``namespace`` (a digest of the non-token
 inputs — VLM image embeds, enc-dec audio) separating subtrees whose KV
 depends on more than the token ids.
+
+Persistence
+-----------
+``dump_chains`` enumerates the refcount-free (cache-only) root-to-leaf
+chains hot-first; ``save_store``/``load_store`` serialize them — token
+keys plus the per-layer page bytes the engine gathers/scatters — to a
+host-side ``.npz`` with a metadata header (config digest, params
+fingerprint, page geometry).  ``load_store`` REFUSES a corrupt or
+mismatched store with ``PrefixStoreError`` so a restarted hub falls
+back to a cold start instead of serving another model's KV.
 """
 from __future__ import annotations
 
 import itertools
-from typing import Optional
+import json
+from typing import Callable, Optional
 
 import numpy as np
 
-from repro.serving.kv_pool import KVBlockPool
+from repro.serving.kv_pool import KVBlockPool, blocks_for_tokens
+
+PERSIST_VERSION = 1
+
+
+class PrefixStoreError(ValueError):
+    """A persisted prefix store is corrupt or belongs to a different
+    engine configuration — callers must fall back to a cold start."""
 
 
 class _Node:
-    """One radix edge: ``key`` (len divisible by block_size) and the
-    page chain holding its KV; children keyed by their first token."""
+    """One radix edge: ``key`` (any token length; a non-page-multiple
+    length makes this a childless partial-tail leaf) and the page chain
+    holding its KV; children keyed by their first token."""
 
     __slots__ = ("key", "blocks", "children", "parent", "stamp")
 
@@ -60,20 +95,45 @@ class _Node:
         self.stamp = 0
 
 
-class RadixPrefixCache:
-    """Block-granularity radix index of finished chains in ``pool``."""
+def _common_tokens(edge_key: np.ndarray, key: np.ndarray, pos: int) -> int:
+    """Token-granular common prefix of ``edge_key`` and ``key[pos:]``."""
+    lim = min(len(edge_key), len(key) - pos)
+    if lim <= 0:
+        return 0
+    neq = np.nonzero(edge_key[:lim] != key[pos:pos + lim])[0]
+    return int(neq[0]) if neq.size else lim
 
-    def __init__(self, pool: KVBlockPool, block_size: Optional[int] = None):
+
+class RadixPrefixCache:
+    """Token-granularity radix index of (possibly in-flight) chains in
+    ``pool``.
+
+    ``on_evict(namespace, full_key, n_leaf_tokens, full_blocks)`` — if
+    set — observes every evicted leaf chain before its pages return to
+    the pool: ``full_key``/``full_blocks`` cover the whole root-to-leaf
+    path (only the leaf's own pages are actually freed; ancestors stay
+    indexed), ``n_leaf_tokens`` is the evicted edge's token count.
+    """
+
+    def __init__(self, pool: KVBlockPool, block_size: Optional[int] = None,
+                 on_evict: Optional[Callable] = None):
         self.pool = pool
         self.block_size = int(block_size or pool.block_size)
+        self.on_evict = on_evict
         # roots per namespace: extras-digest -> top-level node
         self._roots: dict[int, _Node] = {}
         self._clock = itertools.count(1)
         self.hits = 0
         self.misses = 0
         self.hit_blocks = 0
+        self.hit_tokens = 0
+        # counterfactual: what the PR-3 block-granular matcher would
+        # have returned for the same queries — the benchmark's proof
+        # that token-granular matching strictly increases reuse
+        self.hit_tokens_block = 0
         self.evicted_blocks = 0
         self.inserted_blocks = 0
+        self.replaced_blocks = 0      # partial tails superseded by longer chains
 
     # ------------------------------------------------------------------
     def _root(self, namespace: int) -> _Node:
@@ -81,23 +141,8 @@ class RadixPrefixCache:
             self._roots[namespace] = _Node(np.zeros((0,), np.int64), [], None)
         return self._roots[namespace]
 
-    def _common_blocks(self, edge_key: np.ndarray, key: np.ndarray,
-                       pos: int) -> int:
-        """Tokens of ``edge_key`` matching ``key[pos:]`` in WHOLE
-        ``block_size`` units — the single definition of "shared block"
-        that both match() and insert() must agree on."""
-        bs = self.block_size
-        lim = min(len(edge_key), len(key) - pos)
-        n_eq = 0
-        for j in range(0, lim - bs + 1, bs):
-            if np.array_equal(edge_key[j:j + bs], key[pos + j:pos + j + bs]):
-                n_eq += bs
-            else:
-                break
-        return n_eq
-
     def _match_walk(self, namespace: int, key: np.ndarray):
-        """Longest block-aligned match: returns (nodes touched, blocks,
+        """Longest token-granular match: returns (nodes touched, blocks,
         matched token count).  Pure walk — no refcounts, no stamps."""
         bs = self.block_size
         node = self._roots.get(namespace)
@@ -109,15 +154,14 @@ class RadixPrefixCache:
             child = node.children.get(int(key[pos]))
             if child is None:
                 break
-            ek = child.key
-            n_eq = self._common_blocks(ek, key, pos)
-            if n_eq == 0:
+            c = _common_tokens(child.key, key, pos)
+            if c == 0:
                 break
             nodes.append(child)
-            blocks.extend(child.blocks[:n_eq // bs])
-            matched += n_eq
-            pos += n_eq
-            if n_eq < len(ek):
+            blocks.extend(child.blocks[:blocks_for_tokens(c, bs)])
+            matched += c
+            pos += c
+            if c < len(child.key):
                 break                      # stopped mid-edge
             node = child
         return nodes, blocks, matched
@@ -125,10 +169,15 @@ class RadixPrefixCache:
     # ------------------------------------------------------------------
     def match(self, key, namespace: int = 0,
               max_tokens: Optional[int] = None):
-        """Longest shared prefix of ``key`` already in the cache.
+        """Longest shared prefix of ``key`` already in the cache, at
+        TOKEN granularity.
 
-        Returns ``(blocks, n_tokens)`` — ``n_tokens`` is a multiple of
-        ``block_size``, capped at the largest block multiple <=
+        Returns ``(blocks, n_tokens)``: ``blocks`` covers
+        ``ceil(n_tokens / block_size)`` pages; when ``n_tokens`` is not
+        a page multiple the LAST page is only partially matched — the
+        caller must CoW-fork it before writing its suffix (positions
+        ``>= n_tokens`` of that page hold another chain's KV and are
+        only masked, not absent).  ``n_tokens`` is capped at
         ``max_tokens`` (callers cap at ``len(prompt) - 1`` so at least
         one suffix token remains to produce admission logits).  Every
         returned page is incref'd FOR THE CALLER, and the touched nodes
@@ -137,9 +186,10 @@ class RadixPrefixCache:
         key = np.asarray(key, np.int64)
         bs = self.block_size
         nodes, blocks, matched = self._match_walk(namespace, key)
+        raw = matched
         if max_tokens is not None and matched > max_tokens:
-            matched = (max_tokens // bs) * bs
-            blocks = blocks[:matched // bs]
+            matched = max_tokens
+        blocks = blocks[:blocks_for_tokens(matched, bs)]
         if matched == 0:
             self.misses += 1
             return [], 0
@@ -149,22 +199,30 @@ class RadixPrefixCache:
         self.pool.share(blocks)
         self.hits += 1
         self.hit_blocks += len(blocks)
+        self.hit_tokens += matched
+        bg_cap = (raw if max_tokens is None
+                  else (max_tokens // bs) * bs)
+        self.hit_tokens_block += min((raw // bs) * bs, bg_cap)
         return list(blocks), matched
 
-    def unrecord_hit(self, n_blocks: int) -> None:
+    def unrecord_hit(self, n_blocks: int, n_tokens: int = 0,
+                     n_tokens_block: int = 0) -> None:
         """Roll back one recorded hit whose chain the reader released
         WITHOUT using it (e.g. admission skipped the request this
-        round and will re-match later) — keeps ``hits``/``hit_blocks``
+        round and will re-match later) — keeps ``hits``/``hit_*``
         meaning "admissions actually served from the cache" instead of
         counting every retry of the same queued request."""
         self.hits -= 1
         self.hit_blocks -= n_blocks
+        self.hit_tokens -= n_tokens
+        self.hit_tokens_block -= n_tokens_block
 
     # ------------------------------------------------------------------
     def _split(self, node: _Node, at: int) -> None:
-        """Split ``node``'s edge after ``at`` tokens (block multiple):
+        """Split ``node``'s edge after ``at`` tokens (page multiple):
         node keeps the head, a new child gets the tail + old children."""
         bs = self.block_size
+        assert at % bs == 0, "edges split on page boundaries only"
         tail = _Node(node.key[at:], node.blocks[at // bs:], node)
         tail.children = node.children
         for c in tail.children.values():
@@ -175,21 +233,33 @@ class RadixPrefixCache:
         node.children = {int(tail.key[0]): tail}
 
     def insert(self, key, blocks: list[int], namespace: int = 0) -> list[int]:
-        """Index ``blocks`` (whole pages covering ``key``) under the
-        tree, adopting the caller's pool references for pages that
-        extend it.  Returns the caller's ids made redundant by an
-        existing indexed prefix — the caller must free those.  ``key``
-        length must equal ``len(blocks) * block_size``."""
+        """Index ``blocks`` (pages covering ``key``, the last one
+        possibly partial) under the tree, adopting the caller's pool
+        references for pages that extend it.  Returns the caller's ids
+        made redundant by an existing indexed prefix — the caller must
+        free those.  ``len(blocks)`` must equal
+        ``blocks_for_tokens(len(key))``.
+
+        Adoption rules (the oracle the property suite checks): with
+        ``m`` = the longest token prefix of ``key`` already indexed,
+        the tail past ``m`` is adopted iff ``m`` lands on a page
+        boundary (new child / edge split) or exactly at the end of a
+        resident partial-tail leaf (the leaf's partial page is released
+        and the longer chain replaces it).  A divergence in the middle
+        of a resident page keeps the resident chain and refuses the
+        incoming tail — two chains cannot share a physical page they
+        disagree on.
+        """
         key = np.asarray(key, np.int64)
         bs = self.block_size
-        if len(key) != len(blocks) * bs:
+        if len(blocks) != blocks_for_tokens(len(key), bs):
             raise ValueError(
                 f"insert: key of {len(key)} tokens vs {len(blocks)} "
                 f"blocks of {bs}")
         if not blocks:
             return []
         node = self._root(namespace)
-        pos = 0
+        pos = 0                                  # always page-aligned here
         stamp = next(self._clock)
         node.stamp = stamp
         while pos < len(key):
@@ -200,19 +270,43 @@ class RadixPrefixCache:
                 node.children[int(key[pos])] = new
                 self.inserted_blocks += len(new.blocks)
                 return list(blocks[:pos // bs])     # duplicates of prefix
-            n_eq = self._common_blocks(child.key, key, pos)
+            c = _common_tokens(child.key, key, pos)
             child.stamp = stamp
-            if n_eq < len(child.key):
-                if n_eq == 0:
-                    # same first token, different first block: keying
-                    # them apart is impossible in a radix over first
-                    # tokens — keep the resident chain, adopt nothing
-                    return list(blocks)
-                self._split(child, n_eq)
-            pos += n_eq
-            node = child
-            if pos >= len(key):
-                break
+            rem = len(key) - pos
+            if c == len(child.key):
+                if len(child.key) % bs == 0:
+                    pos += c
+                    node = child
+                    continue                      # full aligned edge: descend
+                # resident partial-tail leaf fully matched
+                if c == rem:
+                    return list(blocks)           # incoming ends with it
+                # incoming EXTENDS the partial tail: replace the
+                # superseded partial page with the longer chain's pages
+                fb = len(child.key) // bs
+                old_tail = child.blocks[fb:]
+                child.key = key[pos:]
+                child.blocks = (child.blocks[:fb]
+                                + list(blocks[pos // bs + fb:]))
+                self.pool.free(old_tail)          # cache's own reference
+                self.replaced_blocks += len(old_tail)
+                self.inserted_blocks += len(blocks) - (pos // bs + fb)
+                return list(blocks[:pos // bs + fb])
+            # c < len(child.key): incoming ran out or diverged mid-edge
+            if c == rem:
+                return list(blocks)               # prefix of resident: dup
+            cb = (c // bs) * bs
+            if c % bs != 0 or cb == 0:
+                # divergence inside a page: the resident chain keeps the
+                # page; the incoming tail cannot be keyed apart
+                return list(blocks)
+            self._split(child, cb)
+            new = _Node(key[pos + cb:], list(blocks[(pos + cb) // bs:]),
+                        child)
+            new.stamp = stamp
+            child.children[int(key[pos + cb])] = new
+            self.inserted_blocks += len(new.blocks)
+            return list(blocks[:(pos + cb) // bs])
         return list(blocks)                          # fully duplicate
 
     # ------------------------------------------------------------------
@@ -236,17 +330,29 @@ class RadixPrefixCache:
         return len(node.blocks) + sum(RadixPrefixCache._size(c)
                                       for c in node.children.values())
 
-    def _leaves(self) -> list[_Node]:
+    def _leaves(self) -> list[tuple[int, "_Node"]]:
         out = []
 
-        def walk(node):
+        def walk(ns, node):
             if not node.children and node.parent is not None:
-                out.append(node)
+                out.append((ns, node))
             for c in node.children.values():
-                walk(c)
-        for r in self._roots.values():
-            walk(r)
+                walk(ns, c)
+        for ns, r in self._roots.items():
+            walk(ns, r)
         return out
+
+    @staticmethod
+    def _full_path(node: _Node) -> tuple[np.ndarray, list[int]]:
+        """(full key, full block chain) for the root-to-``node`` path."""
+        keys, blocks, nd = [], [], node
+        while nd is not None and nd.parent is not None:
+            keys.append(nd.key)
+            blocks = list(nd.blocks) + blocks
+            nd = nd.parent
+        key = (np.concatenate(keys[::-1]) if keys
+               else np.zeros((0,), np.int64))
+        return key, blocks
 
     def evict(self, n_blocks: int) -> int:
         """Free LRU leaf chains (cache-only pages) until ``n_blocks``
@@ -254,12 +360,15 @@ class RadixPrefixCache:
         Returns the number of pages actually freed."""
         freed = 0
         while freed < n_blocks:
-            leaves = [lf for lf in self._leaves()
+            leaves = [(ns, lf) for ns, lf in self._leaves()
                       if all(self.pool.refcount(b) == 1
                              for b in lf.blocks)]
             if not leaves:
                 break
-            victim = min(leaves, key=lambda nd: nd.stamp)
+            ns, victim = min(leaves, key=lambda t: t[1].stamp)
+            if self.on_evict is not None:
+                full_key, full_blocks = self._full_path(victim)
+                self.on_evict(ns, full_key, len(victim.key), full_blocks)
             self.pool.free(victim.blocks)
             freed += len(victim.blocks)
             self.evicted_blocks += len(victim.blocks)
@@ -280,11 +389,145 @@ class RadixPrefixCache:
             "misses": self.misses,
             "hit_rate": self.hits / total if total else 0.0,
             "hit_blocks": self.hit_blocks,
+            "hit_tokens": self.hit_tokens,
+            "hit_tokens_block": self.hit_tokens_block,
             "cached_blocks": self.num_blocks,
             "evicted_blocks": self.evicted_blocks,
             "inserted_blocks": self.inserted_blocks,
+            "replaced_blocks": self.replaced_blocks,
         }
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         return (f"RadixPrefixCache(blocks={self.num_blocks}, "
                 f"hits={self.hits}, misses={self.misses})")
+
+
+# ---------------------------------------------------------------------------
+# persistence: hot chains across engine restarts
+# ---------------------------------------------------------------------------
+
+def dump_chains(cache: RadixPrefixCache, max_blocks: Optional[int] = None):
+    """Enumerate refcount-free chains for persistence, hot-first.
+
+    Returns ``[(namespace, full_key, full_blocks), ...]`` — one entry
+    per leaf, covering the whole root-to-leaf path, truncated at the
+    first node whose pages a reader still pins.  Pins are root-anchored
+    (match/publish/preempt all hold root-to-k prefixes), so a chain
+    with ANY pinned page is in practice skipped whole — "refcount-free
+    chains" only; call this after drain (``engine.close()`` at
+    shutdown) to persist everything.  ``max_blocks`` caps the total
+    page budget (hot chains win; a chain that does not fit whole is
+    skipped, shared-prefix pages are counted once).
+
+    Known flat-store limitation (ROADMAP follow-up: tree-structured
+    store): the BUDGET dedups shared-prefix pages but the serialized
+    chains each carry their full root-to-leaf page bytes, so sibling
+    chains duplicate their common prefix on disk, and rehydration
+    transiently allocates a chain's full length before ``insert``
+    hands the duplicate prefix pages back — a pool sized exactly to
+    the deduped footprint can skip late chains that would have fit."""
+    out, seen_pages, seen_keys = [], set(), set()
+    budget = max_blocks if max_blocks is not None else float("inf")
+    leaves = sorted(cache._leaves(), key=lambda t: -t[1].stamp)
+    for ns, leaf in leaves:
+        # path root->leaf, truncated at the first pinned node
+        path, nd = [], leaf
+        while nd is not None and nd.parent is not None:
+            path.append(nd)
+            nd = nd.parent
+        path = path[::-1]
+        keys, blocks = [], []
+        for nd in path:
+            if any(cache.pool.refcount(b) != 1 for b in nd.blocks):
+                break
+            keys.append(nd.key)
+            blocks.extend(nd.blocks)
+        if not blocks:
+            continue
+        full_key = np.concatenate(keys)
+        ident = (ns, full_key.tobytes())
+        if ident in seen_keys:
+            continue     # two pinned siblings truncated to one ancestor
+        fresh = [b for b in blocks if b not in seen_pages]
+        if len(fresh) > budget:
+            continue
+        budget -= len(fresh)
+        seen_pages.update(fresh)
+        seen_keys.add(ident)
+        out.append((ns, full_key, blocks))
+    return out
+
+
+def save_store(path: str, meta: dict, chains) -> dict:
+    """Write a prefix store: ``chains`` is
+    ``[(namespace, key, pages_per_leaf), ...]`` where ``pages_per_leaf``
+    is one ``(stack..., n_chain_blocks, block, kv...)`` host array per
+    pool leaf (block axis 1, engine layout).  Returns a summary dict."""
+    arrays = {
+        "meta": np.frombuffer(
+            json.dumps(meta, sort_keys=True).encode(), np.uint8).copy(),
+        "n_chains": np.asarray(len(chains), np.int64),
+    }
+    n_blocks = 0
+    for i, (ns, key, pages) in enumerate(chains):
+        arrays[f"ns_{i}"] = np.asarray(ns, np.int64)
+        arrays[f"key_{i}"] = np.asarray(key, np.int64)
+        for j, pg in enumerate(pages):
+            arrays[f"pages_{i}_{j}"] = pg
+        n_blocks += pages[0].shape[1] if pages else 0
+    # write through a file object: np.savez_compressed appends ".npz"
+    # to a bare string path, which would silently break the save/load
+    # round-trip for any persist path without that suffix
+    with open(path, "wb") as f:
+        np.savez_compressed(f, **arrays)
+    return {"chains": len(chains), "blocks": n_blocks}
+
+
+def load_store(path: str, expect_meta: dict):
+    """Read a prefix store written by ``save_store`` and validate its
+    header against ``expect_meta`` (engine geometry + config/params
+    digests).  Returns ``[(namespace, key, pages_per_leaf), ...]``.
+    Raises :class:`PrefixStoreError` on any corruption or mismatch —
+    the caller starts cold instead of crashing (or worse, serving
+    stale KV from a different model)."""
+    # normalize through JSON so tuple/list representation differences
+    # between the in-memory meta and the round-tripped one never count
+    # as a mismatch
+    expect_meta = json.loads(json.dumps(expect_meta, sort_keys=True))
+    try:
+        with np.load(path) as data:
+            meta = json.loads(bytes(data["meta"]).decode())
+            if meta != expect_meta:
+                drift = sorted(k for k in set(meta) | set(expect_meta)
+                               if meta.get(k) != expect_meta.get(k))
+                raise PrefixStoreError(
+                    f"prefix store {path} belongs to a different engine "
+                    f"configuration (mismatched: {drift})")
+            chains = []
+            for i in range(int(data["n_chains"])):
+                key = np.asarray(data[f"key_{i}"], np.int64)
+                nb = blocks_for_tokens(len(key), expect_meta["block_size"])
+                pages = []
+                for j, sig in enumerate(expect_meta["leaves"]):
+                    shape, dtype = sig
+                    pg = data[f"pages_{i}_{j}"]
+                    want_dt = np.dtype(dtype)
+                    if (pg.dtype != want_dt
+                            and pg.dtype.itemsize == want_dt.itemsize):
+                        # numpy round-trips ml_dtypes (bfloat16) arrays
+                        # as raw void records — reinterpret, don't cast
+                        pg = pg.view(want_dt)
+                    want = (tuple(shape[:1]) + (nb,) + tuple(shape[1:]))
+                    if tuple(pg.shape) != want or pg.dtype != want_dt:
+                        raise PrefixStoreError(
+                            f"prefix store {path}: chain {i} page tensor "
+                            f"{tuple(pg.shape)}/{pg.dtype} != expected "
+                            f"{want}/{dtype}")
+                    pages.append(pg)
+                chains.append((int(data[f"ns_{i}"]), key, pages))
+            return chains
+    except PrefixStoreError:
+        raise
+    except Exception as e:                       # corrupt zip/json/keys
+        raise PrefixStoreError(
+            f"prefix store {path} is unreadable: {e!r}") from e

@@ -1,6 +1,9 @@
 # NOTE: deliberately NO XLA_FLAGS here — smoke tests and benchmarks must
 # see the host's real single CPU device.  Only launch/dryrun.py forces
 # the 512-device placeholder topology (before any jax import).
+import os
+import time
+
 import jax
 import pytest
 
@@ -8,3 +11,21 @@ import pytest
 @pytest.fixture(scope="session")
 def key():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _per_test_time_limit(request):
+    """Fail any single test that exceeds ``REPRO_TEST_TIME_LIMIT``
+    seconds (set by the full ``scripts/check.sh`` gate to 120; unset or
+    0 disables).  Slow-test creep is a regression too — a suite the
+    inner loop cannot run stops being run."""
+    limit = float(os.environ.get("REPRO_TEST_TIME_LIMIT", "0") or 0)
+    t0 = time.monotonic()
+    yield
+    elapsed = time.monotonic() - t0
+    if limit > 0 and elapsed > limit:
+        pytest.fail(
+            f"{request.node.nodeid} took {elapsed:.1f}s "
+            f"(> REPRO_TEST_TIME_LIMIT={limit:.0f}s); split it or speed "
+            "it up — scripts/check.sh gates on per-test wall time",
+            pytrace=False)

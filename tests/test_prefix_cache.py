@@ -46,16 +46,65 @@ def test_insert_then_match_shares_pages():
     assert all(pool.refcount(x) == 1 for x in b)
 
 
-def test_match_caps_at_block_multiple_of_max_tokens():
+def test_match_is_token_granular():
+    """A query diverging (or capped) mid-page still matches its true
+    token prefix — the partially-matched final page is returned for the
+    caller to CoW-fork (the PR-3 matcher rounded down to whole pages)."""
     pool, cache = _pool_cache()
     b = pool.alloc(2)
     cache.insert(_key(*range(8)), b)
     got, n = cache.match(_key(*range(8)), max_tokens=7)
-    assert n == 4 and got == b[:1]      # one token short => one block less
+    assert n == 7 and got == b          # capped mid-page, both pages
     pool.free(got)
     got, n = cache.match(_key(*range(5)), max_tokens=4)
-    assert n == 4 and got == b[:1]      # partial second block never matches
+    assert n == 4 and got == b[:1]      # cap lands exactly on the boundary
     pool.free(got)
+    got, n = cache.match(_key(0, 1, 2, 3, 4, 5, 77, 78), max_tokens=7)
+    assert n == 6 and got == b          # divergence inside page 2
+    pool.free(got)
+    st = cache.stats()
+    assert st["hit_tokens"] == 7 + 4 + 6
+    assert st["hit_tokens_block"] == 4 + 4 + 4   # what PR-3 would serve
+    pool.assert_consistent()
+
+
+def test_partial_tail_is_indexed_and_upgraded():
+    """A chain whose length is not a page multiple retires WITH its
+    partial tail page; a longer chain extending it replaces that page
+    (the cache releases its superseded reference — no leak)."""
+    pool, cache = _pool_cache()
+    b = pool.alloc(3)                            # 9 tokens: 2 full + 1 partial
+    assert cache.insert(_key(*range(9)), b) == []
+    got, n = cache.match(_key(*range(9), 50), max_tokens=9)
+    assert n == 9 and got == b
+    pool.free(got)
+    b2 = pool.alloc(3)                           # 12 tokens, same prefix
+    dups = cache.insert(_key(*range(12)), b2)
+    assert dups == b2[:2]                        # full-page prefix deduped
+    pool.free(dups)
+    assert pool.refcount(b[2]) == 0              # superseded partial freed
+    got, n = cache.match(_key(*range(12)), max_tokens=20)
+    assert n == 12 and got == b[:2] + b2[2:]
+    pool.free(got)
+    assert cache.replaced_blocks == 1
+    pool.assert_consistent()
+
+
+def test_mid_page_divergent_insert_is_refused():
+    """Two chains cannot share a page they disagree on: an insert that
+    diverges from the resident chain mid-page keeps the resident and
+    returns the whole incoming chain for the caller to free."""
+    pool, cache = _pool_cache()
+    b = pool.alloc(2)
+    cache.insert(_key(*range(8)), b)
+    b2 = pool.alloc(2)
+    div = _key(0, 1, 2, 3, 4, 5, 77, 78)         # diverges at token 6
+    assert cache.insert(div, b2) == b2
+    pool.free(b2)
+    got, n = cache.match(div, max_tokens=7)
+    assert n == 6 and got == b                   # resident chain serves it
+    pool.free(got)
+    pool.assert_consistent()
 
 
 def test_insert_duplicate_chain_is_deduped():
@@ -111,10 +160,12 @@ def test_unrecord_hit_rolls_back_retry_stats():
         got, n = cache.match(_key(*range(8), 1), max_tokens=8)
         assert n == 8
         pool.free(got)
-        cache.unrecord_hit(len(got))
+        cache.unrecord_hit(len(got), n, (n // BS) * BS)
     assert cache.hits == 0 and cache.hit_blocks == 0
+    assert cache.hit_tokens == 0 and cache.hit_tokens_block == 0
     got, _ = cache.match(_key(*range(8), 1), max_tokens=8)
     assert cache.hits == 1 and cache.hit_blocks == 2
+    assert cache.hit_tokens == 8
     pool.free(got)
 
 
@@ -453,3 +504,155 @@ def test_eviction_under_pressure_and_invariant_every_step():
     eng_on.pool.assert_consistent()
     assert (eng_on.pool.num_free + eng_on.prefix_cache.num_blocks
             == eng_on.pool.num_blocks)
+
+
+# ---------------------------------------------------------------------------
+# token-granular hits: suffix prefill starts mid-page
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", SHARABLE)
+def test_token_granular_hit_bit_identical_to_cold(arch):
+    """System prompts whose length is NOT a page multiple: the hit ends
+    mid-page, admission CoW-forks the partial page and prefills only
+    the true token suffix — decode must still equal the cache-off run
+    token-for-token, and the matched token count must strictly beat
+    the block-granular counterfactual."""
+    cfg, params = _family_setup(arch)
+    rng = np.random.default_rng(13)
+    sys_prompt = rng.integers(0, cfg.vocab_size, 21, dtype=np.int32)
+
+    def traffic():
+        reqs = []
+        for uid in range(3):
+            tail = np.random.default_rng(70 + uid).integers(
+                0, cfg.vocab_size, 5 + uid, dtype=np.int32)
+            reqs.append(Request(
+                uid=uid, prompt=np.concatenate([sys_prompt, tail]),
+                max_new_tokens=5, extras=_extras(cfg),
+                temperature=0.8 if uid == 2 else 0.0,
+                top_k=6 if uid == 2 else 0))
+        return reqs
+
+    eng_off, cold = _run_sequential(cfg, params, traffic(), False)
+    eng_on, hot = _run_sequential(cfg, params, traffic(), True)
+    assert hot == cold
+    st = eng_on.prefix_cache.stats()
+    assert st["hits"] >= 2, st
+    # 21-token shared prefix with 16-token pages: every hit gains the
+    # 5 mid-page tokens the block-granular matcher would have dropped
+    assert st["hit_tokens"] > st["hit_tokens_block"], st
+    assert eng_on.cow_forks >= 1          # the partial page really forked
+    eng_on.pool.assert_consistent()
+    assert (eng_on.pool.num_free + eng_on.prefix_cache.num_blocks
+            == eng_on.pool.num_blocks)
+
+
+def test_partial_tail_retire_serves_longer_hits():
+    """A finished chain retires with its partial tail page indexed:
+    a follow-up whose prompt extends past the previous chain's full
+    pages must match INTO the tail page (token count above the page
+    boundary) and still decode exactly like a cold engine."""
+    cfg, params = _family_setup("phi3-medium-14b")
+    rng = np.random.default_rng(3)
+    base = rng.integers(0, cfg.vocab_size, 19, dtype=np.int32)  # 1 full + 3
+
+    def traffic():
+        return [Request(uid=0, prompt=base.copy(), max_new_tokens=4),
+                Request(uid=1,
+                        prompt=np.concatenate(
+                            [base, np.asarray([9, 8, 7], np.int32)]),
+                        max_new_tokens=4)]
+
+    _, cold = _run_sequential(cfg, params, traffic(), False)
+    eng, hot = _run_sequential(cfg, params, traffic(), True)
+    assert hot == cold
+    st = eng.prefix_cache.stats()
+    assert st["hits"] >= 1
+    assert st["hit_tokens"] >= 19         # matched into the partial tail
+    assert st["hit_tokens"] > st["hit_tokens_block"]
+    eng.pool.assert_consistent()
+
+
+# ---------------------------------------------------------------------------
+# in-flight sharing: hit a chain that is still decoding
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", SHARABLE)
+def test_in_flight_hit_bit_identical_to_cold(arch):
+    """A reader admitted while the writer is STILL decoding must hit
+    the writer's published frontier, share its pages below the
+    frontier, and decode exactly what a cold engine decodes — while
+    the writer's own output stays untouched."""
+    cfg, params = _family_setup(arch)
+    rng = np.random.default_rng(17)
+    sys_prompt = rng.integers(0, cfg.vocab_size, 24, dtype=np.int32)
+    tail = np.asarray([3, 1, 4, 1, 5], np.int32)
+
+    def fresh_pair():
+        return (Request(uid=0, prompt=sys_prompt.copy(), max_new_tokens=16,
+                        extras=_extras(cfg)),
+                Request(uid=1, prompt=np.concatenate([sys_prompt, tail]),
+                        max_new_tokens=5, extras=_extras(cfg)))
+
+    scfg = ServeConfig(max_slots=2, max_len=96, prefill_buckets=(16, 32),
+                       seed=5, prefix_cache=True)
+    eng = EdgeServingEngine(cfg, params, scfg)
+    writer, reader = fresh_pair()
+    eng.submit(writer)
+    for _ in range(3):
+        eng.drain_step()
+    assert not writer.done
+    assert eng.published_frontiers >= 1           # frontier really published
+    eng.submit(reader)
+    eng.drain_step()
+    assert eng.prefix_cache.hits >= 1, "reader should hit the live chain"
+    assert not writer.done, "hit happened while the writer was decoding"
+    eng.run_until_drained()
+    eng.pool.assert_consistent()
+    assert (eng.pool.num_free + eng.prefix_cache.num_blocks
+            == eng.pool.num_blocks)
+
+    # cold references: each request alone on a cache-off engine
+    for req, got in ((fresh_pair()[0], writer), (fresh_pair()[1], reader)):
+        ref = EdgeServingEngine(cfg, params, ServeConfig(
+            max_slots=2, max_len=96, prefill_buckets=(16, 32), seed=5,
+            prefix_cache=False))
+        ref.submit(req)
+        ref.run_until_drained()
+        assert tuple(req.generated) == tuple(got.generated), (
+            req.generated, got.generated)
+
+
+def test_in_flight_published_pages_survive_writer_rollback():
+    """Spec-decode writer + in-flight reader: rejected speculation
+    rolls the writer back (tail pages freed) strictly ABOVE the
+    published frontier, so the reader's shared view is never touched;
+    greedy output equals the vanilla engine for both and the pool
+    stays consistent through every drain step."""
+    cfg, params = _family_setup("phi3-medium-14b")
+    rng = np.random.default_rng(23)
+    sys_prompt = rng.integers(0, cfg.vocab_size, 24, dtype=np.int32)
+    tail = np.asarray([2, 7, 1, 8], np.int32)
+
+    def fresh_pair():
+        return (Request(uid=0, prompt=sys_prompt.copy(), max_new_tokens=14),
+                Request(uid=1, prompt=np.concatenate([sys_prompt, tail]),
+                        max_new_tokens=5))
+
+    def run(spec):
+        eng = EdgeServingEngine(cfg, params, ServeConfig(
+            max_slots=2, max_len=96, prefill_buckets=(16, 32), seed=5,
+            prefix_cache=True, spec_decode=spec, draft_arch="self"))
+        writer, reader = fresh_pair()
+        eng.submit(writer)
+        for _ in range(2):
+            eng.drain_step()
+        eng.submit(reader)
+        eng.run_until_drained()
+        eng.pool.assert_consistent()
+        if spec:
+            assert eng.spec_rounds >= 1
+            assert eng.prefix_cache.hits >= 1
+        return {r.uid: tuple(r.generated) for r in eng.completed}
+
+    assert run(True) == run(False)

@@ -1,0 +1,260 @@
+"""Prefix-store persistence: hot chains survive engine restarts.
+
+Contract under test (ISSUE 5 tentpole, persistence leg): ``close()``
+serializes the radix cache's refcount-free chains (token keys + page
+bytes) to ``ServeConfig.prefix_persist_path``; a NEW engine constructed
+with the same path rehydrates them and serves restart-warm hits that
+are BIT-identical to a cold run — while corrupt or mismatched-config
+stores are rejected cleanly (fresh cold start, never a crash, never
+another model's KV).
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.serving import EdgeServingEngine, Request, ServeConfig
+
+ARCH = "phi3-medium-14b"
+SHARABLE = ["phi3-medium-14b", "granite-moe-1b-a400m", "internvl2-76b",
+            "whisper-base"]
+
+
+def _family_setup(arch):
+    cfg = get_smoke_config(arch)
+    if cfg.family == "moe":
+        cfg = cfg.replace(capacity_factor=100.0)   # no token dropping
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _extras(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    e = {}
+    if cfg.family == "encdec":
+        e["audio_embeds"] = rng.normal(
+            0, 0.1, (cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+    if cfg.family == "vlm":
+        e["image_embeds"] = rng.normal(
+            0, 0.1, (cfg.num_image_tokens, cfg.image_embed_dim)
+        ).astype(np.float32)
+    return e
+
+
+@pytest.fixture(scope="module")
+def setup():
+    return _family_setup(ARCH)
+
+
+def _scfg(persist=None, **kw):
+    base = dict(max_slots=2, max_len=96, prefill_buckets=(16, 32), seed=5,
+                prefix_cache=True, prefix_persist_path=persist)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+def _traffic(cfg, n=3, sys_len=21):
+    rng = np.random.default_rng(7)
+    sys_prompt = rng.integers(0, cfg.vocab_size, sys_len, dtype=np.int32)
+    ext = _extras(cfg)
+    reqs = []
+    for uid in range(n):
+        tail = np.random.default_rng(50 + uid).integers(
+            0, cfg.vocab_size, 4 + uid, dtype=np.int32)
+        reqs.append(Request(uid=uid,
+                            prompt=np.concatenate([sys_prompt, tail]),
+                            max_new_tokens=5, extras=dict(ext)))
+    return reqs
+
+
+def _serve(eng, reqs):
+    for r in reqs:
+        eng.submit(r)
+        eng.run_until_drained()
+    return {r.uid: tuple(r.generated) for r in reqs}
+
+
+@pytest.mark.parametrize("arch", SHARABLE)
+def test_restart_warm_hit_bit_identical_to_cold(arch, tmp_path):
+    cfg, params = _family_setup(arch)
+    path = str(tmp_path / "prefix.npz")
+
+    # cold reference (no cache at all)
+    cold = _serve(EdgeServingEngine(cfg, params, _scfg(prefix_cache=False)),
+                  _traffic(cfg))
+
+    # first engine lifetime: warm the cache, flush it on close
+    eng_a = EdgeServingEngine(cfg, params, _scfg(persist=path))
+    _serve(eng_a, _traffic(cfg))
+    saved = eng_a.close()
+    assert saved["persist_saved_chains"] >= 1
+    assert saved["persist_saved_blocks"] >= 1
+    assert os.path.exists(path)
+
+    # "restarted hub": same config+params+path => rehydrates warm
+    eng_b = EdgeServingEngine(cfg, params, _scfg(persist=path))
+    assert eng_b.persist_rejected == ""
+    assert eng_b.persist_loaded_chains >= 1
+    assert eng_b.prefix_cache.num_blocks >= 1
+    warm = _serve(eng_b, _traffic(cfg))
+    st = eng_b.prefix_cache.stats()
+    assert st["hits"] >= len(warm), st     # every request hit the store
+    assert warm == cold                    # restart-warm == cold, bitwise
+    eng_b.pool.assert_consistent()
+    assert (eng_b.pool.num_free + eng_b.prefix_cache.num_blocks
+            == eng_b.pool.num_blocks)
+
+
+def test_corrupt_store_rejected_cleanly(setup, tmp_path):
+    cfg, params = setup
+    path = str(tmp_path / "prefix.npz")
+    with open(path, "wb") as f:
+        f.write(b"definitely not a prefix store")
+    eng = EdgeServingEngine(cfg, params, _scfg(persist=path))
+    assert eng.persist_loaded_chains == 0
+    assert "unreadable" in eng.persist_rejected
+    assert eng.stats()["persist_rejected"]          # surfaced to operators
+    # fresh start still serves correctly
+    cold = _serve(EdgeServingEngine(cfg, params, _scfg(prefix_cache=False)),
+                  _traffic(cfg, n=1))
+    got = _serve(eng, _traffic(cfg, n=1))
+    assert got == cold
+
+
+def test_mismatched_config_and_params_rejected(setup, tmp_path):
+    cfg, params = setup
+    path = str(tmp_path / "prefix.npz")
+    eng_a = EdgeServingEngine(cfg, params, _scfg(persist=path))
+    _serve(eng_a, _traffic(cfg, n=2))
+    assert eng_a.close()["persist_saved_chains"] >= 1
+
+    # different page geometry: rejected by the header, engine starts cold
+    eng_geo = EdgeServingEngine(cfg, params,
+                                _scfg(persist=path, kv_block_size=8))
+    assert eng_geo.persist_loaded_chains == 0
+    assert "mismatched" in eng_geo.persist_rejected
+
+    # different model config (another sharable arch): rejected
+    cfg2 = get_smoke_config("granite-moe-1b-a400m")
+    params2 = M.init_params(cfg2, jax.random.PRNGKey(0))
+    eng_cfg = EdgeServingEngine(cfg2, params2, _scfg(persist=path))
+    assert eng_cfg.persist_loaded_chains == 0
+    assert "mismatched" in eng_cfg.persist_rejected
+
+    # same config, different weights: the params fingerprint trips —
+    # persisted KV bytes are functions of the weights
+    params_b = M.init_params(cfg, jax.random.PRNGKey(99))
+    eng_w = EdgeServingEngine(cfg, params_b, _scfg(persist=path))
+    assert eng_w.persist_loaded_chains == 0
+    assert "mismatched" in eng_w.persist_rejected
+    # and the reject is non-fatal: it still serves
+    got = _serve(eng_w, _traffic(cfg, n=1))
+    assert len(got[0]) == 5
+
+
+def test_overlapping_store_rehydrates_without_page_aliasing(setup, tmp_path):
+    """Defense in depth for hand-merged / legacy stores: a store holding
+    BOTH a partial-tail chain and its extension (close()'s prefix dedup
+    never writes one, but load must not trust that) drives insert's
+    partial-tail REPLACEMENT path at rehydrate — the superseded page
+    returns to the free list mid-load and a later chain's alloc reuses
+    it.  The batched scatter must keep the new owner's page bytes
+    (last write wins), or warm hits silently decode wrong KV."""
+    from repro.serving.prefix_cache import load_store, save_store
+    cfg, params = setup
+    vocab = cfg.vocab_size
+    rng = np.random.default_rng(31)
+    S = rng.integers(0, vocab, 21, dtype=np.int32)       # 1 full + partial
+    tail = rng.integers(0, vocab, 5, dtype=np.int32)
+    other = rng.integers(0, vocab, 30, dtype=np.int32)
+    other[0] = (S[0] + 1) % vocab                        # separate subtree
+
+    def chain_store(prompt, name):
+        path = str(tmp_path / name)
+        eng = EdgeServingEngine(cfg, params, _scfg(persist=path))
+        # max_new_tokens=1 finishes at admission: the chain is exactly
+        # the prompt tokens (partial tail page included)
+        eng.submit(Request(uid=0, prompt=prompt.copy(), max_new_tokens=1))
+        eng.run_until_drained()
+        eng.close()
+        return load_store(path, eng._persist_meta()), eng
+
+    chains_x, eng_ref = chain_store(S, "x.npz")
+    chains_y, _ = chain_store(np.concatenate([S, tail]), "y.npz")
+    chains_z, _ = chain_store(other, "z.npz")
+    merged = str(tmp_path / "merged.npz")
+    # X before Y: rehydrating Y upgrades X's partial-tail leaf (frees
+    # X's tail page); Z's alloc then reuses the freed ids
+    save_store(merged, eng_ref._persist_meta(),
+               chains_x + chains_y + chains_z)
+
+    eng = EdgeServingEngine(cfg, params, _scfg(persist=merged))
+    assert eng.persist_rejected == ""
+    assert eng.persist_loaded_chains == 3
+    for probe in (np.concatenate([S, tail, np.asarray([1, 2, 3], np.int32)]),
+                  np.concatenate([other, np.asarray([4], np.int32)])):
+        cold_eng = EdgeServingEngine(cfg, params,
+                                     _scfg(prefix_cache=False))
+        r_cold = Request(uid=0, prompt=probe.copy(), max_new_tokens=5)
+        cold_eng.submit(r_cold)
+        cold_eng.run_until_drained()
+        r_warm = Request(uid=1, prompt=probe.copy(), max_new_tokens=5)
+        eng.submit(r_warm)
+        eng.run_until_drained()
+        assert eng.prefix_cache.hits >= 1
+        assert tuple(r_warm.generated) == tuple(r_cold.generated), (
+            "rehydrated pages served wrong KV", r_warm.generated,
+            r_cold.generated)
+    eng.pool.assert_consistent()
+
+
+def test_close_dedups_prefix_and_twin_chains(setup, tmp_path):
+    """close() must not write a chain that is a prefix of another
+    stored chain (spill-then-extend leaves both around), nor exact
+    twins — the store would re-serialize shared bytes and churn the
+    pool at rehydrate."""
+    cfg, params = setup
+    path = str(tmp_path / "prefix.npz")
+    eng = EdgeServingEngine(cfg, params, _scfg(persist=path))
+    rng = np.random.default_rng(5)
+    S = rng.integers(0, cfg.vocab_size, 21, dtype=np.int32)
+    eng.submit(Request(uid=0, prompt=S.copy(), max_new_tokens=1))
+    eng.run_until_drained()
+    # forge the problematic spill state: the resident chain ALSO
+    # appears spilled (as its own prefix and as an exact twin)
+    resident_key = eng._key_tokens(
+        Request(uid=9, prompt=S.copy()))[:21]
+    pages = eng._chain_pages_host(eng.prefix_cache._leaves()[0][1].blocks)
+    eng._spilled.append((0, resident_key[:16].copy(),
+                         [p[:, :1] for p in pages]))      # strict prefix
+    eng._spilled.append((0, resident_key.copy(), pages))  # exact twin
+    saved = eng.close()
+    assert saved["persist_saved_chains"] == 1             # all deduped
+
+
+def test_pressure_evicted_chains_are_spilled_into_store(setup, tmp_path):
+    """Chains evicted under pool pressure DURING serving must still
+    reach the close()-time store (host-side spill), not just whatever
+    happens to be resident at shutdown."""
+    cfg, params = setup
+    path = str(tmp_path / "prefix.npz")
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size, 20 + 3 * i, dtype=np.int32)
+               for i in range(6)]
+    eng = EdgeServingEngine(cfg, params, ServeConfig(
+        max_slots=2, max_len=64, prefill_buckets=(8, 16, 32),
+        kv_block_size=16, kv_pool_blocks=8, seed=0, prefix_cache=True,
+        prefix_persist_path=path))
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid=uid, prompt=p.copy(), max_new_tokens=6))
+    eng.run_until_drained()
+    assert eng.prefix_cache.evicted_blocks > 0      # pressure really evicted
+    assert len(eng._spilled) >= 1                   # ...and was spilled
+    saved = eng.close()
+    # the store holds more than the resident cache alone could provide
+    resident = eng.prefix_cache.num_blocks
+    assert saved["persist_saved_chains"] > 0
+    assert saved["persist_saved_blocks"] >= resident
