@@ -51,12 +51,20 @@ if [ "$FAST" = "1" ]; then
     exit 0
 fi
 
-echo "== serving perf baseline ==" >&2
+echo "== serving perf baseline (incl. open-loop goodput scenario) ==" >&2
+# the baseline gates the closed-loop QoE numbers AND the open-loop
+# scenario (Poisson arrivals into a live engine): token counts exactly,
+# plus chunked-prefill interleaving strictly beating monolithic-prefill
+# stalls on decode inter-token p99
 python -m benchmarks.serving_throughput --requests 12 \
     --check benchmarks/serving_baseline.json >&2
 
 echo "== tier-1 tests ==" >&2
 # any single test exceeding the limit fails the gate (slow-test creep
-# is a regression too); override/disable with REPRO_TEST_TIME_LIMIT=0
-export REPRO_TEST_TIME_LIMIT="${REPRO_TEST_TIME_LIMIT-120}"
+# is a regression too); override/disable with REPRO_TEST_TIME_LIMIT=0.
+# 180 leaves headroom for the slowest pre-existing test
+# (test_federated.py::test_full_private_pipeline measures 140-175s on
+# the current reference host, code unchanged — the budget gates
+# regressions, not hardware variance)
+export REPRO_TEST_TIME_LIMIT="${REPRO_TEST_TIME_LIMIT-180}"
 python -m pytest -x -q --durations=15

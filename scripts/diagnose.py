@@ -11,6 +11,9 @@ ops by bytes / flops / collective bytes (trip-scaled, per chip).
   PYTHONPATH=src python scripts/diagnose.py --cache [store.npz]
       # per-arch prefix-sharing capability; with a path, also a
       # persisted prefix-store report (header + per-chain summary)
+  PYTHONPATH=src python scripts/diagnose.py --server [arch]
+      # step-driven serving introspection: wave-budget plans,
+      # live-slot frontier table, frontend SLO counters
 """
 import json
 import sys
@@ -98,9 +101,73 @@ def cache_report(args: list) -> None:
         print(f"  ... and {n - 16} more")
 
 
+def server_report(args: list) -> None:
+    """Step-driven serving introspection: drive a live chunked engine a
+    few waves and print each wave's budget plan (slot -> mode x width),
+    the live-slot frontier table mid-flight, then finish the trace
+    through the always-on frontend and report its SLO counters."""
+    import asyncio
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.launch.serve import AsyncServingFrontend
+    from repro.serving import EdgeServingEngine, Request, ServeConfig
+
+    arch = args[0] if args else "phi3-medium-14b"
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = EdgeServingEngine(cfg, params, ServeConfig(
+        max_slots=3, max_len=96, prefill_buckets=(8, 16, 32),
+        chunked_prefill=True, catch_chunk=4, wave_tokens=10))
+    rng = np.random.default_rng(0)
+
+    def req(uid, n):
+        return Request(uid=uid,
+                       prompt=rng.integers(0, cfg.vocab_size, n,
+                                           dtype=np.int32),
+                       max_new_tokens=8)
+
+    for uid, n in enumerate((30, 6, 12)):   # one catch-up + two short
+        eng.submit(req(uid, n))
+    print(f"wave-budget plans ({arch}, wave_tokens=10, catch_chunk=4):")
+    for i in range(4):
+        eng.step()
+        plan = {s: f"{m}x{v}" for s, (m, v) in sorted(eng.last_plan.items())}
+        print(f"  wave {i}: {json.dumps(plan)}")
+    print("live-slot frontier:")
+    print("  slot uid   pos pending published mode")
+    for s in range(eng.scfg.max_slots):
+        r = eng.slot_req[s]
+        if r is None or not eng.active[s]:
+            continue
+        pend = 0 if eng.pending[s] is None else len(eng.pending[s])
+        mode = eng.last_plan.get(s, ("-", 0))[0]
+        print(f"  {s:4d} {r.uid:3d} {int(eng.pos[s]):5d} {pend:7d} "
+              f"{eng.slot_published[s]:9d} {mode}")
+
+    async def finish():
+        fe = AsyncServingFrontend(eng)
+        await fe.start()
+        fe.submit(req(10, 9))
+        fe.submit(req(11, 21))
+        await fe.shutdown()                  # drains everything live
+        return fe.slo_stats(ttft_slo_ms=500.0, itl_slo_ms=50.0)
+
+    print("frontend SLO counters:", json.dumps(asyncio.run(finish())))
+    st = eng.stats()
+    print("engine:", json.dumps({k: st[k] for k in
+                                 ("steps", "mixed_waves", "wave_admitted",
+                                  "cancels")}))
+
+
 def main():
     from repro.compat import report
     print("compat:", json.dumps(report()))
+    if "--server" in sys.argv:
+        server_report([a for a in sys.argv[1:] if not a.startswith("-")])
+        return
     if "--cache" in sys.argv:
         cache_report([a for a in sys.argv[1:] if not a.startswith("-")])
         return

@@ -78,6 +78,45 @@ def admission_rank(policy: str, *, priority: int = 0, arrival: float = 0.0,
     raise ValueError(policy)
 
 
+def plan_wave(policy: str, entries, budget: Optional[int] = None) -> dict:
+    """Per-wave token widths for a live mixed admit/decode frontier.
+
+    ``entries``: dicts with ``id`` (slot), ``want`` (the width the slot
+    would naturally take this wave: 1 for a plain decode, up to the
+    chunk width for prompt catch-up, up to gamma for a speculative
+    round) plus the ``admission_rank`` QoE fields (``priority`` /
+    ``arrival`` / ``deadline`` / ``uid``).
+
+    Allocation under ``budget`` (total tokens this wave may score):
+    every entry is granted width 1 first — an admitted slot always
+    advances, so a saturated wave degrades to plain continuous batching
+    instead of starving anyone — then the remaining budget is granted
+    best-rank-first up to each entry's ``want``.  ``budget=None``
+    disables the cap (every slot takes its natural width).  Returns
+    ``{id: width}``.
+
+    Width is deliberately the only lever: shrinking a catch-up or
+    speculative span never changes the tokens a request emits (chunked
+    teacher-forcing and speculative acceptance are both
+    schedule-invariant), so QoE shaping here cannot cause token drift.
+    """
+    if budget is None:
+        return {e["id"]: max(1, int(e["want"])) for e in entries}
+    order = sorted(entries, key=lambda e: admission_rank(
+        policy, priority=e.get("priority", 0),
+        arrival=e.get("arrival", 0.0), deadline=e.get("deadline"),
+        uid=e.get("uid", 0)))
+    widths = {e["id"]: 1 for e in order}
+    left = max(0, int(budget) - len(order))
+    for e in order:
+        if left <= 0:
+            break
+        extra = min(max(1, int(e["want"])) - 1, left)
+        widths[e["id"]] += extra
+        left -= extra
+    return widths
+
+
 def _rank(policy: str, task: AITask, now: float):
     del now  # rank is currently time-invariant; kept for call-site compat
     return admission_rank(policy, priority=task.priority,

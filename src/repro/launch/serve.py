@@ -1,18 +1,36 @@
-"""Serving launcher: EdgeAI-Hub engine with batched requests.
+"""Always-on serving frontend over the step-driven engine.
+
+``AsyncServingFrontend`` wraps ``EdgeServingEngine`` in an asyncio
+event loop with no drain assumption: requests arrive and are cancelled
+mid-flight, tokens stream to per-request callbacks / async iterators
+as each engine step retires them, and a graceful shutdown flushes the
+prefix-persist store via ``engine.close()``.
+
+Threading model: the engine is single-threaded.  All engine calls
+(``submit`` / ``cancel`` / ``step`` / ``close``) happen from the one
+background ``_run`` task; the public API only posts intents to an
+inbox and wakes the loop, so callers never race a step that is
+executing in the default executor.  ``step()`` itself runs via
+``run_in_executor`` so the event loop stays responsive to arrivals
+during a jitted wave.
+
+CLI:
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b \
-      --requests 8 --max-new 16 --policy edf --top-k 4
+      --requests 8 --max-new 16 --policy edf --mode async
 
-Traffic is a mixed prompt-length workload (some prompts exceed the
-largest prefill bucket to exercise chunked admission); per-request
-sampling params and QoE metadata (priority/deadline) ride on each
-Request.  Reports tokens/sec and TTFT percentiles.
+``--mode async`` (default) staggers arrivals over the run and streams
+tokens as they retire; ``--mode drain`` keeps the legacy
+submit-all-then-drain loop.  Reports tokens/sec, TTFT and inter-token
+latency percentiles, and SLO goodput.
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import json
 import time
+from typing import Callable, Optional
 
 import jax
 import numpy as np
@@ -22,10 +40,262 @@ from repro.models import model as M
 from repro.serving import EdgeServingEngine, Request, ServeConfig
 
 
+class StreamHandle:
+    """Per-request streaming view handed back by ``submit``.
+
+    Tokens arrive on an asyncio queue as the engine retires them
+    (``None`` sentinel terminates the stream); ``done`` resolves with
+    the finished ``Request`` (``req.cancelled`` distinguishes a
+    mid-flight cancel from natural completion).
+    """
+
+    def __init__(self, req: Request):
+        self.req = req
+        self.uid = req.uid
+        self.delivered = 0
+        self.tokens: asyncio.Queue = asyncio.Queue()
+        self.done: asyncio.Future = (
+            asyncio.get_event_loop().create_future())
+        self.t_submit = time.monotonic()
+        self.t_tokens: list[float] = []     # arrival time of each token
+
+    def __aiter__(self):
+        return self._gen()
+
+    async def _gen(self):
+        while True:
+            tok = await self.tokens.get()
+            if tok is None:
+                return
+            yield tok
+
+
+class AsyncServingFrontend:
+    """Always-on asyncio frontend: admit, stream, cancel, shut down.
+
+    The background task loops ``engine.step()`` while work exists and
+    parks on an event when idle, so an idle frontend burns no cycles
+    but wakes instantly on the next arrival.  Per-token delivery works
+    by diffing ``req.generated`` after each step — the engine stays
+    oblivious to the frontend.
+    """
+
+    def __init__(self, engine: EdgeServingEngine):
+        self.engine = engine
+        self._inbox: list[Request] = []
+        self._cancels: list[tuple[int, asyncio.Future]] = []
+        self._handles: dict[int, StreamHandle] = {}
+        self._callbacks: dict[int, Callable] = {}
+        self._wake: Optional[asyncio.Event] = None
+        self._task: Optional[asyncio.Task] = None
+        self._closing = False
+        self.ttft_ms: list[float] = []      # first-token latency/request
+        self.itl_ms: list[float] = []       # every inter-token gap
+        self.steps = 0
+
+    # -- public API (call from coroutines on the running loop) --------
+    async def start(self) -> None:
+        self._wake = asyncio.Event()
+        self._task = asyncio.create_task(self._run())
+
+    def submit(self, req: Request,
+               on_token: Optional[Callable[[Request, int], None]] = None,
+               ) -> StreamHandle:
+        """Enqueue a request; returns a handle streaming its tokens."""
+        if self._closing:
+            raise RuntimeError("frontend is shutting down")
+        h = StreamHandle(req)
+        self._handles[req.uid] = h
+        if on_token is not None:
+            self._callbacks[req.uid] = on_token
+        self._inbox.append(req)
+        self._wake.set()
+        return h
+
+    def cancel(self, uid: int) -> asyncio.Future:
+        """Request mid-flight cancellation; the future resolves
+        True/False once the engine processed it (between steps)."""
+        fut = asyncio.get_event_loop().create_future()
+        self._cancels.append((uid, fut))
+        self._wake.set()
+        return fut
+
+    async def shutdown(self, drain: bool = True) -> dict:
+        """Stop the loop and flush the prefix-persist store.
+
+        ``drain=True`` finishes in-flight and queued work first;
+        ``drain=False`` cancels everything outstanding.
+        """
+        if not drain:
+            for uid in list(self._handles):
+                self.cancel(uid)
+        self._closing = True
+        self._wake.set()
+        if self._task is not None:
+            await self._task
+        return self.engine.close()          # persists hot chains
+
+    def slo_stats(self, ttft_slo_ms: float = 1e9,
+                  itl_slo_ms: float = 1e9) -> dict:
+        """TTFT/ITL percentiles plus goodput under the given SLO."""
+        def pct(xs, q):
+            if not xs:
+                return 0.0
+            s = sorted(xs)
+            return s[min(len(s) - 1, int(q * len(s)))]
+        return {
+            "ttft_p50_ms": round(pct(self.ttft_ms, 0.50), 2),
+            "ttft_p99_ms": round(pct(self.ttft_ms, 0.99), 2),
+            "itl_p50_ms": round(pct(self.itl_ms, 0.50), 2),
+            "itl_p99_ms": round(pct(self.itl_ms, 0.99), 2),
+            "goodput_ttft": round(
+                sum(1 for t in self.ttft_ms if t <= ttft_slo_ms)
+                / max(1, len(self.ttft_ms)), 3),
+            "goodput_itl": round(
+                sum(1 for t in self.itl_ms if t <= itl_slo_ms)
+                / max(1, len(self.itl_ms)), 3),
+        }
+
+    # -- internals ----------------------------------------------------
+    def _drain_control(self) -> None:
+        """Apply queued submits/cancels on the loop thread, between
+        steps — the only place besides ``step`` that touches the
+        engine."""
+        eng = self.engine
+        inbox, self._inbox = self._inbox, []
+        for req in inbox:
+            h = self._handles[req.uid]
+            h.t_submit = time.monotonic()
+            eng.submit(req)
+        cancels, self._cancels = self._cancels, []
+        for uid, fut in cancels:
+            ok = eng.cancel(uid)
+            if not fut.done():
+                fut.set_result(ok)
+            if ok:
+                self._resolve(uid)
+
+    def _deliver(self) -> None:
+        """Diff ``req.generated`` against what each handle has seen and
+        stream the delta; resolve handles whose request finished."""
+        now = time.monotonic()
+        for uid in list(self._handles):
+            h = self._handles[uid]
+            req = h.req
+            n = len(req.generated)
+            while h.delivered < n:
+                tok = int(req.generated[h.delivered])
+                h.delivered += 1
+                if h.t_tokens:
+                    self.itl_ms.append((now - h.t_tokens[-1]) * 1e3)
+                else:
+                    self.ttft_ms.append((now - h.t_submit) * 1e3)
+                h.t_tokens.append(now)
+                h.tokens.put_nowait(tok)
+                cb = self._callbacks.get(uid)
+                if cb is not None:
+                    cb(req, tok)
+            if req.done:
+                self._resolve(uid)
+
+    def _resolve(self, uid: int) -> None:
+        h = self._handles.pop(uid, None)
+        self._callbacks.pop(uid, None)
+        if h is None:
+            return
+        h.tokens.put_nowait(None)
+        if not h.done.done():
+            h.done.set_result(h.req)
+
+    async def _run(self) -> None:
+        loop = asyncio.get_running_loop()
+        eng = self.engine
+        while True:
+            self._drain_control()
+            busy = bool(eng.queue) or bool(eng.active.any())
+            if busy:
+                await loop.run_in_executor(None, eng.step)
+                self.steps += 1
+                self._deliver()
+                continue
+            if self._inbox or self._cancels:
+                continue                    # new intents — apply now
+            if self._closing:
+                return
+            self._wake.clear()
+            if self._inbox or self._cancels or self._closing:
+                continue                    # landed before the clear
+            await self._wake.wait()
+
+
+# ---------------------------------------------------------------- CLI
+def _build_engine(args):
+    cfg = (get_smoke_config(args.arch) if args.scale == "smoke"
+           else get_config(args.arch))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    if args.params:
+        from repro.training import checkpoint as ckpt
+        params = ckpt.restore(args.params, params)
+    scfg = ServeConfig(max_slots=args.slots, max_len=args.max_len,
+                       temperature=args.temperature, top_k=args.top_k,
+                       policy=args.policy, spec_decode=args.spec,
+                       draft_arch=args.draft if args.spec else None,
+                       spec_gamma=args.gamma,
+                       chunked_prefill=args.chunked,
+                       prefix_persist_path=args.persist)
+    return cfg, EdgeServingEngine(cfg, params, scfg)
+
+
+def _make_requests(cfg, args) -> list:
+    rng = np.random.default_rng(0)
+    reqs = []
+    for uid in range(args.requests):
+        n = int(rng.integers(args.min_prompt, args.max_prompt + 1))
+        extras = {}
+        if cfg.family == "vlm":
+            extras["image_embeds"] = rng.normal(
+                0, 0.1, (cfg.num_image_tokens, cfg.image_embed_dim)
+            ).astype(np.float32)
+        if cfg.family == "encdec":
+            extras["audio_embeds"] = rng.normal(
+                0, 0.1, (cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+        reqs.append(Request(
+            uid=uid,
+            prompt=rng.integers(0, cfg.vocab_size, n, dtype=np.int32),
+            max_new_tokens=args.max_new,
+            priority=uid % 3,
+            deadline=float(uid) if args.policy == "edf" else None,
+            extras=extras))
+    return reqs
+
+
+async def _serve_async(eng, reqs, args) -> dict:
+    """Open-loop style demo: staggered arrivals into a live frontend."""
+    fe = AsyncServingFrontend(eng)
+    await fe.start()
+    handles = []
+    gap = args.arrival_gap_ms / 1e3
+    for req in reqs:
+        handles.append(fe.submit(req))
+        if gap:
+            await asyncio.sleep(gap)
+    done = [await h.done for h in handles]
+    out = dict(fe.slo_stats())
+    out.update(await fe.shutdown())
+    out["requests"] = len(done)
+    out["tokens"] = sum(len(r.generated) for r in done)
+    out["decode_steps"] = fe.steps
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="gemma3-1b")
     ap.add_argument("--scale", choices=("smoke", "full"), default="smoke")
+    ap.add_argument("--mode", choices=("async", "drain"), default="async",
+                    help="async: always-on frontend with staggered "
+                         "arrivals and streaming; drain: legacy "
+                         "submit-all-then-drain loop")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
@@ -44,6 +314,11 @@ def main() -> None:
     ap.add_argument("--gamma", type=int, default=4,
                     help="speculation width (proposals per round + 1); "
                          "also the multi-token catch-up chunk")
+    ap.add_argument("--chunked", action="store_true",
+                    help="chunked prefill: admit prompts as wave spans "
+                         "interleaved with decode (no blocking prefill)")
+    ap.add_argument("--arrival-gap-ms", type=float, default=5.0,
+                    help="async mode: gap between request arrivals")
     ap.add_argument("--persist", metavar="PATH", default=None,
                     help="prefix-store path: rehydrate the radix prefix "
                          "cache from PATH at startup (warm TTFT after a "
@@ -58,74 +333,55 @@ def main() -> None:
                     help="checkpoint from launch.train (else random init)")
     args = ap.parse_args()
 
-    cfg = (get_smoke_config(args.arch) if args.scale == "smoke"
-           else get_config(args.arch))
-    params = M.init_params(cfg, jax.random.PRNGKey(0))
-    if args.params:
-        from repro.training import checkpoint as ckpt
-        params = ckpt.restore(args.params, params)
-
-    scfg = ServeConfig(max_slots=args.slots, max_len=args.max_len,
-                       temperature=args.temperature, top_k=args.top_k,
-                       policy=args.policy, spec_decode=args.spec,
-                       draft_arch=args.draft if args.spec else None,
-                       spec_gamma=args.gamma,
-                       prefix_persist_path=args.persist)
-    eng = EdgeServingEngine(cfg, params, scfg)
-
-    rng = np.random.default_rng(0)
+    cfg, eng = _build_engine(args)
+    reqs = _make_requests(cfg, args)
     t0 = time.time()
-    t_submit, t_first = {}, {}
-    reqs = []
-    for uid in range(args.requests):
-        n = int(rng.integers(args.min_prompt, args.max_prompt + 1))
-        extras = {}
-        if cfg.family == "vlm":
-            extras["image_embeds"] = rng.normal(
-                0, 0.1, (cfg.num_image_tokens, cfg.image_embed_dim)
-            ).astype(np.float32)
-        if cfg.family == "encdec":
-            extras["audio_embeds"] = rng.normal(
-                0, 0.1, (cfg.encoder_seq, cfg.d_model)).astype(np.float32)
-        req = Request(uid=uid,
-                      prompt=rng.integers(0, cfg.vocab_size, n,
-                                          dtype=np.int32),
-                      max_new_tokens=args.max_new,
-                      priority=uid % 3,
-                      deadline=float(uid) if args.policy == "edf" else None,
-                      extras=extras)
-        reqs.append(req)
-        eng.submit(req)
-        t_submit[uid] = time.time()
 
-    while eng.queue or eng.active.any():
-        eng.step()
-        now = time.time()
-        for r in reqs:
-            if r.uid not in t_first and r.generated:
-                t_first[r.uid] = now
-    done = eng.completed
-    dt = time.time() - t0
-    toks = sum(len(r.generated) for r in done)
-    ttft = sorted((t_first[u] - t_submit[u]) * 1e3 for u in t_first)
-    out = {
-        "requests": len(done), "decode_steps": eng.steps,
-        "tokens": toks, "elapsed_s": round(dt, 2),
-        "tok_per_s": round(toks / dt, 1),
-        "ttft_p50_ms": round(ttft[len(ttft) // 2], 1),
-        "ttft_p99_ms": round(ttft[min(len(ttft) - 1,
-                                      int(0.99 * len(ttft)))], 1),
-        "policy": args.policy,
-    }
+    if args.mode == "async":
+        out = asyncio.run(_serve_async(eng, reqs, args))
+        dt = time.time() - t0
+        out["elapsed_s"] = round(dt, 2)
+        out["tok_per_s"] = round(out["tokens"] / dt, 1)
+        out["policy"] = args.policy
+        done = eng.completed
+    else:
+        t_submit, t_first = {}, {}
+        for req in reqs:
+            eng.submit(req)
+            t_submit[req.uid] = time.time()
+        while eng.queue or eng.active.any():
+            eng.step()
+            now = time.time()
+            for r in reqs:
+                if r.uid not in t_first and r.generated:
+                    t_first[r.uid] = now
+        done = eng.completed
+        dt = time.time() - t0
+        toks = sum(len(r.generated) for r in done)
+        ttft = sorted((t_first[u] - t_submit[u]) * 1e3 for u in t_first)
+        out = {
+            "requests": len(done), "decode_steps": eng.steps,
+            "tokens": toks, "elapsed_s": round(dt, 2),
+            "tok_per_s": round(toks / dt, 1),
+            "ttft_p50_ms": round(ttft[len(ttft) // 2], 1),
+            "ttft_p99_ms": round(ttft[min(len(ttft) - 1,
+                                          int(0.99 * len(ttft)))], 1),
+            "policy": args.policy,
+        }
+        if args.persist:
+            out.update(eng.close())     # save the warm chains back
+
+    st = eng.stats()
     if args.spec:
-        st = eng.stats()
         out.update({
             "spec_active": st["spec_active"],
             "spec_accept_rate": round(st["spec_acceptance"], 3),
             "spec_tokens_per_step": round(st["spec_tokens_per_round"], 3),
         })
+    if args.chunked:
+        out.update({"mixed_waves": st["mixed_waves"],
+                    "wave_admitted": st["wave_admitted"]})
     if args.persist:
-        st = eng.stats()
         out.update({
             "persist_loaded_chains": st.get("persist_loaded_chains", 0),
             "persist_loaded_blocks": st.get("persist_loaded_blocks", 0),
@@ -133,7 +389,6 @@ def main() -> None:
             "prefix_hits": st.get("prefix_hits", 0),
             "prefix_hit_tokens": st.get("prefix_hit_tokens", 0),
         })
-        out.update(eng.close())         # save the warm chains back
     print(json.dumps(out))
     for r in done[:3]:
         print(f"  req {r.uid}: {list(map(int, r.generated[:10]))}...")

@@ -204,6 +204,20 @@ def _maybe_remat(fn, policy: Optional[str]):
     return jax.checkpoint(fn, policy=pol)
 
 
+def _uniform_layers(cfg: ModelConfig, trunk: Params):
+    """The stacked-layer pytree the uniform (``pattern_period <= 1``)
+    scan runs over.  ``lax.scan`` takes its trip count from the leaf
+    axis-0 extent, so a params tree holding MORE stacked layers than
+    ``cfg.num_layers`` is sliced here, in-trace — which is what lets an
+    early-exit self-draft (``serving.spec_decode.make_self_draft``)
+    share the verify model's full trunk buffer by reference instead of
+    materialising a device copy of its first half."""
+    layers = trunk["layers"]
+    if jax.tree.leaves(layers)[0].shape[0] == cfg.num_layers:
+        return layers
+    return jax.tree.map(lambda a: a[:cfg.num_layers], layers)
+
+
 # ---------------------------------------------------------------------------
 # trunk forward (train / prefill without cache)
 # ---------------------------------------------------------------------------
@@ -215,7 +229,7 @@ def trunk_fwd(cfg: ModelConfig, trunk: Params, x, positions, *,
             return block_fwd(cfg, lp, h, positions, is_global=True,
                              use_flash=use_flash), None
         body = _maybe_remat(body, remat)
-        x, _ = lax.scan(body, x, trunk["layers"])
+        x, _ = lax.scan(body, x, _uniform_layers(cfg, trunk))
         return x
 
     def local_body(h, lp):
@@ -304,7 +318,8 @@ def trunk_decode(cfg: ModelConfig, trunk: Params, cache: Params, x, pos):
             lp, c = inp
             h, c2 = block_decode(cfg, lp, h, c, pos, is_global=True)
             return h, c2
-        x, new_c = lax.scan(body, x, (trunk["layers"], cache["layers"]))
+        x, new_c = lax.scan(body, x, (_uniform_layers(cfg, trunk),
+                                      cache["layers"]))
         return x, {"layers": new_c}
 
     def local_body(h, inp):
@@ -348,7 +363,8 @@ def trunk_decode_paged(cfg: ModelConfig, trunk: Params, cache: Params, x,
             h, c2 = block_decode_paged(cfg, lp, h, c, pos, block_tables,
                                        use_pallas)
             return h, c2
-        x, new_c = lax.scan(body, x, (trunk["layers"], cache["layers"]))
+        x, new_c = lax.scan(body, x, (_uniform_layers(cfg, trunk),
+                                      cache["layers"]))
         return x, {"layers": new_c}
 
     def local_body(h, inp):
@@ -408,7 +424,8 @@ def extend_paged(cfg: ModelConfig, params: Params, cache: Params, tokens,
             h, c2 = block_extend_paged(cfg, lp, h, pos, c, block_tables,
                                        valid_len)
             return h, c2
-        x, new_c = lax.scan(body, x, (trunk["layers"], cache["layers"]))
+        x, new_c = lax.scan(body, x, (_uniform_layers(cfg, trunk),
+                                      cache["layers"]))
         new_cache = {"layers": new_c}
     else:
         def local_body(h, inp):
@@ -459,7 +476,8 @@ def extend(cfg: ModelConfig, params: Params, cache: Params, tokens, pos,
 
     if cfg.pattern_period <= 1:
         x, new_c = lax.scan(make_body(True), x,
-                            (trunk["layers"], cache["layers"]))
+                            (_uniform_layers(cfg, trunk),
+                             cache["layers"]))
         new_cache = {"layers": new_c}
     else:
         def super_body(h, inp):
@@ -588,7 +606,7 @@ def prefill(cfg: ModelConfig, params: Params, tokens, max_len, *,
             h, kv = block_prefill(cfg, lp, h, positions, is_global=True,
                                   use_flash=use_flash)
             return h, kv
-        x, (ks, vs) = lax.scan(body, x, trunk["layers"])
+        x, (ks, vs) = lax.scan(body, x, _uniform_layers(cfg, trunk))
         cache = {"layers": jax.vmap(
             lambda k, v: _fill_global(cfg, B, max_len, k, v, n_full))(ks, vs)}
     else:
@@ -683,7 +701,7 @@ def prefill_paged(cfg: ModelConfig, params: Params, tokens, max_len,
                     cfg, lp, h, positions, pg, write_tables, ctx_tables,
                     ctx_len, use_flash=use_flash)
                 return h, pg2
-            x, pages = lax.scan(body, x, (trunk["layers"],
+            x, pages = lax.scan(body, x, (_uniform_layers(cfg, trunk),
                                           cache["layers"]))
             new_cache["layers"] = pages
         else:
@@ -691,7 +709,7 @@ def prefill_paged(cfg: ModelConfig, params: Params, tokens, max_len,
                 h, kv = block_prefill(cfg, lp, h, positions,
                                       is_global=True, use_flash=use_flash)
                 return h, kv
-            x, (ks, vs) = lax.scan(body, x, trunk["layers"])
+            x, (ks, vs) = lax.scan(body, x, _uniform_layers(cfg, trunk))
             rows = jax.vmap(lambda k, v: _fill_global(
                 cfg, B, max_len, k, v, n_full))(ks, vs)
             new_cache["layers"] = scatter_cache_rows(

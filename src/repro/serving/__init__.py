@@ -62,9 +62,16 @@ Admission semantics (the contract tests rely on)
   that nothing drops, MoE is bit-exact like every other family.
 * **Chunked prefill.** Prompts longer than the largest bucket prefill
   their first ``max(prefill_buckets)`` tokens, then catch up through the
-  shared batched decode wave (teacher-forced, one prompt token per step,
-  sampled outputs discarded) — long-prompt admission never stalls the
-  other tenants in the batch.
+  shared batched decode wave (teacher-forced, sampled outputs
+  discarded) — long-prompt admission never stalls the other tenants in
+  the batch.  With ``ServeConfig.chunked_prefill`` the bucketed call
+  disappears entirely for token-only requests: admission is pure
+  bookkeeping and the WHOLE prompt catches up as wave spans of up to
+  ``catch_chunk`` tokens, planned against decode/spec slots under the
+  ``wave_tokens`` per-wave budget (``core.scheduler.plan_wave``) —
+  Sarathi-style mixed waves, step-driven with no drain assumption
+  (``tests/test_engine_matrix.py`` gates the chunked axis
+  token-identical to a chunked dense vanilla engine).
 * **QoE admission order.** The queue is ranked by
   ``core.scheduler.admission_rank`` (fifo | priority | edf via
   ``ServeConfig.policy``) — the same policy definition the hub's

@@ -1,12 +1,51 @@
-"""Multi-tenant serving engine with continuous batching over a paged KV
-cache.
+"""Step-driven multi-tenant serving engine: continuous batching over a
+paged KV cache with no drain assumption.
 
-The EdgeAI-Hub's inference runtime: fixed-slot batched decode with
-per-slot positions (the per-sequence ``pos`` vector threads through
-``attention_decode``), batched bucketed admission, and eviction on
-EOS / length / preemption.  The hub's scheduler policy
-(``core.scheduler.admission_rank``) decides WHO is admitted next; this
-module executes it.
+The EdgeAI-Hub's inference runtime.  The unit of work is one
+``step()`` — admit, plan, one jitted wave, retire — and the engine
+makes progress with whatever frontier it has *right now*: requests
+arrive between any two steps (``submit``), leave between any two steps
+(``cancel``), and an always-on frontend (``launch.serve``) just loops
+``step()`` forever.  ``run_until_drained`` is a thin compatibility
+wrapper, not the execution model.
+
+Step-driven lifecycle (admit -> plan -> wave -> retire)
+-------------------------------------------------------
+* ADMIT — ``core.scheduler.admission_rank`` orders the queue (QoE
+  policies: fifo / priority / edf); capacity-aware admission binds
+  requests to free slots.  With ``ServeConfig.chunked_prefill`` a
+  token-only request skips bucketed prefill entirely: admission is
+  pure bookkeeping (``_admit_wave``) and the prompt becomes pending
+  catch-up tokens — its chunks are just more spans in the wave plan
+  (Sarathi-style), so a long prompt never blocks in-flight decodes
+  behind a monolithic prefill.  (Requests carrying extras — VLM image
+  embeds, enc-dec audio — still prefill the smallest bucket first,
+  since extras only enter the state through prefill.)
+* PLAN — each active slot gets a wave span ``(mode, width)``: ``spec``
+  (draft-backed verify of up to ``spec_gamma`` tokens), ``catch``
+  (teacher-forced prompt catch-up of up to ``catch_chunk`` tokens) or
+  ``plain`` (one decode token).  ``ServeConfig.wave_tokens`` is the
+  per-wave token budget: ``core.scheduler.plan_wave`` grants every
+  slot width >= 1 (liveness) and spends the rest best-rank-first, so
+  prefill chunks and decode share one budget under the same QoE
+  policy.  The plan is observable at ``engine.last_plan``
+  (``scripts/diagnose.py --server``).
+* WAVE — ONE jitted call executes the whole plan: mixed spec / catch /
+  plain spans ride a single ``model.extend_paged`` (or ``extend``)
+  wave; padded rows drop their writes.  Chunk boundaries and
+  budget-driven width changes are pure schedule: extend is bitwise
+  equal to sequential decode, so tokens never depend on the plan.
+* RETIRE — committed tokens land in ``Request.generated``; finished
+  slots return their pages to the radix cache (``_finish``), frontier
+  pages publish for in-flight sharing, and EOS / length / preemption /
+  cancellation free the slot for the next admit.
+
+Cancellation (``cancel(uid)``) mirrors ``_finish``: a live slot's
+pages below ``pos`` hold a valid chain and retire into the radix cache
+— published frontier pages keep their cache reference, so concurrent
+readers of the cancelled chain are untouched; queued or preempted
+requests free their detached state.  Zero pages leak in any phase
+(``tests/test_cancellation.py``).
 
 Paged KV (block-table decode contract)
 --------------------------------------
@@ -266,6 +305,7 @@ class Request:
     # filled by the engine:
     generated: list = field(default_factory=list)
     done: bool = False
+    cancelled: bool = False             # set by engine.cancel(uid)
     arrival: Optional[float] = None     # submission stamp (engine-set)
     saved_state: Optional[dict] = None  # KV snapshot from preemption
 
@@ -321,6 +361,31 @@ class ServeConfig:
     # past the largest bucket consume spec_gamma prompt tokens per
     # extend wave instead of 1 per decode step)
     spec_gamma: int = 4
+    # ---- step-driven wave plan (Sarathi-style chunked prefill) ----
+    # chunked_prefill=True admits prompts as WAVE SPANS: a new
+    # request's prompt enters through the same extend wave the decode
+    # slots ride (no blocking bucketed prefill call at all for
+    # token-only requests; requests carrying extras — VLM images,
+    # enc-dec audio — still prefill one minimal bucket first, since
+    # embeddings can only enter through prefill).  Prompt chunking is a
+    # pure schedule change on extend-capable configs (extend is
+    # bit-identical to sequential decode), but prefill and extend only
+    # agree to float tolerance — so a chunked engine's tokens match a
+    # chunked reference, not a prefill-admitted one.
+    chunked_prefill: bool = False
+    # max prompt tokens one catch-up slot consumes per extend wave
+    # (None -> spec_gamma); raises the static extend width to
+    # max(spec_gamma, catch_chunk)
+    catch_chunk: Optional[int] = None
+    # per-wave token budget across the live admit/decode frontier
+    # (core.scheduler.plan_wave ranks slots by the admission policy and
+    # shrinks catch-up / speculative widths to fit; every active slot
+    # is always granted >= 1 token).  None = unbudgeted.
+    wave_tokens: Optional[int] = None
+    # prefix-cache admission floor: a radix match shorter than this
+    # many tokens is treated as a miss (a 1-token accidental hit would
+    # CoW-fork a page for near-zero reuse).  1 = accept any hit.
+    min_match_tokens: int = 1
 
 
 class EdgeServingEngine:
@@ -377,8 +442,9 @@ class EdgeServingEngine:
         # change behaviour
         self.sharable = bool(self.paged and scfg.prefix_cache
                              and M.prefix_sharable(cfg))
-        self.prefix_cache = (RadixPrefixCache(self.pool, bs)
-                             if self.sharable else None)
+        self.prefix_cache = (RadixPrefixCache(
+            self.pool, bs, min_match_tokens=scfg.min_match_tokens)
+            if self.sharable else None)
         # persistence: chains evicted under pressure are spilled to the
         # host (page bytes captured BEFORE the pool reclaims them) and
         # merged into the close()-time store; a store left by a previous
@@ -402,10 +468,20 @@ class EdgeServingEngine:
         # gemma-pattern local rings additionally need the chunk to fit
         # the window
         W = min(cfg.local_window, T)
+        # static extend-wave width: gamma for speculation, or the
+        # catch-up chunk if larger (chunked prefill wants wide catch
+        # spans; at most two jit variants compile either way)
+        self.K = max(scfg.spec_gamma, scfg.catch_chunk or 0)
         self.extend_ok = bool(M.extendable(cfg)
-                              and scfg.spec_gamma >= 2
+                              and self.K >= 2
                               and (cfg.pattern_period <= 1
-                                   or scfg.spec_gamma <= W))
+                                   or self.K <= W))
+        # Sarathi-style admission: prompts become wave spans (pending
+        # catch-up from position 0 / the prefix-hit frontier) instead
+        # of a blocking bucketed prefill.  Recurrent families with no
+        # extend wave still honour the flag — their catch-up rides the
+        # plain decode wave one token per step.
+        self.chunked = bool(scfg.chunked_prefill)
         # speculative decoding: draft model + acceptance loop.  Engages
         # only where a rejected run can roll back exactly
         # (model.spec_decodable — mirrors the prefix_cache gate);
@@ -463,6 +539,14 @@ class EdgeServingEngine:
         self._prefills: dict[tuple, Callable] = {}
         self.steps = 0
         self.completed: list[Request] = []
+        self.cancelled: list[Request] = []
+        # step-driven observability: the last wave's per-slot plan
+        # (mode, width) and how often prompt chunks actually interleave
+        # with decode/spec slots in one wave
+        self.last_plan: dict[int, tuple] = {}
+        self.mixed_waves = 0
+        self.wave_admitted = 0      # requests admitted as wave spans
+        self.cancels = 0
         # observability: paged-admission effectiveness + pressure events
         self.peak_active = 0
         self.peak_pool_used = 0
@@ -664,11 +748,26 @@ class EdgeServingEngine:
         req._ctx_blocks, req._ctx_len = [], 0
 
     # -- paged-pool bookkeeping ----------------------------------------
+    def _first_span(self, req: Request, suffix_len: int) -> int:
+        """Tokens the request's FIRST admission step covers: the full
+        bucketed prefill normally; under chunked_prefill just the first
+        wave span (the extend chunk width, or one decode token on
+        recurrent families) — extras-carrying requests still prefill,
+        but only the smallest bucket."""
+        if self.chunked:
+            if req.extras:
+                return min(suffix_len, self.scfg.prefill_buckets[0])
+            return min(suffix_len, self.K if self.extend_ok else 1)
+        return min(suffix_len, self.scfg.prefill_buckets[-1])
+
     def _blocks_needed(self, req: Request) -> int:
         """New pool blocks this request needs to be admitted NOW (the
-        prompt's pages + one covering the first decode write; resumed
-        requests already hold pages for [0, pos), prefix-cache hits
-        already hold the shared chain's pages)."""
+        first admission span's pages + one covering the next write;
+        resumed requests already hold pages for [0, pos), prefix-cache
+        hits already hold the shared chain's pages).  Chunked-prefill
+        admission reserves only the first wave's span — later chunks
+        allocate wave by wave (preempt-or-queue backstops a pool that
+        fills in between)."""
         if not self.paged:
             return 0
         bs = self.block_size
@@ -683,9 +782,9 @@ class EdgeServingEngine:
             # because admission CoW-forks it (the fork's alloc draws
             # one page from the free list)
             suffix = len(req.prompt) - (L - self._prefix)
-            n1 = min(suffix, self.scfg.prefill_buckets[-1])
+            n1 = self._first_span(req, suffix)
             return blocks_for_tokens(L + n1 + 1, bs) - L // bs
-        n1 = min(len(req.prompt), self.scfg.prefill_buckets[-1])
+        n1 = self._first_span(req, len(req.prompt))
         return blocks_for_tokens(self._prefix + n1 + 1, bs)
 
     def _reserve(self, n: int) -> bool:
@@ -740,6 +839,39 @@ class EdgeServingEngine:
         # (re-publishing would only dedup, but skip the wasted walks)
         self.slot_published[slot] = int(st.get("published", 0))
 
+    def _admit_wave(self, req: Request, slot: int) -> None:
+        """Chunked-prefill admission: NO prefill call — the prompt (or
+        the unmatched suffix after a radix hit) becomes the slot's
+        pending span and is consumed through the same decode/extend
+        waves every other slot rides, ``_first_span`` tokens per wave.
+        Shared context pages attach exactly as the prefill path would;
+        the first wave's ``_ensure_blocks``/``_cow_guard`` allocate
+        fresh pages and CoW-fork a partially-matched tail page on
+        demand.  The first generated token is sampled from the wave row
+        that consumes the last prompt token (the existing catch-up
+        retirement), so admission never blocks in-flight decoders."""
+        L = getattr(req, "_ctx_len", 0)
+        if self.paged:
+            ctx = getattr(req, "_ctx_blocks", None) or []
+            self._set_table(slot, list(ctx))
+        req._ctx_blocks, req._ctx_len = [], 0
+        suffix = np.asarray(req.prompt, np.int32)[max(0, L - self._prefix):]
+        if self.spec is not None:
+            # the draft still prefills the full prompt (it is cheap and
+            # never chunks) so the slot is draft-complete by the time
+            # its prompt is consumed — same contract as bucketed
+            # catch-up admission
+            self.spec.admit_group([req], [slot])
+        self.pos[slot] = L
+        self.tokens[slot, 0] = int(suffix[0])
+        self.pending[slot] = suffix[1:]
+        self._place(req, slot)
+        # the matched prefix is already indexed (that is what we hit) —
+        # publication resumes from its page boundary
+        self.slot_published[slot] = (L // self.block_size
+                                     * self.block_size)
+        self.wave_admitted += 1
+
     @staticmethod
     def _pow2(n: int) -> int:
         return 1 << (n - 1).bit_length() if n > 1 else n
@@ -793,9 +925,12 @@ class EdgeServingEngine:
             if req.saved_state is not None:
                 self._admit_resumed(req, slot)
                 continue
+            if self.chunked and not req.extras:
+                self._admit_wave(req, slot)
+                continue
             L = getattr(req, "_ctx_len", 0)
-            n1 = min(len(req.prompt) - max(0, L - self._prefix),
-                     self.scfg.prefill_buckets[-1])
+            n1 = self._first_span(
+                req, len(req.prompt) - max(0, L - self._prefix))
             bucket = self._bucket(n1)
             sig = tuple(sorted(
                 (k, np.asarray(v).shape) for k, v in req.extras.items()))
@@ -1077,23 +1212,97 @@ class EdgeServingEngine:
                    and self.pending[s].size
                    for s in range(self.scfg.max_slots))
 
-    def step(self) -> int:
-        """Admit queued requests into free slots, then one wave.
+    def _apply_budget(self, plan: dict) -> dict:
+        """Wave-token budget: shrink catch-up / speculative widths so
+        the wave's total fed tokens fit ``ServeConfig.wave_tokens``,
+        granting best-QoE-rank first (``core.scheduler.plan_wave``;
+        every slot keeps width >= 1 — liveness).  Width is a pure
+        schedule lever: shrinking a span never changes the tokens a
+        request emits, so QoE shaping here cannot cause token drift."""
+        if self.scfg.wave_tokens is None or not plan:
+            return plan
+        from repro.core.scheduler import plan_wave
+        entries = []
+        for s, (mode, want) in plan.items():
+            r = self.slot_req[s]
+            entries.append({"id": s, "want": want, "priority": r.priority,
+                            "arrival": r.arrival, "deadline": r.deadline,
+                            "uid": r.uid})
+        widths = plan_wave(self.scfg.policy, entries,
+                           self.scfg.wave_tokens)
+        out = {}
+        for s, (mode, want) in plan.items():
+            v = min(want, widths[s])
+            if mode == "spec" and v < 2:
+                # a 1-wide speculative round is just a decode
+                mode, v = "plain", 1
+            out[s] = (mode, v)
+        return out
 
-        A speculative engine always runs the extend wave (draft gamma
-        proposals -> one multi-token verify); a vanilla extend-capable
-        engine switches to it only while some slot is catching up a
-        long prompt (multi-token chunked prefill) and runs the plain
-        one-token decode wave otherwise.  Returns the number of active
-        slots that were stepped.
+    def _record_plan(self, plan: dict) -> None:
+        """Wave-plan observability: keep the committed plan
+        (``last_plan``, read by ``scripts/diagnose.py --server``) and
+        count waves where a prompt chunk actually interleaved with a
+        decoding/speculating slot — the Sarathi property the open-loop
+        benchmark gates on."""
+        self.last_plan = dict(plan)
+        modes = {m for m, _ in plan.values()}
+        if "catch" in modes and len(modes) > 1:
+            self.mixed_waves += 1
+
+    def step(self) -> int:
+        """ONE step of the always-on serving core — no drain
+        assumption; an asyncio frontend (``launch.serve``) calls this
+        forever, interleaving arrivals and cancellations between waves:
+
+        * **admit** — rank the queue (``admission_rank``), place what
+          fits (capacity-aware); under ``chunked_prefill`` a prompt
+          becomes a pending wave span instead of a blocking bucketed
+          prefill (``_admit_wave``);
+        * **plan** — pick the wave type (multi-token extend while any
+          slot speculates or catches up, one-token decode otherwise)
+          and per-slot widths, budgeted by ``wave_tokens``
+          (``_apply_budget`` -> ``core.scheduler.plan_wave``);
+        * **wave** — ONE jitted device call for every active slot;
+        * **retire** — sample/accept per slot, finish on EOS / budget /
+          room, publish in-flight prefix frontiers.
+
+        Pool-wedge recovery is part of the step contract: when nothing
+        stepped but requests are queued and every page is held by
+        detached (preempted) requests, the worst-ranked holder is
+        force-reclaimed so an always-on loop cannot spin idle.  Returns
+        the number of active slots stepped (0 = idle).
         """
         self._admit_batch()
         if self.extend_ok and (self.spec is not None
                                or self._has_pending()):
-            return self._extend_step()
+            stepped = self._extend_step()
+        else:
+            stepped = self._decode_wave()
+        if (stepped == 0 and self.paged and self.queue
+                and not self.active.any()):
+            # requests requeued by _ensure_blocks mid-step (after this
+            # step's admission pass) may need zero new pages — give
+            # admission one more look before reclaiming
+            self._admit_batch()
+            if not self.active.any():
+                # every queued request is blocked on pool pages held
+                # by detached requests: force-reclaim the worst one
+                self._reclaim()
+        return stepped
+
+    def _decode_wave(self) -> int:
+        """The plain one-token wave: plan is implicit (every active
+        slot has width 1; slots still consuming a prompt on a
+        non-extendable family teacher-force one pending token)."""
         if self.paged:
             self._ensure_blocks()
             self._cow_guard()
+        self._record_plan({
+            s: (("catch", 1) if (self.pending[s] is not None
+                                 and self.pending[s].size) else
+                ("plain", 1))
+            for s in range(self.scfg.max_slots) if self.active[s]})
         n_active = int(self.active.sum())
         if n_active == 0:
             return 0
@@ -1168,7 +1377,8 @@ class EdgeServingEngine:
         from repro.serving.spec_decode import (accept_greedy,
                                                accept_proposals,
                                                sample_from_logits)
-        B, K = self.scfg.max_slots, self.scfg.spec_gamma
+        B, K = self.scfg.max_slots, self.K
+        gamma = self.scfg.spec_gamma
         eos = self.scfg.eos_id
         plan: dict[int, tuple] = {}
         for s in range(B):
@@ -1179,15 +1389,17 @@ class EdgeServingEngine:
             room = self.scfg.max_len - 1 - int(self.pos[s])
             if npend:
                 plan[s] = ("catch", max(1, min(1 + npend, K, room)))
-            elif self.spec is not None and min(K, room) >= 2:
-                plan[s] = ("spec", min(K, room))
+            elif self.spec is not None and min(gamma, room) >= 2:
+                plan[s] = ("spec", min(gamma, room))
             else:
                 plan[s] = ("plain", 1)
+        plan = self._apply_budget(plan)
         if self.paged:
             spans = {s: v for s, (_, v) in plan.items()}
             self._ensure_blocks(spans)
             self._cow_guard(spans)
             plan = {s: p for s, p in plan.items() if self.active[s]}
+        self._record_plan(plan)
         n_active = int(self.active.sum())
         if n_active == 0:
             return 0
@@ -1199,9 +1411,13 @@ class EdgeServingEngine:
         spec_slots = [s for s, (m, _) in plan.items() if m == "spec"]
         proposals, dists = {}, {}
         if spec_slots:
+            # draft only as wide as the widest planned spec span — a
+            # budget-shrunk round must not burn draft steps it cannot
+            # verify
+            k_spec = max(v for s, (m, v) in plan.items() if m == "spec")
             proposals, dists = self.spec.propose(
                 spec_slots, self.tokens[:, 0], self.temps, self.topks,
-                K, self._rng)
+                k_spec, self._rng)
 
         fed = np.zeros((B, K), np.int32)
         valid = np.ones((B,), np.int32)
@@ -1526,6 +1742,9 @@ class EdgeServingEngine:
             "exhaust_preempts": self.exhaust_preempts,
             "reclaims": self.reclaims,
             "cow_forks": self.cow_forks,
+            "mixed_waves": self.mixed_waves,
+            "wave_admitted": self.wave_admitted,
+            "cancels": self.cancels,
         }
         if self.paged:
             self.pool.assert_consistent()
@@ -1559,6 +1778,57 @@ class EdgeServingEngine:
                     persist_rejected=self.persist_rejected,
                 )
         return out
+
+    # ------------------------------------------------------------------
+    def cancel(self, uid: int) -> bool:
+        """Abort a request mid-flight — queued, preempted-and-detached,
+        mid-catch-up, mid-speculation or plain decoding.  Returns True
+        when the request was found (it is marked ``cancelled`` + ``done``
+        and moved to ``self.cancelled``, never ``completed``).
+
+        KV semantics mirror ``_finish``: a live slot's pages below
+        ``pos`` hold a fully valid chain and retire into the radix
+        cache (published frontier pages keep their cache reference, so
+        in-flight readers of the cancelled chain are untouched);
+        non-sharable configs free everything.  A stale draft row needs
+        no cleanup (re-admission rewrites it), and no wave ever sees
+        the slot again — cancellation between waves can never roll back
+        tokens already delivered.
+        """
+        for i, req in enumerate(self.queue):
+            if req.uid != uid:
+                continue
+            self.queue.pop(i)
+            if self.sharable:
+                self._release_ctx(req)       # drop a pinned hit chain
+            st = req.saved_state
+            if st is not None:
+                req.saved_state = None
+                if self.paged:
+                    self.pool.free(st.get("blocks", ()))
+            self._mark_cancelled(req)
+            return True
+        for s in range(self.scfg.max_slots):
+            req = self.slot_req[s]
+            if not self.active[s] or req is None or req.uid != uid:
+                continue
+            self.active[s] = False
+            self.slot_req[s] = None
+            self.pending[s] = None
+            self.slot_published[s] = 0
+            if self.paged:
+                self._retire_chain(req, self.slot_blocks[s],
+                                   int(self.pos[s]))
+                self._set_table(s, [])
+            self._mark_cancelled(req)
+            return True
+        return False
+
+    def _mark_cancelled(self, req: Request) -> None:
+        req.done = True
+        req.cancelled = True
+        self.cancelled.append(req)
+        self.cancels += 1
 
     # ------------------------------------------------------------------
     def preempt(self, slot: int) -> Optional[Request]:
@@ -1626,24 +1896,13 @@ class EdgeServingEngine:
         self.reclaims += 1
 
     def drain_step(self) -> int:
-        """One ``step()`` plus the pool-wedge recovery — the unit of
-        progress ``run_until_drained`` iterates.  External drain loops
-        that need per-step observability (benchmarks capturing TTFT)
-        must use this, not bare ``step()``, or a pool wedged by
-        detached holders spins them forever."""
+        """One ``step()`` with the pool accounting invariant re-checked
+        after it — the unit of progress ``run_until_drained`` iterates
+        (pool-wedge recovery now lives in ``step()`` itself, so bare
+        ``step()`` loops — the asyncio frontend — are equally live)."""
         stepped = self.step()
         if self.paged:
             self.pool.assert_consistent()   # accounting drift backstop
-        if (stepped == 0 and self.paged and self.queue
-                and not self.active.any()):
-            # requests requeued by _ensure_blocks mid-step (after this
-            # step's admission pass) may need zero new pages — give
-            # admission one more look before reclaiming
-            self._admit_batch()
-            if not self.active.any():
-                # every queued request is blocked on pool pages held
-                # by detached requests: force-reclaim the worst one
-                self._reclaim()
         return stepped
 
     def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:

@@ -116,10 +116,16 @@ class RadixPrefixCache:
     """
 
     def __init__(self, pool: KVBlockPool, block_size: Optional[int] = None,
-                 on_evict: Optional[Callable] = None):
+                 on_evict: Optional[Callable] = None,
+                 min_match_tokens: int = 1):
         self.pool = pool
         self.block_size = int(block_size or pool.block_size)
         self.on_evict = on_evict
+        # admission floor: a match shorter than this many tokens is
+        # reported as a MISS (a 1-token accidental hit makes the caller
+        # CoW-fork a page for near-zero reuse).  1 accepts any hit.
+        self.min_match_tokens = max(1, int(min_match_tokens))
+        self.short_matches = 0        # matches rejected by the floor
         # roots per namespace: extras-digest -> top-level node
         self._roots: dict[int, _Node] = {}
         self._clock = itertools.count(1)
@@ -190,6 +196,11 @@ class RadixPrefixCache:
         if max_tokens is not None and matched > max_tokens:
             matched = max_tokens
         blocks = blocks[:blocks_for_tokens(matched, bs)]
+        if 0 < matched < self.min_match_tokens:
+            # below the admission floor: no refcounts taken, no LRU
+            # stamp — the caller proceeds exactly as on a cold miss
+            self.short_matches += 1
+            matched = 0
         if matched == 0:
             self.misses += 1
             return [], 0
@@ -395,6 +406,7 @@ class RadixPrefixCache:
             "evicted_blocks": self.evicted_blocks,
             "inserted_blocks": self.inserted_blocks,
             "replaced_blocks": self.replaced_blocks,
+            "short_matches": self.short_matches,
         }
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid

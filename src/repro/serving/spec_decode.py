@@ -52,9 +52,9 @@ model's alone.  The VERIFY model, by contrast, must satisfy
 Self-draft mode (``ServeConfig.draft_arch="self"``) follows the
 early-exit pillar (``core.earlyexit``): the draft is the verify model's
 own first ``n`` layers under an exit head — no separately trained
-model resident on the hub (embeddings shared by reference; the sliced
-half-trunk is currently a one-time device copy, see
-``make_self_draft``).
+model resident on the hub (embeddings AND the stacked trunk buffer are
+shared by reference — zero duplicate device bytes; the trunk scan
+slices its trip count in-trace, see ``make_self_draft``).
 """
 from __future__ import annotations
 
@@ -160,11 +160,13 @@ def accept_proposals(proposals, draft_dists, verify_logits: np.ndarray,
 def make_self_draft(cfg: ModelConfig, params: Params,
                     exit_layers: int = 0, key=None):
     """Self-draft: the verify model's first ``exit_layers`` layers under
-    an early-exit head (``core.earlyexit.init_exit_heads``).  The
-    embedding/unembedding tables are shared by reference; the sliced
-    trunk stack is a one-time device copy of the first ``exit_layers``
-    layers (a buffer-sharing slice-free variant is a ROADMAP
-    follow-up).  Every model entry point (prefill / decode_step) works
+    an early-exit head (``core.earlyexit.init_exit_heads``).  SLICE-
+    FREE: the draft params reference the verify model's embedding
+    tables AND its full stacked trunk buffer — zero duplicate device
+    bytes; the draft config's smaller ``num_layers`` makes the trunk
+    scan slice its trip count in-trace
+    (``transformer._uniform_layers``), so only the exit head's norm is
+    new memory.  Every model entry point (prefill / decode_step) works
     on the result unchanged.
 
     Supported for uniform dense/vlm stacks (``pattern_period <= 1``,
@@ -184,8 +186,7 @@ def make_self_draft(cfg: ModelConfig, params: Params,
     heads = init_exit_heads(cfg, key if key is not None
                             else jax.random.PRNGKey(0), [e - 1])
     draft_params = dict(params)
-    draft_params["trunk"] = {"layers": jax.tree.map(
-        lambda a: a[:e], params["trunk"]["layers"])}
+    draft_params["trunk"] = params["trunk"]     # full stack, BY REFERENCE
     draft_params["final_norm"] = heads["exits"][0]["ln"]
     return cfg.replace(name=f"{cfg.name}-selfdraft@{e}", num_layers=e), \
         draft_params

@@ -1,0 +1,145 @@
+"""Mid-flight cancellation: zero leaked pages in every engine phase.
+
+Contract under test (``EdgeServingEngine.cancel``): a request can be
+aborted while queued, preempted-and-detached, mid-catch-up, mid-spec
+round, or after its frontier pages were published into the radix
+cache.  In every case the pool stays consistent with zero leaked
+pages, the request lands in ``engine.cancelled`` (never ``completed``),
+and already-published chain pages stay readable — a later
+same-prefix request still hits.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.serving import EdgeServingEngine, Request, ServeConfig
+
+ARCH = "phi3-medium-14b"        # sharable + spec-decodable smoke arch
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config(ARCH)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _scfg(**kw):
+    base = dict(max_slots=2, max_len=96, prefill_buckets=(8, 16), seed=13)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+def _req(uid, n=6, **kw):
+    rng = np.random.default_rng(200 + uid)
+    kw.setdefault("max_new_tokens", 8)
+    return Request(uid=uid, prompt=rng.integers(0, 64, n, dtype=np.int32),
+                   **kw)
+
+
+def _assert_no_leak(eng):
+    cached = eng.prefix_cache.num_blocks if eng.prefix_cache else 0
+    assert eng.pool.num_free + cached == eng.pool.num_blocks
+    eng.pool.assert_consistent()
+
+
+def _drain(eng):
+    while eng.queue or eng.active.any():
+        eng.step()
+
+
+def test_cancel_during_catchup(setup):
+    """Abort a chunk-admitted request while its prompt is still being
+    consumed wave by wave (pending tokens outstanding)."""
+    cfg, params = setup
+    eng = EdgeServingEngine(cfg, params,
+                            _scfg(chunked_prefill=True, catch_chunk=4))
+    eng.submit(_req(0, n=40, max_new_tokens=8))
+    eng.step()
+    slot = next(s for s in range(eng.scfg.max_slots)
+                if eng.slot_req[s] is not None)
+    assert eng.pending[slot] is not None     # mid-catch-up
+    assert eng.cancel(0)
+    assert not eng.active.any()
+    _assert_no_leak(eng)
+    r = eng.cancelled[0]
+    assert r.cancelled and r.done and r not in eng.completed
+    # the engine keeps serving after the abort
+    eng.submit(_req(1, max_new_tokens=3))
+    _drain(eng)
+    assert len(eng.completed) == 1
+    _assert_no_leak(eng)
+
+
+def test_cancel_during_spec_round(setup):
+    """Abort between speculation rounds; the stale draft row needs no
+    cleanup and the verifier chain retires without a leak."""
+    cfg, params = setup
+    eng = EdgeServingEngine(cfg, params,
+                            _scfg(spec_decode=True, draft_arch="self",
+                                  spec_gamma=4))
+    eng.submit(_req(0, max_new_tokens=48))
+    while eng.stats()["spec_rounds"] < 2:
+        eng.step()
+    assert eng.cancel(0)
+    _assert_no_leak(eng)
+    assert eng.cancelled[0].cancelled
+    eng.submit(_req(1, max_new_tokens=4))
+    _drain(eng)
+    assert eng.stats()["spec_rounds"] >= 2
+    _assert_no_leak(eng)
+
+
+def test_cancel_with_published_frontier_keeps_chain_readable(setup):
+    """Pages published into the radix cache mid-decode survive the
+    producer's cancellation: a later request with the same prefix
+    still hits the shared chain."""
+    cfg, params = setup
+    eng = EdgeServingEngine(cfg, params, _scfg())
+    bs = eng.block_size
+    sys_prompt = np.arange(1, 2 * bs + 1, dtype=np.int32)  # 2 full pages
+    eng.submit(Request(uid=0, prompt=sys_prompt.copy(), max_new_tokens=48))
+    while eng.slot_published[0] < 2 * bs:    # frontier published
+        eng.step()
+    hits_before = eng.stats()["prefix_hits"]
+    assert eng.cancel(0)
+    _assert_no_leak(eng)
+    tail = np.array([7, 9, 11], dtype=np.int32)
+    eng.submit(Request(uid=1, prompt=np.concatenate([sys_prompt, tail]),
+                       max_new_tokens=4))
+    _drain(eng)
+    assert eng.stats()["prefix_hits"] > hits_before
+    _assert_no_leak(eng)
+
+
+def test_cancel_queued_request(setup):
+    cfg, params = setup
+    eng = EdgeServingEngine(cfg, params, _scfg(max_slots=1))
+    eng.submit(_req(0, max_new_tokens=12))
+    eng.submit(_req(1, max_new_tokens=12))   # waits in queue
+    eng.step()
+    assert eng.cancel(1)                     # still queued
+    assert not eng.cancel(999)               # unknown uid
+    _drain(eng)
+    assert {r.uid for r in eng.completed} == {0}
+    assert {r.uid for r in eng.cancelled} == {1}
+    assert eng.stats()["cancels"] == 1
+    _assert_no_leak(eng)
+
+
+def test_cancel_preempted_request_frees_detached_pages(setup):
+    """A preempted request carries its KV pages detached in
+    ``saved_state``; cancelling it from the queue frees them."""
+    cfg, params = setup
+    eng = EdgeServingEngine(cfg, params, _scfg(max_slots=1))
+    eng.submit(_req(0, max_new_tokens=24))
+    for _ in range(3):
+        eng.step()
+    req = eng.preempt(0)
+    assert req is not None and req.saved_state is not None
+    eng.submit(req)                          # back in queue, detached
+    assert eng.cancel(0)
+    assert req.saved_state is None
+    _assert_no_leak(eng)

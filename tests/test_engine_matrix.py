@@ -103,3 +103,61 @@ def test_feature_combo_matches_dense_vanilla(setup, paged, prefix, spec,
         assert eng.prefix_cache is None      # cache gates off with pages
     if spec:
         assert eng.spec is not None and stats["spec_rounds"] >= 1, stats
+
+
+# ---------------------------------------------------------------------------
+# chunked-prefill interleave axis
+# ---------------------------------------------------------------------------
+# Chunked prompt consumption is config-deterministic but NOT bit-equal
+# to monolithic bucketed prefill at f32 (a prompt split across
+# prefill(k)+extend(rest) accumulates differently, ~2e-6 max logit
+# diff), so the chunked combos gate against a dense vanilla reference
+# that chunks with the IDENTICAL wave config — tokens must then match
+# exactly: extend is bitwise-equal to sequential decode, so chunk
+# boundaries and budget-driven width variation are pure schedule.
+
+CHUNK_WAVE = dict(chunked_prefill=True, catch_chunk=6, wave_tokens=14)
+
+
+@pytest.fixture(scope="module")
+def setup_chunked(setup):
+    cfg, params, _ = setup
+    ref = EdgeServingEngine(cfg, params, ServeConfig(
+        max_slots=3, max_len=96, prefill_buckets=(8, 16, 32), seed=3,
+        paged=False, prefix_cache=False, spec_decode=False, policy="fifo",
+        **CHUNK_WAVE))
+    for r in _traffic(cfg.vocab_size):
+        ref.submit(r)
+    ref.run_until_drained()
+    reference = {r.uid: tuple(r.generated) for r in ref.completed}
+    assert len(reference) == 7
+    assert ref.stats()["wave_admitted"] >= 1    # chunk path exercised
+    return reference
+
+
+@pytest.mark.parametrize("paged,prefix,spec,pallas,policy", COMBOS)
+def test_chunked_interleave_matches_chunked_dense(setup, setup_chunked,
+                                                  paged, prefix, spec,
+                                                  pallas, policy):
+    """Same 8 combos with prompts admitted as wave spans interleaved
+    with decode under a shared per-wave token budget."""
+    cfg, params, _ = setup
+    reference = setup_chunked
+    eng = EdgeServingEngine(cfg, params, ServeConfig(
+        max_slots=3, max_len=96, prefill_buckets=(8, 16, 32), seed=3,
+        paged=paged, prefix_cache=prefix, spec_decode=spec,
+        draft_arch="self", use_pallas_paged=pallas, policy=policy,
+        **CHUNK_WAVE))
+    for r in _traffic(cfg.vocab_size):
+        eng.submit(r)
+    eng.run_until_drained()
+    got = {r.uid: tuple(r.generated) for r in eng.completed}
+    assert got == reference, (
+        f"token drift vs chunked dense vanilla for paged={paged} "
+        f"prefix={prefix} spec={spec} pallas={pallas} policy={policy}")
+    stats = eng.stats()
+    assert stats["wave_admitted"] >= 1
+    assert stats["mixed_waves"] >= 1            # prefill rode a decode wave
+    if paged:
+        cached = eng.prefix_cache.num_blocks if eng.prefix_cache else 0
+        assert eng.pool.num_free + cached == eng.pool.num_blocks

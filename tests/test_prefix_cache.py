@@ -68,6 +68,25 @@ def test_match_is_token_granular():
     pool.assert_consistent()
 
 
+def test_min_match_tokens_admission_floor():
+    """Matches shorter than ``min_match_tokens`` are refused: counted
+    as misses, no refcounts taken, no LRU stamp — a too-short overlap
+    must not pin pages or shadow a colder-but-longer chain."""
+    pool = KVBlockPool(32, BS)
+    cache = RadixPrefixCache(pool, min_match_tokens=8)
+    b = pool.alloc(4)
+    cache.insert(_key(*range(16)), b)
+    got, n = cache.match(_key(*range(4), 90, 91), max_tokens=6)
+    assert got == [] and n == 0                  # 4-token overlap < floor
+    assert all(pool.refcount(x) == 1 for x in b)  # cache ref only
+    assert cache.stats()["short_matches"] == 1
+    got, n = cache.match(_key(*range(16)), max_tokens=16)
+    assert n == 16 and got == b                  # at/above floor: real hit
+    pool.free(got)
+    assert cache.stats()["short_matches"] == 1   # hits don't count
+    pool.assert_consistent()
+
+
 def test_partial_tail_is_indexed_and_upgraded():
     """A chain whose length is not a page multiple retires WITH its
     partial tail page; a longer chain extending it replaces that page

@@ -266,13 +266,28 @@ def test_spec_gated_off_on_local_ring_verify():
 
 
 def test_self_draft_shares_weights():
-    """Self-draft is a view: first-half layers + exit head, embeddings
-    by reference (zero extra resident params beyond the head norm)."""
+    """Self-draft is a view: exit-head norm aside, EVERY draft leaf —
+    embeddings, unembed, and the full stacked trunk — is the verify
+    model's own device buffer (zero duplicate device bytes; the trunk
+    scan slices its trip count in-trace from the draft config)."""
     cfg = _cfg("phi3-medium-14b")
     params = _params(cfg)
     dcfg, dparams = make_self_draft(cfg, params, key=jax.random.PRNGKey(0))
     assert dcfg.num_layers == max(1, cfg.num_layers // 2)
     assert dparams["embed"]["table"] is params["embed"]["table"]
+    for a, b in zip(jax.tree.leaves(dparams["trunk"]),
+                    jax.tree.leaves(params["trunk"])):
+        assert a is b, "self-draft trunk leaf is a copy, not a view"
+    for a, b in zip(jax.tree.leaves(dparams["unembed"]),
+                    jax.tree.leaves(params["unembed"])):
+        assert a is b
+    # and the sliced-scan draft still runs: one decode step emits sane
+    # logits at the draft's layer count, reading the shared buffer
+    dcache = M.init_cache(dcfg, 1, 16)
+    logits, _ = M.decode_step(dcfg, dparams, dcache,
+                              np.zeros((1, 1), np.int32), 0)
+    assert logits.shape[-1] == cfg.vocab_size
+    assert bool(np.isfinite(np.asarray(logits)).all())
     with pytest.raises(ValueError, match="self-draft"):
         make_self_draft(get_smoke_config("gemma3-1b"),
                         _params(get_smoke_config("gemma3-1b")))
