@@ -21,8 +21,8 @@ from repro.kernels import ops
 
 
 def _time(fn, *args, reps=3):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    # one warm-up call (compile), blocked on whatever pytree it returns
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
@@ -39,6 +39,28 @@ def bench():
     us_q = _time(lambda a: ops.quant_matmul(a, wq, sc), x)
     us_d = _time(lambda a: a @ w.astype(jnp.bfloat16), x)
     out.append(("quant.kernel_int8_us", us_q, us_q / max(us_d, 1e-9)))
+
+    # --- fused dequant paged attention (the serving read path) ---------
+    # int8 pages + per-row scales streamed straight into the flash loop
+    # vs the same kernel on f32 pages: the HBM-traffic win the paged
+    # engine sees per decode step at quant_kv="int8".
+    B, H, K, hd, nB, bs, n_blk = 4, 8, 2, 64, 32, 16, 8
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
+    kf = jax.random.normal(ks[1], (nB, bs, K, hd), jnp.float32)
+    vf = jax.random.normal(ks[2], (nB, bs, K, hd), jnp.float32)
+    from repro.models import layers as L
+    kq8, ksc = L.quantize_kv(kf)
+    vq8, vsc = L.quantize_kv(vf)
+    bt = jnp.arange(B * n_blk, dtype=jnp.int32).reshape(B, n_blk)
+    pos = jnp.full((B,), bs * n_blk - 1, jnp.int32)
+    scale = hd ** -0.5
+    us_fq = _time(lambda a: ops.paged_attention(
+        a, kq8, vq8, bt, pos, scale=scale, k_scale=ksc, v_scale=vsc), q)
+    us_ff = _time(lambda a: ops.paged_attention(
+        a, kf, vf, bt, pos, scale=scale), q)
+    out.append(("quant.paged_dequant_attn_us", us_fq,
+                us_fq / max(us_ff, 1e-9)))
 
     # --- device-tier model: the paper's cross-SoC gap ------------------
     t0 = time.perf_counter()

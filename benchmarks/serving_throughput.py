@@ -90,7 +90,14 @@ EXACT_FIELDS = ("requests", "decode_steps", "tokens", "peak_active",
                 "openloop_requests", "openloop_tokens",
                 "openloop_stall_tokens", "openloop_interleave_tokens",
                 "openloop_stall_steps", "openloop_interleave_steps",
-                "openloop_interleave_beats_stall")
+                "openloop_interleave_beats_stall",
+                # int8 KV capacity: same pool BYTES, more pages, more
+                # concurrent tenants — the quantization capacity claim
+                # gated as exact counts, plus greedy-tolerance parity
+                "capacity_requests", "capacity_f32_blocks",
+                "capacity_int8_blocks", "capacity_f32_concurrent",
+                "capacity_int8_concurrent", "capacity_gain_ok",
+                "capacity_parity_ok")
 
 
 def _workload(n_requests: int, vocab: int, seed: int = 0):
@@ -420,6 +427,93 @@ def _open_loop_demo(seed: int = 0, n_requests: int = 10) -> dict:
     return out
 
 
+def _capacity_demo(seed: int = 0, n_requests: int = 16) -> dict:
+    """int8 KV capacity at a FIXED pool byte budget: the same HBM that
+    holds 12 f32 pages holds ~45 int8(+scale) pages (3.76x at head_dim
+    64 — ``kv_pool.page_bytes``), so the quantized engine runs ~4x the
+    concurrent tenants on identical traffic.  Gated exactly: page
+    counts per layout, peak concurrency per leg, the >= 1.8x
+    concurrency-gain acceptance bool, and a greedy-tolerance parity
+    bool (int8 tokens must track the f32 leg for >= 60% of positions by
+    longest-common-prefix — quantized decode is NOT bit-exact, but it
+    must be the same conversation).  TTFT / tok-s per leg are reported
+    ungated (wall-clock)."""
+    cfg = get_smoke_config(SHARED_ARCH)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    bs = 16
+    from repro.serving.kv_pool import page_bytes, pool_blocks_for_budget
+    budget = 12 * page_bytes(cfg, bs, None)     # exactly 12 f32 pages
+
+    def traffic():
+        rng = np.random.default_rng(seed + 5)
+        return [Request(uid=uid,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            int(rng.integers(18, 30)),
+                                            dtype=np.int32),
+                        max_new_tokens=8)
+                for uid in range(n_requests)]
+
+    def leg(kv_dtype):
+        blocks = pool_blocks_for_budget(cfg, bs, budget, kv_dtype)
+        eng = EdgeServingEngine(cfg, params, ServeConfig(
+            max_slots=n_requests, max_len=64, prefill_buckets=(16, 32),
+            kv_block_size=bs, kv_pool_blocks=blocks, seed=9,
+            prefix_cache=False, quant_kv=kv_dtype))
+        for r in traffic():                     # compile-warm replay
+            eng.submit(r)
+        eng.run_until_drained()
+        eng.completed.clear()
+        eng.steps = eng.peak_active = eng.peak_pool_used = 0
+        eng.reset_rng()
+        reqs = traffic()
+        t_sub, t_first = {}, {}
+        t0 = time.perf_counter()
+        for r in reqs:
+            eng.submit(r)
+            t_sub[r.uid] = time.perf_counter()
+        while eng.queue or eng.active.any():
+            eng.drain_step()
+            now = time.perf_counter()
+            for r in reqs:
+                if r.uid not in t_first and r.generated:
+                    t_first[r.uid] = now
+        elapsed = time.perf_counter() - t0
+        eng.pool.assert_consistent()
+        toks = {r.uid: tuple(r.generated) for r in eng.completed}
+        n_tok = sum(len(t) for t in toks.values())
+        ttft = [(t_first[u] - t_sub[u]) * 1e3 for u in t_first]
+        return blocks, int(eng.peak_active), toks, {
+            "tok_per_s": n_tok / elapsed,
+            "ttft_p50_ms": float(np.percentile(ttft, 50)),
+        }
+
+    f32_blocks, f32_peak, f32_toks, f32_perf = leg(None)
+    q_blocks, q_peak, q_toks, q_perf = leg("int8")
+    lcp = total = 0
+    for uid in f32_toks:
+        a, b = f32_toks[uid], q_toks[uid]
+        total += len(a)
+        for x, y in zip(a, b):
+            if x != y:
+                break
+            lcp += 1
+    return {
+        "capacity_requests": n_requests,
+        "capacity_budget_bytes": budget,
+        "capacity_f32_blocks": f32_blocks,
+        "capacity_int8_blocks": q_blocks,
+        "capacity_f32_concurrent": f32_peak,
+        "capacity_int8_concurrent": q_peak,
+        "capacity_gain_ok": bool(q_peak >= 1.8 * f32_peak),
+        "capacity_parity_ok": bool(lcp >= 0.6 * total),
+        "capacity_parity_lcp_frac": lcp / max(total, 1),
+        "capacity_f32_tok_per_s": f32_perf["tok_per_s"],
+        "capacity_int8_tok_per_s": q_perf["tok_per_s"],
+        "capacity_f32_ttft_p50_ms": f32_perf["ttft_p50_ms"],
+        "capacity_int8_ttft_p50_ms": q_perf["ttft_p50_ms"],
+    }
+
+
 def run(n_requests: int = 12, seed: int = 0) -> dict:
     cfg = get_smoke_config(ARCH)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -476,6 +570,7 @@ def run(n_requests: int = 12, seed: int = 0) -> dict:
     out.update(_shared_prefix_demo(seed))
     out.update(_spec_demo(seed, n_requests))
     out.update(_open_loop_demo(seed))
+    out.update(_capacity_demo(seed))
     return out
 
 

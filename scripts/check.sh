@@ -51,11 +51,13 @@ if [ "$FAST" = "1" ]; then
     exit 0
 fi
 
-echo "== serving perf baseline (incl. open-loop goodput scenario) ==" >&2
+echo "== serving perf baseline (incl. open-loop + quant capacity) ==" >&2
 # the baseline gates the closed-loop QoE numbers AND the open-loop
 # scenario (Poisson arrivals into a live engine): token counts exactly,
 # plus chunked-prefill interleaving strictly beating monolithic-prefill
-# stalls on decode inter-token p99
+# stalls on decode inter-token p99, plus the int8-KV capacity scenario
+# (capacity_* counters exact: page counts per layout, peak concurrency,
+# the >=1.8x concurrency-gain bool and greedy-tolerance parity bool)
 python -m benchmarks.serving_throughput --requests 12 \
     --check benchmarks/serving_baseline.json >&2
 

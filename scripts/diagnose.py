@@ -14,6 +14,9 @@ ops by bytes / flops / collective bytes (trip-scaled, per chip).
   PYTHONPATH=src python scripts/diagnose.py --server [arch]
       # step-driven serving introspection: wave-budget plans,
       # live-slot frontier table, frontend SLO counters
+  PYTHONPATH=src python scripts/diagnose.py --quant
+      # per-arch quantization surface (int8 KV-poolable? draft-weight
+      # quantizable?) + fused dequant kernel vs reference parity verdict
 """
 import json
 import sys
@@ -101,6 +104,90 @@ def cache_report(args: list) -> None:
         print(f"  ... and {n - 16} more")
 
 
+def quant_report(args: list) -> None:
+    """Quantization surface per arch + a kernel parity verdict.
+
+    Table: does the family hold int8-poolable KV pages (probed the same
+    way the engine builds its pool — ``init_paged_cache`` with
+    ``kv_dtype="int8"`` then checking for scale leaves), and are its
+    weights draft-quantizable (``quantize_matmul_params`` finds matmul
+    leaves to rewrite)?  Then the fused dequant paged-attention kernels
+    (decode + extend) are run against the gather+dequant reference and
+    the max logit error becomes the operator-facing verdict; exits 1 on
+    parity failure so CI can gate on it.
+    """
+    del args
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.registry import ARCH_IDS
+    from repro.configs import get_smoke_config
+    from repro.kernels import flash_attention as FA
+    from repro.kernels import ref as R
+    from repro.models import layers as L
+
+    def has_quant_pages(tree) -> bool:
+        if isinstance(tree, dict):
+            if L.kv_pages_quantized(tree):
+                return True
+            return any(has_quant_pages(v) for v in tree.values())
+        return False
+
+    def count_quant_leaves(tree) -> int:
+        if isinstance(tree, dict):
+            if "q" in tree and "scale" in tree:
+                return 1
+            return sum(count_quant_leaves(v) for v in tree.values())
+        return 0
+
+    caps = {}
+    for arch in ARCH_IDS:
+        cfg = get_smoke_config(arch)
+        pages = M.init_paged_cache(cfg, 1, 32, num_blocks=4,
+                                   block_size=8, kv_dtype="int8")
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        qp = L.quantize_matmul_params(params)
+        caps[arch] = {"family": cfg.family,
+                      "kv_poolable_int8": has_quant_pages(pages),
+                      "draft_quant_leaves": count_quant_leaves(qp)}
+    print("quantization surface:", json.dumps(caps, indent=1))
+
+    # --- fused dequant kernel vs gather+dequant reference --------------
+    key = jax.random.PRNGKey(7)
+    B, H, K, hd, nB, bs, n_blk, S = 2, 4, 2, 64, 12, 8, 3, 4
+    ks = jax.random.split(key, 5)
+    kf = jax.random.normal(ks[0], (nB, bs, K, hd), jnp.float32)
+    vf = jax.random.normal(ks[1], (nB, bs, K, hd), jnp.float32)
+    kq, ksc = L.quantize_kv(kf)
+    vq, vsc = L.quantize_kv(vf)
+    bt = jnp.arange(B * n_blk, dtype=jnp.int32).reshape(B, n_blk)
+    pos = jnp.asarray([bs * n_blk - 1, 13], jnp.int32)
+    scale = hd ** -0.5
+    qd = jax.random.normal(ks[2], (B, H, hd), jnp.float32)
+    out_k = FA.paged_attention(qd, kq, vq, bt, pos, scale=scale,
+                               k_scale=ksc, v_scale=vsc, interpret=True)
+    out_r = R.paged_attention_ref(qd, kq, vq, bt, pos, scale=scale,
+                                  k_scale=ksc, v_scale=vsc)
+    err_d = float(jnp.max(jnp.abs(out_k - out_r)))
+    qe = jax.random.normal(ks[3], (B, S, H, hd), jnp.float32)
+    kn = jax.random.normal(ks[4], (B, S, K, hd), jnp.float32)
+    vn = jax.random.normal(ks[0], (B, S, K, hd), jnp.float32)
+    ext_k = FA.paged_extend_attention(qe, kq, vq, kn, vn, bt, pos,
+                                      scale=scale, k_scale=ksc,
+                                      v_scale=vsc, interpret=True)
+    ext_r = R.paged_extend_attention_ref(qe, kq, vq, kn, vn, bt, pos,
+                                         scale=scale, k_scale=ksc,
+                                         v_scale=vsc)
+    err_e = float(jnp.max(jnp.abs(ext_k - ext_r)))
+    tol = 2e-5
+    ok = err_d < tol and err_e < tol
+    print(f"fused dequant kernel parity: decode err {err_d:.2e}, "
+          f"extend err {err_e:.2e}, tol {tol:.0e} -> "
+          f"{'OK' if ok else 'FAIL'}")
+    if not ok:
+        sys.exit(1)
+
+
 def server_report(args: list) -> None:
     """Step-driven serving introspection: drive a live chunked engine a
     few waves and print each wave's budget plan (slot -> mode x width),
@@ -165,6 +252,9 @@ def server_report(args: list) -> None:
 def main():
     from repro.compat import report
     print("compat:", json.dumps(report()))
+    if "--quant" in sys.argv:
+        quant_report([a for a in sys.argv[1:] if not a.startswith("-")])
+        return
     if "--server" in sys.argv:
         server_report([a for a in sys.argv[1:] if not a.startswith("-")])
         return

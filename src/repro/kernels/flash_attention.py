@@ -73,9 +73,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                             / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
 
 
-def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_scr, l_scr, acc_scr, *, scale: float, softcap: float,
-                  bs: int, n_blk: int):
+def _paged_kernel(*refs, scale: float, softcap: float,
+                  bs: int, n_blk: int, quant: bool):
     """Paged-attention decode read: one query token per sequence against
     KV pages selected by the scalar-prefetched block table.
 
@@ -84,7 +83,18 @@ def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
     PHYSICAL page ``block_tables[b, j]`` — the gather never
     materialises; unallocated (-1) entries are clipped to page 0 by the
     index_map and masked here.
+
+    ``quant=True`` adds per-(page, offset, kv-head) f32 scale tiles
+    streamed through the same index_map as the int8 K/V pages; the
+    dequant multiply happens in VREGs right before the dot, so the f32
+    pool never exists anywhere.
     """
+    if quant:
+        (bt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+         o_ref, m_scr, l_scr, acc_scr) = refs
+    else:
+        (bt_ref, len_ref, q_ref, k_ref, v_ref,
+         o_ref, m_scr, l_scr, acc_scr) = refs
     b = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -99,6 +109,9 @@ def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0, 0].astype(jnp.float32)           # (1, hd)
         k = k_ref[0, :, 0].astype(jnp.float32)        # (bs, hd)
         v = v_ref[0, :, 0].astype(jnp.float32)
+        if quant:
+            k = k * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
+            v = v * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         if softcap > 0.0:
@@ -126,6 +139,7 @@ def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 @functools.partial(jax.jit, static_argnames=("scale", "softcap", "interpret"))
 def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
                     scale: float, softcap: float = 0.0,
+                    k_scale=None, v_scale=None,
                     interpret: bool = False):
     """Paged single-token decode attention (GQA).
 
@@ -134,29 +148,42 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
     (-1 = unallocated); lengths: (B,) valid context per row.  The block
     table and lengths ride the scalar-prefetch channel so the page
     lookup happens in the BlockSpec index_map (the vLLM-on-TPU layout).
-    Returns (B, H, hd).
+
+    For an int8 pool pass ``k_scale``/``v_scale`` (num_blocks, bs, K):
+    the scale tiles stream through the same page index_map and the
+    dequant fuses into the attention read.  Returns (B, H, hd).
     """
     B, H, hd = q.shape
     nB, bs, Kh, _ = k_pages.shape
     n_blk = block_tables.shape[1]
     G = H // Kh
+    quant = k_scale is not None
     qt = q.reshape(B, H, 1, hd)
     bt = block_tables.astype(jnp.int32)
     ln = lengths.astype(jnp.int32)
 
+    def page_map(b, h, j, bt_r, ln_r, G=G):
+        return (jnp.maximum(bt_r[b, j], 0), 0, h // G, 0)
+
+    def scale_map(b, h, j, bt_r, ln_r, G=G):
+        return (jnp.maximum(bt_r[b, j], 0), 0, h // G)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, 1, hd),
+                     lambda b, h, j, bt_r, ln_r: (b, h, 0, 0)),
+        pl.BlockSpec((1, bs, 1, hd), page_map),
+        pl.BlockSpec((1, bs, 1, hd), page_map),
+    ]
+    operands = [qt, k_pages, v_pages]
+    if quant:
+        in_specs += [pl.BlockSpec((1, bs, 1), scale_map),
+                     pl.BlockSpec((1, bs, 1), scale_map)]
+        operands += [k_scale, v_scale]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, H, n_blk),
-        in_specs=[
-            pl.BlockSpec((1, 1, 1, hd),
-                         lambda b, h, j, bt_r, ln_r: (b, h, 0, 0)),
-            pl.BlockSpec((1, bs, 1, hd),
-                         lambda b, h, j, bt_r, ln_r, G=G:
-                         (jnp.maximum(bt_r[b, j], 0), 0, h // G, 0)),
-            pl.BlockSpec((1, bs, 1, hd),
-                         lambda b, h, j, bt_r, ln_r, G=G:
-                         (jnp.maximum(bt_r[b, j], 0), 0, h // G, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, hd),
                                lambda b, h, j, bt_r, ln_r: (b, h, 0)),
         scratch_shapes=[
@@ -167,12 +194,164 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
     )
     out = pl.pallas_call(
         functools.partial(_paged_kernel, scale=scale, softcap=softcap,
-                          bs=bs, n_blk=n_blk),
+                          bs=bs, n_blk=n_blk, quant=quant),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
         interpret=interpret,
-    )(bt, ln, qt, k_pages, v_pages)
+    )(bt, ln, *operands)
     return out
+
+
+def _paged_extend_kernel(*refs, scale: float, softcap: float,
+                         bs: int, n_blk: int, s_len: int, quant: bool):
+    """Fused multi-token extend read: S queries per row walk the row's
+    context pages (masked strictly below ``pos`` — the pre-write view),
+    then attend the S-token suffix causally at grid step ``j == n_blk``.
+
+    The suffix K/V arrives as a dense (B, S, K, hd) operand — on a
+    quantized pool the caller passes the int8 ROUND-TRIP so the scored
+    logits match what later page reads reconstruct.  Finalisation
+    happens in a second ``pl.when`` at the suffix step (pl.when blocks
+    run in body order).
+    """
+    if quant:
+        (bt_ref, pos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+         kn_ref, vn_ref, o_ref, m_scr, l_scr, acc_scr) = refs
+    else:
+        (bt_ref, pos_ref, q_ref, k_ref, v_ref,
+         kn_ref, vn_ref, o_ref, m_scr, l_scr, acc_scr) = refs
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def _online_update(s, mask, v):
+        m_prev = m_scr[...][:, 0]                     # (S,)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = (l_scr[...][:, 0] * alpha
+                      + jnp.sum(p, axis=1))[:, None]
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new[:, None]
+
+    @pl.when((j < n_blk) & (bt_ref[b, jnp.minimum(j, n_blk - 1)] >= 0))
+    def _context():
+        q = q_ref[0, 0].astype(jnp.float32)           # (S, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)        # (bs, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        if quant:
+            k = k * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
+            v = v * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        t = j * bs + jax.lax.broadcasted_iota(jnp.int32, (s_len, bs), 1)
+        mask = t < pos_ref[b]
+        s = jnp.where(mask, s, NEG_INF)
+        _online_update(s, mask, v)
+
+    @pl.when(j == n_blk)
+    def _suffix():
+        q = q_ref[0, 0].astype(jnp.float32)           # (S, hd)
+        k = kn_ref[0, :, 0].astype(jnp.float32)       # (S, hd)
+        v = vn_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        qi = jax.lax.broadcasted_iota(jnp.int32, (s_len, s_len), 0)
+        kj = jax.lax.broadcasted_iota(jnp.int32, (s_len, s_len), 1)
+        mask = kj <= qi
+        s = jnp.where(mask, s, NEG_INF)
+        _online_update(s, mask, v)
+
+    @pl.when(j == n_blk)
+    def _finalize():
+        l = l_scr[...][:, 0]
+        o_ref[0, 0, ...] = (acc_scr[...]
+                            / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "softcap", "interpret"))
+def paged_extend_attention(q, k_pages, v_pages, k_new, v_new,
+                           block_tables, pos, *, scale: float,
+                           softcap: float = 0.0,
+                           k_scale=None, v_scale=None,
+                           interpret: bool = False):
+    """Paged multi-token extend attention (GQA) — the fused twin of the
+    gather read in ``models.layers.attention_extend_paged``.
+
+    q: (B, S, H, hd) new-token queries at absolute positions
+    ``pos + i``; k_new/v_new: (B, S, K, hd) the suffix K/V they attend
+    causally; k_pages/v_pages: (num_blocks, bs, K, hd) pool (context is
+    the PRE-write view, masked strictly below ``pos``); block_tables:
+    (B, n_blk) int32 (-1 = unallocated); pos: (B,) int32.  Optional
+    ``k_scale``/``v_scale`` (num_blocks, bs, K) fuse the int8 dequant
+    into the page read.  Returns (B, S, H, hd).
+    """
+    B, S, H, hd = q.shape
+    nB, bs, Kh, _ = k_pages.shape
+    n_blk = block_tables.shape[1]
+    G = H // Kh
+    quant = k_scale is not None
+    qt = q.transpose(0, 2, 1, 3)                      # (B, H, S, hd)
+    bt = block_tables.astype(jnp.int32)
+    ps = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+
+    def page_map(b, h, j, bt_r, ps_r, G=G):
+        return (jnp.maximum(bt_r[b, jnp.minimum(j, n_blk - 1)], 0),
+                0, h // G, 0)
+
+    def scale_map(b, h, j, bt_r, ps_r, G=G):
+        return (jnp.maximum(bt_r[b, jnp.minimum(j, n_blk - 1)], 0),
+                0, h // G)
+
+    def new_map(b, h, j, bt_r, ps_r, G=G):
+        return (b, 0, h // G, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, S, hd),
+                     lambda b, h, j, bt_r, ps_r: (b, h, 0, 0)),
+        pl.BlockSpec((1, bs, 1, hd), page_map),
+        pl.BlockSpec((1, bs, 1, hd), page_map),
+    ]
+    operands = [qt, k_pages, v_pages]
+    if quant:
+        in_specs += [pl.BlockSpec((1, bs, 1), scale_map),
+                     pl.BlockSpec((1, bs, 1), scale_map)]
+        operands += [k_scale, v_scale]
+    in_specs += [pl.BlockSpec((1, S, 1, hd), new_map),
+                 pl.BlockSpec((1, S, 1, hd), new_map)]
+    operands += [k_new, v_new]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, H, n_blk + 1),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, S, hd),
+                               lambda b, h, j, bt_r, ps_r: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((S, 1), jnp.float32),
+            pltpu.VMEM((S, 1), jnp.float32),
+            pltpu.VMEM((S, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_extend_kernel, scale=scale,
+                          softcap=softcap, bs=bs, n_blk=n_blk, s_len=S,
+                          quant=quant),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        interpret=interpret,
+    )(bt, ps, *operands)
+    return out.transpose(0, 2, 1, 3)
 
 
 def _pick_block(n: int, pref=(512, 256, 128, 64, 32, 16, 8)) -> int:

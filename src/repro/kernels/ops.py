@@ -32,10 +32,21 @@ def flash_attention(q, k, v, *, scale, window: int = 0, softcap: float = 0.0):
 
 
 def paged_attention(q, k_pages, v_pages, block_tables, lengths, *, scale,
-                    softcap: float = 0.0):
+                    softcap: float = 0.0, k_scale=None, v_scale=None):
     return _fa.paged_attention(q, k_pages, v_pages, block_tables, lengths,
                                scale=scale, softcap=softcap,
+                               k_scale=k_scale, v_scale=v_scale,
                                interpret=_interpret())
+
+
+def paged_extend_attention(q, k_pages, v_pages, k_new, v_new, block_tables,
+                           pos, *, scale, softcap: float = 0.0,
+                           k_scale=None, v_scale=None):
+    return _fa.paged_extend_attention(q, k_pages, v_pages, k_new, v_new,
+                                      block_tables, pos, scale=scale,
+                                      softcap=softcap, k_scale=k_scale,
+                                      v_scale=v_scale,
+                                      interpret=_interpret())
 
 
 def ssd_scan(x, dt, A, B, C, *, chunk: int = 128, h0=None):

@@ -42,14 +42,18 @@ def flash_attention_ref(q, k, v, *, scale, window: int = 0,
 
 
 def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
-                        scale, softcap: float = 0.0):
+                        scale, softcap: float = 0.0,
+                        k_scale=None, v_scale=None):
     """Gather-based paged-attention decode read (the obvious way).
 
     q (B,H,hd) one query token per sequence; k_pages/v_pages
     (num_blocks, bs, K, hd) shared page pool; block_tables (B, n_blk)
     int32 physical ids (-1 = unallocated); lengths (B,) valid context
     token counts — row b attends logical positions [0, lengths[b]).
-    Returns (B, H, hd).
+    ``k_scale``/``v_scale`` (num_blocks, bs, K): per-(page, offset,
+    kv-head) dequant scales for an int8 pool — the gathered pages are
+    dequantized densely before the softmax (the f32-materialising twin
+    of the fused kernel read).  Returns (B, H, hd).
     """
     Bq, H, hd = q.shape
     nB, bs, Kh, _ = k_pages.shape
@@ -57,6 +61,9 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
     bt = jnp.clip(block_tables, 0, nB - 1)
     kg = k_pages[bt].reshape(Bq, -1, Kh, hd).astype(jnp.float32)
     vg = v_pages[bt].reshape(Bq, -1, Kh, hd).astype(jnp.float32)
+    if k_scale is not None:
+        kg = kg * k_scale[bt].reshape(Bq, -1, Kh)[..., None].astype(jnp.float32)
+        vg = vg * v_scale[bt].reshape(Bq, -1, Kh)[..., None].astype(jnp.float32)
     qg = q.reshape(Bq, Kh, G, hd).astype(jnp.float32)
     s = jnp.einsum("bkgd,btkd->bkgt", qg, kg) * scale
     if softcap > 0:
@@ -68,6 +75,50 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgt,btkd->bkgd", p, vg)
     return out.reshape(Bq, H, hd).astype(q.dtype)
+
+
+def paged_extend_attention_ref(q, k_pages, v_pages, k_new, v_new,
+                               block_tables, pos, *, scale,
+                               softcap: float = 0.0,
+                               k_scale=None, v_scale=None):
+    """Gather-based multi-token extend read (the obvious way).
+
+    q (B,S,H,hd): S new tokens per row at absolute positions
+    ``pos + i``; k_new/v_new (B,S,K,hd): the suffix K/V those tokens
+    attend causally (already round-tripped by the caller on a quantized
+    pool); k_pages/v_pages (num_blocks, bs, K, hd) with optional
+    per-(page, offset, kv-head) ``k_scale``/``v_scale``; block_tables
+    (B, n_blk); pos (B,) — context positions ``< pos`` are visible,
+    everything at or beyond ``pos`` (stale speculation) is masked.
+    Returns (B, S, H, hd).
+    """
+    B, S, H, hd = q.shape
+    nB, bs, Kh, _ = k_pages.shape
+    G = H // Kh
+    bt = jnp.clip(block_tables, 0, nB - 1)
+    kg = k_pages[bt].reshape(B, -1, Kh, hd).astype(jnp.float32)
+    vg = v_pages[bt].reshape(B, -1, Kh, hd).astype(jnp.float32)
+    if k_scale is not None:
+        kg = kg * k_scale[bt].reshape(B, -1, Kh)[..., None].astype(jnp.float32)
+        vg = vg * v_scale[bt].reshape(B, -1, Kh)[..., None].astype(jnp.float32)
+    L = kg.shape[1]
+    k_all = jnp.concatenate([kg, k_new.astype(jnp.float32)], axis=1)
+    v_all = jnp.concatenate([vg, v_new.astype(jnp.float32)], axis=1)
+    qg = q.reshape(B, S, Kh, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k_all) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    t = jnp.arange(L)
+    ctx_ok = (t[None, :] < pos[:, None]) \
+        & jnp.repeat(block_tables >= 0, bs, axis=1)              # (B, L)
+    causal = jnp.arange(S)[None, :] <= jnp.arange(S)[:, None]    # (S, S)
+    mask = jnp.concatenate(
+        [jnp.broadcast_to(ctx_ok[:, None, :], (B, S, L)),
+         jnp.broadcast_to(causal, (B, S, S))], axis=-1)
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v_all)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
 
 
 def ssd_scan_ref(x, dt, A, B, C, h0=None):

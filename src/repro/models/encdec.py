@@ -161,13 +161,16 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params, tokens, pos):
 
 
 def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
-                     num_blocks: int, block_size: int) -> Params:
+                     num_blocks: int, block_size: int,
+                     kv_dtype=None) -> Params:
     """Decoder self-attention KV is paged; cross K/V stays dense (it is
-    encoder-length, written once at prefill and never grows)."""
+    encoder-length, written once at prefill and never grows — only the
+    self-attn pool quantizes under ``kv_dtype="int8"``)."""
     del max_len
     Ld = cfg.num_layers
     return {
-        "self": L.init_kv_pages(cfg, num_blocks, block_size, stack=(Ld,)),
+        "self": L.init_kv_pages(cfg, num_blocks, block_size, stack=(Ld,),
+                                quant=kv_dtype == "int8"),
         "cross_k": L._zeros((Ld, batch, cfg.encoder_seq, cfg.num_kv_heads,
                              cfg.head_dim), (), cfg.activation_dtype),
         "cross_v": L._zeros((Ld, batch, cfg.encoder_seq, cfg.num_kv_heads,
@@ -214,7 +217,7 @@ def _cross_extend(cfg: ModelConfig, lp, h, ck, cv):
     H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     G = H // K
     scale = cfg.attn_scale if cfg.attn_scale is not None else hd ** -0.5
-    q = jnp.einsum("bsd,dhq->bshq", h, lp["wq"].astype(h.dtype))
+    q = L.weight_einsum("bsd,dhq->bshq", h, lp["wq"])
     if cfg.use_qk_norm:
         q = L.rmsnorm(lp["q_norm"], q, cfg.norm_eps)
     qg = q.reshape(B, S, K, G, hd)
@@ -224,12 +227,13 @@ def _cross_extend(cfg: ModelConfig, lp, h, ck, cv):
                                       cv.astype(h.dtype), mask,
                                       scale=scale,
                                       softcap=cfg.attn_logit_softcap)
-    return jnp.einsum("bshq,hqd->bsd", out.reshape(B, S, H, hd),
-                      lp["wo"].astype(h.dtype))
+    return L.weight_einsum("bshq,hqd->bsd", out.reshape(B, S, H, hd),
+                           lp["wo"])
 
 
 def extend_paged(cfg: ModelConfig, params: Params, cache: Params, tokens,
-                 pos, block_tables, valid_len=None):
+                 pos, block_tables, valid_len=None,
+                 use_pallas: bool = False):
     """Score S decoder tokens against the paged self-attn cache in one
     call; cross K/V (encoder-length, written at prefill) is read as-is.
     See ``transformer.extend_paged`` for the row semantics."""
@@ -243,7 +247,7 @@ def extend_paged(cfg: ModelConfig, params: Params, cache: Params, tokens,
         lp, sc, ck, cv = inp
         a, sc2 = L.attention_extend_paged(
             cfg, lp["self_attn"], L.layernorm(lp["ln1"], h, cfg.norm_eps),
-            pos, sc, block_tables, valid_len)
+            pos, sc, block_tables, valid_len, use_pallas=use_pallas)
         h = h + a
         c = _cross_extend(cfg, lp["cross_attn"],
                           L.layernorm(lp["ln2"], h, cfg.norm_eps), ck, cv)

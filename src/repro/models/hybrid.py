@@ -117,12 +117,14 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params, tokens, pos):
 
 
 def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
-                     num_blocks: int, block_size: int) -> Params:
+                     num_blocks: int, block_size: int,
+                     kv_dtype=None) -> Params:
     """The shared attention block decodes as a ``local_window`` ring
     (see module docstring) and SSM state is O(1): nothing here uses
     ``max_len`` strips, so there are no pages to carve out — the paged
-    cache IS the dense cache and pool demand is zero."""
-    del num_blocks, block_size
+    cache IS the dense cache and pool demand is zero (``kv_dtype`` is
+    accepted and ignored: no pages, nothing to quantize)."""
+    del num_blocks, block_size, kv_dtype
     return init_cache(cfg, batch, max_len)
 
 
@@ -133,7 +135,8 @@ def decode_step_paged(cfg: ModelConfig, params: Params, cache: Params,
 
 
 def extend_paged(cfg: ModelConfig, params: Params, cache: Params, tokens,
-                 pos, block_tables, valid_len=None):
+                 pos, block_tables, valid_len=None,
+                 use_pallas: bool = False):
     """Hybrid decode state = SSM recurrences + a shared-attn ring: both
     advance irreversibly (the recurrence cannot roll back, ring writes
     evict window context), so neither speculative verify nor multi-token

@@ -7,6 +7,13 @@ Conventions
 * Activations run in ``cfg.activation_dtype`` (bf16 by default); softmax
   and norms accumulate in float32.
 * Attention is GQA throughout: H query heads grouped over K kv heads.
+* Projection weights may be int8-quantized ({"q", "scale"} dict leaves,
+  ``quantize_matmul_params``); every matmul site goes through
+  ``weight_einsum`` which dispatches on the leaf type.
+* The paged KV pool has an int8 layout (``init_kv_pages(quant=True)``):
+  K/V bytes are int8 with one f32 scale per (page, token offset,
+  kv head) riding in parallel ``k_scale``/``v_scale`` pool leaves; all
+  paged attention paths detect it via the ``k_scale`` key.
 """
 from __future__ import annotations
 
@@ -41,6 +48,120 @@ def _zeros(shape, stack=(), dtype=jnp.float32):
 
 def _ones(shape, stack=(), dtype=jnp.float32):
     return jnp.ones(tuple(stack) + tuple(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# int8 quantization: KV pages + projection weights
+# ---------------------------------------------------------------------------
+
+KV_QMAX = 127.0
+
+
+def quantize_kv(x, eps: float = 1e-8):
+    """Symmetric int8 quantization of a K/V tensor along ``head_dim``.
+
+    x: (..., hd).  Returns (q int8 (..., hd), scale f32 (...)): one
+    scale per head_dim vector — ``scale = max|x| / 127``,
+    ``q = round(x / scale)``.  The group is deliberately the head_dim
+    vector of ONE (token, kv-head) row: committed page rows are
+    write-once (rollback, CoW and in-flight prefix sharing all reason
+    over bytes that never change after commit), so a scale must never
+    depend on tokens written later — a coarser whole-page scale would
+    have to re-quantize committed rows on every incremental
+    ``scatter_kv_tokens`` write.  Overhead is 4/hd bytes per element
+    (~6% at hd=64) on top of the 4x int8-vs-f32 saving.
+    """
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / KV_QMAX + eps
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -KV_QMAX, KV_QMAX)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q, scale, dtype=jnp.float32):
+    """Inverse of ``quantize_kv``: q (..., hd) int8, scale (...)."""
+    out = q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def kv_pages_quantized(pages) -> bool:
+    """Is this pool dict the int8 layout (scale leaves present)?"""
+    return "k_scale" in pages
+
+
+# weight name -> (contraction dims, output dims), counted from the end
+# of the leaf shape (any leading dims are lax.scan stack axes)
+QUANT_WEIGHT_DIMS = {
+    "wq": (1, 2), "wk": (1, 2), "wv": (1, 2), "wo": (2, 1),
+    "w_gate": (1, 1), "w_up": (1, 1), "w_down": (1, 1),
+    "w_in": (1, 1), "w_out": (1, 1),
+}
+
+
+def quantize_weight(w, n_in: int, n_out: int):
+    """Per-output-channel symmetric int8 quantization of one projection
+    weight: the trailing ``n_in`` + ``n_out`` dims are the matmul dims,
+    anything before is a stack prefix (kept on BOTH leaves so
+    ``lax.scan`` slices quantized layers exactly like f32 ones)."""
+    in_axes = tuple(range(w.ndim - n_in - n_out, w.ndim - n_out))
+    wf = w.astype(jnp.float32)
+    scale = (jnp.max(jnp.abs(wf), axis=in_axes, keepdims=True) / KV_QMAX
+             + 1e-12)
+    q = jnp.clip(jnp.round(wf / scale), -KV_QMAX, KV_QMAX).astype(jnp.int8)
+    return {"q": q, "scale": jnp.squeeze(scale, axis=in_axes)}
+
+
+def quantize_matmul_params(params):
+    """Copy of ``params`` with every attention/MLP projection weight
+    replaced by its int8 quantization ({"q", "scale"} dict leaves —
+    ``weight_einsum`` dispatches on the dict).  Norms, embeddings and
+    biases stay full precision (cheap and precision-critical).  Used to
+    quantize a resident draft model's weights (drafts tolerate int8;
+    verify logits are untouched, so greedy speculation stays bit-exact
+    while draft bytes shrink ~4x)."""
+    def walk(node):
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        for name, sub in node.items():
+            dims = QUANT_WEIGHT_DIMS.get(name)
+            if (dims is not None and not isinstance(sub, dict)
+                    and sub.ndim >= sum(dims)):
+                out[name] = quantize_weight(sub, *dims)
+            else:
+                out[name] = walk(sub)
+        return out
+    return walk(params)
+
+
+def weight_einsum(eq, x, w):
+    """``jnp.einsum(eq, x, w.astype(x.dtype))`` where ``w`` may instead
+    be an int8-quantized weight ({"q", "scale"}; see
+    ``quantize_weight``).  Quantized weights contract through the
+    ``kernels.quant_matmul`` Pallas kernel on TPU (int8 HBM -> VREG
+    dequant -> bf16 MXU) and through the jnp dequant twin elsewhere —
+    both implement the ``kernels.ref.quant_matmul_ref`` semantics.
+    Assumes (true for every projection in this module) that ``eq``
+    contracts x's trailing dims against w's leading matmul dims in
+    order and appends w's output dims.
+    """
+    if not isinstance(w, dict):
+        return jnp.einsum(eq, x, w.astype(x.dtype))
+    x_spec, w_spec = eq.split("->")[0].split(",")
+    n_in = sum(1 for c in w_spec if c in x_spec)
+    q, scale = w["q"], w["scale"]
+    kd = math.prod(q.shape[:n_in])
+    nd = math.prod(q.shape[n_in:])
+    x2 = x.reshape(-1, kd)
+    if jax.default_backend() == "tpu":
+        from repro.kernels import ops as kernel_ops
+        out2 = kernel_ops.quant_matmul(x2, q.reshape(kd, nd),
+                                       scale.reshape(nd).astype(jnp.float32),
+                                       out_dtype=x.dtype)
+    else:
+        wf = (q.reshape(kd, nd).astype(jnp.float32)
+              * scale.reshape(nd)[None, :].astype(jnp.float32))
+        out2 = jnp.dot(x2.astype(jnp.float32), wf).astype(x.dtype)
+    return out2.reshape(x.shape[:x.ndim - n_in] + q.shape[n_in:])
 
 
 # ---------------------------------------------------------------------------
@@ -166,10 +287,10 @@ def _project_seq(cfg: ModelConfig, params, x, positions, *,
     """Shared q/k/v projection + qk-norm + RoPE for the full-sequence
     paths (``attention_fwd`` and the paged suffix prefill) — one
     definition so both produce bit-identical projections."""
-    q = jnp.einsum("bsd,dhq->bshq", x, params["wq"].astype(x.dtype))
+    q = weight_einsum("bsd,dhq->bshq", x, params["wq"])
     src = x if kv_x is None else kv_x
-    k = jnp.einsum("btd,dkq->btkq", src, params["wk"].astype(x.dtype))
-    v = jnp.einsum("btd,dkq->btkq", src, params["wv"].astype(x.dtype))
+    k = weight_einsum("btd,dkq->btkq", src, params["wk"])
+    v = weight_einsum("btd,dkq->btkq", src, params["wv"])
 
     if cfg.use_qk_norm:
         q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
@@ -233,7 +354,7 @@ def attention_fwd(cfg: ModelConfig, params, x, positions, *,
                                         scale=scale, softcap=cfg.attn_logit_softcap)
 
     out = out.reshape(B, S, H, hd)
-    o = jnp.einsum("bshq,hqd->bsd", out, params["wo"].astype(x.dtype))
+    o = weight_einsum("bshq,hqd->bsd", out, params["wo"])
     return o, k, v
 
 
@@ -367,12 +488,12 @@ def _decode_project(cfg: ModelConfig, params, x, pos, *, is_global: bool):
     knew (B,1,K,hd), vnew (B,1,K,hd)) — identical math for the dense and
     paged caches, so both decode variants stay bit-for-bit equal.
     """
-    q = jnp.einsum("bsd,dhq->bshq", x, params["wq"].astype(x.dtype))
+    q = weight_einsum("bsd,dhq->bshq", x, params["wq"])
     if cfg.use_qk_norm:
         q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
 
-    knew = jnp.einsum("bsd,dkq->bskq", x, params["wk"].astype(x.dtype))
-    vnew = jnp.einsum("bsd,dkq->bskq", x, params["wv"].astype(x.dtype))
+    knew = weight_einsum("bsd,dkq->bskq", x, params["wk"])
+    vnew = weight_einsum("bsd,dkq->bskq", x, params["wv"])
     if cfg.use_qk_norm:
         knew = rmsnorm(params["k_norm"], knew, cfg.norm_eps)
 
@@ -404,7 +525,7 @@ def attention_decode(cfg: ModelConfig, params, x, cache, pos, *,
     scale = cfg.attn_scale if cfg.attn_scale is not None else hd ** -0.5
 
     if cross_kv is not None:
-        q = jnp.einsum("bsd,dhq->bshq", x, params["wq"].astype(x.dtype))
+        q = weight_einsum("bsd,dhq->bshq", x, params["wq"])
         if cfg.use_qk_norm:
             q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
         k, v = cross_kv
@@ -413,8 +534,8 @@ def attention_decode(cfg: ModelConfig, params, x, cache, pos, *,
         mask = jnp.ones((1, 1, 1, 1, T), bool)
         out = attention_weights_and_out(qg, k, v, mask, scale=scale,
                                         softcap=cfg.attn_logit_softcap)
-        o = jnp.einsum("bshq,hqd->bsd", out.reshape(B, 1, H, hd),
-                       params["wo"].astype(x.dtype))
+        o = weight_einsum("bshq,hqd->bsd", out.reshape(B, 1, H, hd),
+                          params["wo"])
         return o, cache
 
     q, knew, vnew = _decode_project(cfg, params, x, pos, is_global=is_global)
@@ -436,8 +557,8 @@ def attention_decode(cfg: ModelConfig, params, x, cache, pos, *,
     out = attention_weights_and_out(qg, kc.astype(x.dtype), vc.astype(x.dtype),
                                     mask, scale=scale,
                                     softcap=cfg.attn_logit_softcap)
-    o = jnp.einsum("bshq,hqd->bsd", out.reshape(B, 1, H, hd),
-                   params["wo"].astype(x.dtype))
+    o = weight_einsum("bshq,hqd->bsd", out.reshape(B, 1, H, hd),
+                      params["wo"])
     return o, {"k": kc, "v": vc, "slots": slots}
 
 
@@ -454,16 +575,32 @@ def init_kv_cache(cfg: ModelConfig, batch: int, length: int, stack=(),
 
 
 def init_kv_pages(cfg: ModelConfig, num_blocks: int, block_size: int,
-                  stack=(), dtype=None):
+                  stack=(), dtype=None, quant: bool = False):
     """Paged KV pool for GLOBAL attention layers.
 
     Physical pages of ``block_size`` tokens shared by every slot; there
     is NO batch axis — ownership lives entirely in the engine's block
     tables (``serving.kv_pool``).  No ``slots`` array either: validity
     is derived from (block_table, pos) at decode time.
+
+    ``quant=True`` stores K/V as int8 with one f32 scale per (page,
+    token offset, kv head) head_dim vector riding in parallel
+    ``k_scale``/``v_scale`` leaves of shape (nB, bs, K).  The scale
+    leaves have the exact pool layout (page-leading, no batch axis), so
+    the engine's generic pool-leaf machinery — CoW page copies, chain
+    gathers, persistence scatters — applies to them unchanged.
     """
     dtype = dtype or cfg.activation_dtype
     K, hd = cfg.num_kv_heads, cfg.head_dim
+    if quant:
+        return {
+            "k": _zeros((num_blocks, block_size, K, hd), stack, jnp.int8),
+            "v": _zeros((num_blocks, block_size, K, hd), stack, jnp.int8),
+            "k_scale": _zeros((num_blocks, block_size, K), stack,
+                              jnp.float32),
+            "v_scale": _zeros((num_blocks, block_size, K), stack,
+                              jnp.float32),
+        }
     return {
         "k": _zeros((num_blocks, block_size, K, hd), stack, dtype),
         "v": _zeros((num_blocks, block_size, K, hd), stack, dtype),
@@ -490,6 +627,15 @@ def scatter_kv_pages(pages, k, v, write_tables):
     kb = k.reshape(B, n_wblk, bs, *k.shape[2:])
     vb = v.reshape(B, n_wblk, bs, *v.shape[2:])
     tgt = jnp.where(write_tables >= 0, write_tables, nB)  # nB is OOB
+    if kv_pages_quantized(pages):
+        kq, ks = quantize_kv(kb)
+        vq, vs = quantize_kv(vb)
+        return {
+            "k": pages["k"].at[tgt].set(kq, mode="drop"),
+            "v": pages["v"].at[tgt].set(vq, mode="drop"),
+            "k_scale": pages["k_scale"].at[tgt].set(ks, mode="drop"),
+            "v_scale": pages["v_scale"].at[tgt].set(vs, mode="drop"),
+        }
     return {
         "k": pages["k"].at[tgt].set(kb.astype(pages["k"].dtype),
                                     mode="drop"),
@@ -510,6 +656,10 @@ def gather_kv_pages(pages, ctx_tables):
     bt = jnp.clip(ctx_tables, 0, nB - 1)
     kg = pages["k"][bt].reshape(B, -1, *pages["k"].shape[2:])
     vg = pages["v"][bt].reshape(B, -1, *pages["v"].shape[2:])
+    if kv_pages_quantized(pages):
+        ks = pages["k_scale"][bt].reshape(B, -1, *pages["k_scale"].shape[2:])
+        vs = pages["v_scale"][bt].reshape(B, -1, *pages["v_scale"].shape[2:])
+        return dequantize_kv(kg, ks), dequantize_kv(vg, vs)
     return kg, vg
 
 
@@ -559,6 +709,14 @@ def attention_prefill_paged(cfg: ModelConfig, params, x, positions, pages,
         return o, scatter_kv_pages(pages, k, v, write_tables)
 
     q, k, v = _project_seq(cfg, params, x, positions, is_global=True)
+    quant = kv_pages_quantized(pages)
+    if quant:
+        # the suffix attends its own int8 round-trip so the hit-path
+        # logits match what later decode reads of these pages see
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        k = dequantize_kv(kq, ks, k.dtype)
+        v = dequantize_kv(vq, vs, v.dtype)
     ck, cv = gather_kv_pages(pages, ctx_tables)
     Tc = ck.shape[1]
     # context part: logical positions [0, Tc) valid where < ctx_len
@@ -575,8 +733,12 @@ def attention_prefill_paged(cfg: ModelConfig, params, x, positions, pages,
     out = attention_weights_and_out(qg, k_all, v_all,
                                     mask[:, None, None], scale=scale,
                                     softcap=cfg.attn_logit_softcap)
-    o = jnp.einsum("bshq,hqd->bsd", out.reshape(B, S, H, hd),
-                   params["wo"].astype(x.dtype))
+    o = weight_einsum("bshq,hqd->bsd", out.reshape(B, S, H, hd),
+                      params["wo"])
+    if quant:
+        return o, _scatter_tokens_quant(pages, kq, ks, vq, vs,
+                                        write_tables,
+                                        jnp.asarray(ctx_len, jnp.int32))
     return o, scatter_kv_tokens(pages, k, v, write_tables,
                                 jnp.asarray(ctx_len, jnp.int32))
 
@@ -620,24 +782,40 @@ def attention_decode_paged(cfg: ModelConfig, params, x, cache, pos,
     blk, off = pos // bs, pos % bs
     phys = block_tables[jnp.arange(B), blk]
     wphys = jnp.where(phys >= 0, phys, nB)       # nB is OOB => dropped
-    kc = cache["k"].at[wphys, off].set(
-        knew[:, 0].astype(cache["k"].dtype), mode="drop")
-    vc = cache["v"].at[wphys, off].set(
-        vnew[:, 0].astype(cache["v"].dtype), mode="drop")
+    quant = kv_pages_quantized(cache)
+    if quant:
+        kq1, ks1 = quantize_kv(knew[:, 0])
+        vq1, vs1 = quantize_kv(vnew[:, 0])
+        kc = cache["k"].at[wphys, off].set(kq1, mode="drop")
+        vc = cache["v"].at[wphys, off].set(vq1, mode="drop")
+        kcs = cache["k_scale"].at[wphys, off].set(ks1, mode="drop")
+        vcs = cache["v_scale"].at[wphys, off].set(vs1, mode="drop")
+        new_cache = {"k": kc, "v": vc, "k_scale": kcs, "v_scale": vcs}
+    else:
+        kc = cache["k"].at[wphys, off].set(
+            knew[:, 0].astype(cache["k"].dtype), mode="drop")
+        vc = cache["v"].at[wphys, off].set(
+            vnew[:, 0].astype(cache["v"].dtype), mode="drop")
+        new_cache = {"k": kc, "v": vc}
 
     if use_pallas:
         from repro.kernels import ops as kernel_ops
         out = kernel_ops.paged_attention(
             q[:, 0], kc, vc, block_tables, pos + 1, scale=scale,
-            softcap=cfg.attn_logit_softcap)
-        o = jnp.einsum("bshq,hqd->bsd", out[:, None].astype(x.dtype),
-                       params["wo"].astype(x.dtype))
-        return o, {"k": kc, "v": vc}
+            softcap=cfg.attn_logit_softcap,
+            k_scale=new_cache.get("k_scale"),
+            v_scale=new_cache.get("v_scale"))
+        o = weight_einsum("bshq,hqd->bsd", out[:, None].astype(x.dtype),
+                          params["wo"])
+        return o, new_cache
 
     # gather the logical view: (B, n_blk*bs, K, hd)
     bt = jnp.clip(block_tables, 0, nB - 1)
     kg = kc[bt].reshape(B, -1, K, hd)
     vg = vc[bt].reshape(B, -1, K, hd)
+    if quant:
+        kg = dequantize_kv(kg, kcs[bt].reshape(B, -1, K))
+        vg = dequantize_kv(vg, vcs[bt].reshape(B, -1, K))
     t = jnp.arange(block_tables.shape[1] * bs, dtype=jnp.int32)
     allocated = jnp.repeat(block_tables >= 0, bs, axis=1)
     valid = allocated & (t[None, :] <= pos[:, None])
@@ -647,9 +825,9 @@ def attention_decode_paged(cfg: ModelConfig, params, x, cache, pos,
     out = attention_weights_and_out(qg, kg.astype(x.dtype),
                                     vg.astype(x.dtype), mask, scale=scale,
                                     softcap=cfg.attn_logit_softcap)
-    o = jnp.einsum("bshq,hqd->bsd", out.reshape(B, 1, H, hd),
-                   params["wo"].astype(x.dtype))
-    return o, {"k": kc, "v": vc}
+    o = weight_einsum("bshq,hqd->bsd", out.reshape(B, 1, H, hd),
+                      params["wo"])
+    return o, new_cache
 
 
 def scatter_kv_tokens(pages, k, v, block_tables, pos, valid_len=None):
@@ -666,17 +844,13 @@ def scatter_kv_tokens(pages, k, v, block_tables, pos, valid_len=None):
     pages it keeps rollback reasoning local to REAL protocol writes).
     Writes past the table's logical span (``n_blk * bs``) are dropped.
     """
-    nB, bs = pages["k"].shape[0], pages["k"].shape[1]
-    B, S = k.shape[0], k.shape[1]
-    n_blk = block_tables.shape[1]
-    p = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]     # (B, S)
-    blk = jnp.clip(p // bs, 0, n_blk - 1)
-    off = p % bs
-    phys = jnp.take_along_axis(block_tables, blk, axis=1)          # (B, S)
-    ok = (phys >= 0) & (p < n_blk * bs)
-    if valid_len is not None:
-        ok &= jnp.arange(S, dtype=jnp.int32)[None, :] < valid_len[:, None]
-    tgt = jnp.where(ok, phys, nB)                  # nB is OOB => dropped
+    if kv_pages_quantized(pages):
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        return _scatter_tokens_quant(pages, kq, ks, vq, vs, block_tables,
+                                     pos, valid_len)
+    tgt, off = _token_write_targets(pages, k.shape[0], k.shape[1],
+                                    block_tables, pos, valid_len)
     return {
         "k": pages["k"].at[tgt, off].set(k.astype(pages["k"].dtype),
                                          mode="drop"),
@@ -685,8 +859,41 @@ def scatter_kv_tokens(pages, k, v, block_tables, pos, valid_len=None):
     }
 
 
+def _token_write_targets(pages, B, S, block_tables, pos, valid_len):
+    """(tgt, off) page/offset pairs for an S-token scatter; dropped
+    writes (unallocated / out-of-span / pad rows) map tgt to the OOB
+    page index ``nB``."""
+    nB, bs = pages["k"].shape[0], pages["k"].shape[1]
+    n_blk = block_tables.shape[1]
+    p = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]     # (B, S)
+    blk = jnp.clip(p // bs, 0, n_blk - 1)
+    off = p % bs
+    phys = jnp.take_along_axis(block_tables, blk, axis=1)          # (B, S)
+    ok = (phys >= 0) & (p < n_blk * bs)
+    if valid_len is not None:
+        ok &= jnp.arange(S, dtype=jnp.int32)[None, :] < valid_len[:, None]
+    return jnp.where(ok, phys, nB), off            # nB is OOB => dropped
+
+
+def _scatter_tokens_quant(pages, kq, ks, vq, vs, block_tables, pos,
+                          valid_len=None):
+    """Token scatter of PRE-quantized K/V (+ scales).  Callers that
+    already round-tripped the suffix for attention pass the same ints
+    here — re-quantizing the dequantized values would drift (the eps in
+    the scale would be applied twice)."""
+    tgt, off = _token_write_targets(pages, kq.shape[0], kq.shape[1],
+                                    block_tables, pos, valid_len)
+    return {
+        "k": pages["k"].at[tgt, off].set(kq, mode="drop"),
+        "v": pages["v"].at[tgt, off].set(vq, mode="drop"),
+        "k_scale": pages["k_scale"].at[tgt, off].set(ks, mode="drop"),
+        "v_scale": pages["v_scale"].at[tgt, off].set(vs, mode="drop"),
+    }
+
+
 def attention_extend_paged(cfg: ModelConfig, params, x, pos, pages,
-                           block_tables, valid_len=None):
+                           block_tables, valid_len=None, *,
+                           use_pallas: bool = False):
     """Multi-token decode against the paged pool: score ``S`` proposed /
     teacher-forced tokens in ONE call (speculative verify, chunked
     catch-up prefill) — the causal-suffix machinery of
@@ -704,6 +911,15 @@ def attention_extend_paged(cfg: ModelConfig, params, x, pos, pages,
     pages at ``pos + i`` (see ``scatter_kv_tokens``; rejected proposals
     stay written but stay masked until overwritten in sequence order).
     Returns (out (B, S, d), new_pages).
+
+    On a quantized pool the suffix attends the int8 ROUND-TRIP of its
+    own K/V — the same values every later read of those pages sees —
+    and ``use_pallas=True`` swaps the gather read for the fused
+    dequant ``kernels.flash_attention.paged_extend_attention`` kernel
+    (pages never materialise in f32; the kernel receives the already
+    round-tripped suffix so both reads agree to accumulation
+    tolerance).  On an f32 pool ``use_pallas`` is ignored and the path
+    stays bit-exact.
     """
     B, S, d = x.shape
     H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -714,10 +930,35 @@ def attention_extend_paged(cfg: ModelConfig, params, x, pos, pages,
 
     q, k, v = _project_seq(cfg, params, x, positions, is_global=True)
 
+    quant = kv_pages_quantized(pages)
+    if quant:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        k = dequantize_kv(kq, ks, k.dtype)
+        v = dequantize_kv(vq, vs, v.dtype)
+        new_pages = _scatter_tokens_quant(pages, kq, ks, vq, vs,
+                                          block_tables, pos, valid_len)
+    else:
+        new_pages = scatter_kv_tokens(pages, k, v, block_tables, pos,
+                                      valid_len)
+
+    if quant and use_pallas:
+        from repro.kernels import ops as kernel_ops
+        out = kernel_ops.paged_extend_attention(
+            q, pages["k"], pages["v"], k, v, block_tables, pos,
+            scale=scale, softcap=cfg.attn_logit_softcap,
+            k_scale=pages["k_scale"], v_scale=pages["v_scale"])
+        o = weight_einsum("bshq,hqd->bsd", out.astype(x.dtype),
+                          params["wo"])
+        return o, new_pages
+
     nB, bs = pages["k"].shape[0], pages["k"].shape[1]
     bt = jnp.clip(block_tables, 0, nB - 1)
     ck = pages["k"][bt].reshape(B, -1, K, hd)
     cv = pages["v"][bt].reshape(B, -1, K, hd)
+    if quant:
+        ck = dequantize_kv(ck, pages["k_scale"][bt].reshape(B, -1, K))
+        cv = dequantize_kv(cv, pages["v_scale"][bt].reshape(B, -1, K))
     L = block_tables.shape[1] * bs
     t = jnp.arange(L, dtype=jnp.int32)
     allocated = jnp.repeat(block_tables >= 0, bs, axis=1)
@@ -731,10 +972,8 @@ def attention_extend_paged(cfg: ModelConfig, params, x, pos, pages,
     out = attention_weights_and_out(qg, k_all, v_all, mask[:, None, None],
                                     scale=scale,
                                     softcap=cfg.attn_logit_softcap)
-    o = jnp.einsum("bshq,hqd->bsd", out.reshape(B, S, H, hd),
-                   params["wo"].astype(x.dtype))
-    new_pages = scatter_kv_tokens(pages, k, v, block_tables, pos,
-                                  valid_len)
+    o = weight_einsum("bshq,hqd->bsd", out.reshape(B, S, H, hd),
+                      params["wo"])
     return o, new_pages
 
 
@@ -782,8 +1021,8 @@ def attention_extend(cfg: ModelConfig, params, x, cache, pos, *,
     out = attention_weights_and_out(qg, k_all, v_all, mask[:, None, None],
                                     scale=scale,
                                     softcap=cfg.attn_logit_softcap)
-    o = jnp.einsum("bshq,hqd->bsd", out.reshape(B, S, H, hd),
-                   params["wo"].astype(x.dtype))
+    o = weight_einsum("bshq,hqd->bsd", out.reshape(B, S, H, hd),
+                      params["wo"])
 
     ring = positions % T
     ok = (jnp.arange(S, dtype=jnp.int32)[None, :] < valid_len[:, None]
@@ -816,11 +1055,9 @@ def init_mlp(cfg: ModelConfig, key, d_ff=None, stack=()):
 
 def mlp(params, x, activation="silu"):
     act = jax.nn.gelu if activation == "gelu" else jax.nn.silu
-    w_gate = params["w_gate"].astype(x.dtype)
-    w_up = params["w_up"].astype(x.dtype)
-    w_down = params["w_down"].astype(x.dtype)
-    h = act(jnp.einsum("bsd,df->bsf", x, w_gate)) * jnp.einsum("bsd,df->bsf", x, w_up)
-    return jnp.einsum("bsf,fd->bsd", h, w_down)
+    h = act(weight_einsum("bsd,df->bsf", x, params["w_gate"])) \
+        * weight_einsum("bsd,df->bsf", x, params["w_up"])
+    return weight_einsum("bsf,fd->bsd", h, params["w_down"])
 
 
 def init_gelu_mlp(cfg: ModelConfig, key, stack=()):
@@ -836,9 +1073,9 @@ def init_gelu_mlp(cfg: ModelConfig, key, stack=()):
 
 
 def gelu_mlp(params, x):
-    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, params["w_in"].astype(x.dtype))
+    h = jax.nn.gelu(weight_einsum("bsd,df->bsf", x, params["w_in"])
                     + params["b_in"].astype(x.dtype))
-    return jnp.einsum("bsf,fd->bsd", h, params["w_out"].astype(x.dtype)) \
+    return weight_einsum("bsf,fd->bsd", h, params["w_out"]) \
         + params["b_out"].astype(x.dtype)
 
 

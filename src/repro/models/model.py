@@ -122,14 +122,20 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
 
 
 def init_paged_cache(cfg: ModelConfig, batch_size: int, max_len: int,
-                     num_blocks: int, block_size: int):
+                     num_blocks: int, block_size: int, kv_dtype=None):
     """Decode cache with GLOBAL attention KV in a shared page pool of
     ``num_blocks`` x ``block_size`` tokens (no batch axis on pool
     leaves); local ring windows, SSM state and cross K/V stay dense.
     Serve with ``decode_step_paged``; see ``serving.kv_pool``.
+
+    ``kv_dtype="int8"`` stores pool K/V quantized with per-(page,
+    offset, kv-head) f32 scales in parallel ``k_scale``/``v_scale``
+    pool leaves (``layers.init_kv_pages(quant=True)``); every paged
+    read path dequantizes transparently.  ``None`` keeps the f32 pool.
     """
     return family_module(cfg).init_paged_cache(cfg, batch_size, max_len,
-                                               num_blocks, block_size)
+                                               num_blocks, block_size,
+                                               kv_dtype=kv_dtype)
 
 
 def prefill(cfg: ModelConfig, params: Params, batch: dict, max_len: int, *,
@@ -184,7 +190,7 @@ def decode_step_paged(cfg: ModelConfig, params: Params, cache, tokens, pos,
 
 
 def extend_paged(cfg: ModelConfig, params: Params, cache, tokens, pos,
-                 block_tables, valid_len=None):
+                 block_tables, valid_len=None, use_pallas: bool = False):
     """Score S tokens against the paged cache in ONE jitted call —
     the multi-token twin of ``decode_step_paged`` used for speculative
     verify and chunked catch-up prefill.
@@ -198,10 +204,14 @@ def extend_paged(cfg: ModelConfig, params: Params, cache, tokens, pos,
     speculation is invisible and rollback is pure bookkeeping; K/V for
     rows ``i < valid_len`` is written at ``pos + i`` (pad rows drop).
     ssm/hybrid raise NotImplementedError — gate callers on
-    ``extendable`` / ``spec_decodable``.
+    ``extendable`` / ``spec_decodable``.  ``use_pallas=True`` reads a
+    QUANTIZED pool through the fused dequant
+    ``kernels.flash_attention.paged_extend_attention`` kernel (no-op on
+    an f32 pool, which keeps that path bit-exact).
     """
     return family_module(cfg).extend_paged(cfg, params, cache, tokens,
-                                           pos, block_tables, valid_len)
+                                           pos, block_tables, valid_len,
+                                           use_pallas=use_pallas)
 
 
 def extend(cfg: ModelConfig, params: Params, cache, tokens, pos,

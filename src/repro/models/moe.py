@@ -123,10 +123,20 @@ def _moe_tokens(cfg: ModelConfig, p: Params, xf, token_mask=None):
     x_pad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
     xs = x_pad[inv]                                            # (E, c, d)
 
-    # expert FFN (E-sharded einsums)
-    wg = p["w_gate"].astype(xf.dtype)
-    wu = p["w_up"].astype(xf.dtype)
-    wd = p["w_down"].astype(xf.dtype)
+    # expert FFN (E-sharded einsums); expert weights may be int8 dicts
+    # ({"q", "scale"}, layers.quantize_matmul_params) — the E-stacked
+    # einsum has no 2D matmul form, so dequantize densely here instead
+    # of routing through weight_einsum
+    def _w(leaf):
+        if isinstance(leaf, dict):
+            return (leaf["q"].astype(jnp.float32)
+                    * leaf["scale"][..., None, :].astype(jnp.float32)
+                    ).astype(xf.dtype)
+        return leaf.astype(xf.dtype)
+
+    wg = _w(p["w_gate"])
+    wu = _w(p["w_up"])
+    wd = _w(p["w_down"])
     h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xs, wg)) \
         * jnp.einsum("ecd,edf->ecf", xs, wu)
     ys = jnp.einsum("ecf,efd->ecd", h, wd)                     # (E, c, d)
@@ -223,13 +233,15 @@ def _extend_token_mask(x, valid_len):
 
 
 def moe_block_extend_paged(cfg: ModelConfig, p: Params, x, pos, cache,
-                           block_tables, valid_len=None):
+                           block_tables, valid_len=None, *,
+                           use_pallas: bool = False):
     """``moe_block_decode_paged`` for S tokens at once (speculative
     verify / chunked catch-up)."""
     _, norm = L.make_norm(cfg)
     h = norm(p["ln1"], x)
     a, new_cache = L.attention_extend_paged(cfg, p["attn"], h, pos, cache,
-                                            block_tables, valid_len)
+                                            block_tables, valid_len,
+                                            use_pallas=use_pallas)
     x = x + a
     h = norm(p["ln2"], x)
     m, _ = moe_mlp(cfg, p["moe"], h,
@@ -314,15 +326,18 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params, tokens, pos):
 
 
 def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
-                     num_blocks: int, block_size: int) -> Params:
+                     num_blocks: int, block_size: int,
+                     kv_dtype=None) -> Params:
     """All MoE attention layers are global: every KV cache is paged."""
     del batch, max_len
+    quant = kv_dtype == "int8"
     n_moe = cfg.num_layers - cfg.first_dense_layers
     c = {"moe_layers": L.init_kv_pages(cfg, num_blocks, block_size,
-                                       stack=(n_moe,))}
+                                       stack=(n_moe,), quant=quant)}
     if cfg.first_dense_layers:
         c["dense_layers"] = L.init_kv_pages(
-            cfg, num_blocks, block_size, stack=(cfg.first_dense_layers,))
+            cfg, num_blocks, block_size, stack=(cfg.first_dense_layers,),
+            quant=quant)
     return c
 
 
@@ -355,7 +370,8 @@ def decode_step_paged(cfg: ModelConfig, params: Params, cache: Params,
 
 
 def extend_paged(cfg: ModelConfig, params: Params, cache: Params, tokens,
-                 pos, block_tables, valid_len=None):
+                 pos, block_tables, valid_len=None,
+                 use_pallas: bool = False):
     """Score S tokens against the paged cache in one call (all MoE
     attention is global => fully paged).  See ``transformer.extend_paged``
     for the row semantics and the ``valid_len`` write-drop contract."""
@@ -366,7 +382,7 @@ def extend_paged(cfg: ModelConfig, params: Params, cache: Params, tokens,
         def dbody(h, inp):
             lp, cc = inp
             h, c2 = T.block_extend_paged(cfg, lp, h, pos, cc, block_tables,
-                                         valid_len)
+                                         valid_len, use_pallas=use_pallas)
             return h, c2
         x, dc = lax.scan(dbody, x, (params["dense_layers"],
                                     cache["dense_layers"]))
@@ -375,7 +391,7 @@ def extend_paged(cfg: ModelConfig, params: Params, cache: Params, tokens,
     def body(h, inp):
         lp, cc = inp
         h, c2 = moe_block_extend_paged(cfg, lp, h, pos, cc, block_tables,
-                                       valid_len)
+                                       valid_len, use_pallas=use_pallas)
         return h, c2
     x, mc = lax.scan(body, x, (params["moe_layers"], cache["moe_layers"]))
     new_cache["moe_layers"] = mc

@@ -278,10 +278,13 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
 
 
 def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
-                     num_blocks: int, block_size: int) -> Params:
+                     num_blocks: int, block_size: int,
+                     kv_dtype=None) -> Params:
     """SSM state is O(1) — there are no KV pages to allocate; the paged
-    cache is the dense one and the engine's pool sees zero demand."""
-    del num_blocks, block_size
+    cache is the dense one and the engine's pool sees zero demand
+    (``kv_dtype`` is accepted and ignored: no pages, nothing to
+    quantize)."""
+    del num_blocks, block_size, kv_dtype
     return init_cache(cfg, batch, max_len)
 
 
@@ -292,7 +295,8 @@ def decode_step_paged(cfg: ModelConfig, params: Params, cache: Params,
 
 
 def extend_paged(cfg: ModelConfig, params: Params, cache: Params, tokens,
-                 pos, block_tables, valid_len=None):
+                 pos, block_tables, valid_len=None,
+                 use_pallas: bool = False):
     """SSM decode state is an O(1) recurrence: scoring S tokens advances
     it irreversibly, and a rejected speculation could not roll back by
     position masking the way paged KV does.  Gated out of the

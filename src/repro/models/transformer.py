@@ -138,13 +138,15 @@ def block_decode_paged(cfg: ModelConfig, p: Params, x, cache, pos,
 
 
 def block_extend_paged(cfg: ModelConfig, p: Params, x, pos, cache,
-                       block_tables, valid_len=None):
+                       block_tables, valid_len=None, *,
+                       use_pallas: bool = False):
     """``block_decode_paged`` for S tokens at once — speculative verify
     / chunked catch-up (``layers.attention_extend_paged``)."""
     _, norm = L.make_norm(cfg)
     h = norm(p["ln1"], x)
     a, new_cache = L.attention_extend_paged(cfg, p["attn"], h, pos, cache,
-                                            block_tables, valid_len)
+                                            block_tables, valid_len,
+                                            use_pallas=use_pallas)
     if cfg.sandwich_norms:
         a = norm(p["ln1_post"], a)
     x = x + a
@@ -289,21 +291,25 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
 
 
 def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
-                     num_blocks: int, block_size: int) -> Params:
+                     num_blocks: int, block_size: int,
+                     kv_dtype=None) -> Params:
     """Like ``init_cache`` but GLOBAL layers get a shared page pool
     (no batch axis) instead of per-slot ``max_len`` strips; local
-    ring-window layers stay dense at W."""
+    ring-window layers stay dense at W.  ``kv_dtype="int8"`` makes the
+    pool quantized (scale leaves ride along; dense ring caches stay
+    f32 — they are per-slot, not pool capacity)."""
+    quant = kv_dtype == "int8"
     nb, rem = cfg.pattern_blocks()
     if cfg.pattern_period <= 1:
         return {"layers": L.init_kv_pages(cfg, num_blocks, block_size,
-                                          stack=(nb,))}
+                                          stack=(nb,), quant=quant)}
     W = min(cfg.local_window, max_len)
     c = {
         "super": {
             "local": L.init_kv_cache(cfg, batch, W,
                                      stack=(nb, cfg.pattern_period - 1)),
             "global": L.init_kv_pages(cfg, num_blocks, block_size,
-                                      stack=(nb,)),
+                                      stack=(nb,), quant=quant),
         }
     }
     if rem:
@@ -400,7 +406,8 @@ def decode_step_paged(cfg: ModelConfig, params: Params, cache: Params,
 
 
 def extend_paged(cfg: ModelConfig, params: Params, cache: Params, tokens,
-                 pos, block_tables, valid_len=None):
+                 pos, block_tables, valid_len=None,
+                 use_pallas: bool = False):
     """Score S tokens against the paged cache in ONE jitted call.
 
     tokens: (B, S) int32 at absolute positions ``pos + i`` (pos: (B,)
@@ -422,7 +429,7 @@ def extend_paged(cfg: ModelConfig, params: Params, cache: Params, tokens,
         def body(h, inp):
             lp, c = inp
             h, c2 = block_extend_paged(cfg, lp, h, pos, c, block_tables,
-                                       valid_len)
+                                       valid_len, use_pallas=use_pallas)
             return h, c2
         x, new_c = lax.scan(body, x, (_uniform_layers(cfg, trunk),
                                       cache["layers"]))
@@ -439,7 +446,7 @@ def extend_paged(cfg: ModelConfig, params: Params, cache: Params, tokens,
             h, lc = lax.scan(local_body, h, (sp["local"], sc["local"]))
             h, gc = block_extend_paged(cfg, sp["global"], h, pos,
                                        sc["global"], block_tables,
-                                       valid_len)
+                                       valid_len, use_pallas=use_pallas)
             return h, {"local": lc, "global": gc}
 
         x, new_super = lax.scan(super_body, x,

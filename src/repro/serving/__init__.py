@@ -93,6 +93,36 @@ Admission semantics (the contract tests rely on)
   wave-for-wave identically); the same ``extend_paged``/``extend``
   path retires the old 1-token-per-step catch-up prefill on every
   attention family.
+* **int8 paged KV (quantized serving).** ``ServeConfig.quant_kv="int8"``
+  stores pool pages as int8 with one f32 symmetric scale per
+  (page, token offset, kv head) head_dim vector — extra
+  ``k_scale``/``v_scale`` pool leaves of shape
+  ``(num_blocks, block_size, kv_heads)``, a ~``4/head_dim`` overhead
+  that shrinks page bytes ~3.8x at head_dim 64
+  (``serving.kv_pool.page_bytes``) and raises the admission ceiling by
+  the same factor at fixed HBM.  Quantization happens ON WRITE
+  (``models.layers.scatter_kv_pages`` / ``scatter_kv_tokens``) so a
+  committed page is never re-scaled — the write-once invariant CoW,
+  rollback and in-flight sharing rely on is untouched, and every
+  generic page machinery path (CoW copies, chain serialization,
+  persistence, preemption) covers the scale leaves automatically
+  because they are ordinary pool leaves.  Reads dequantize either by
+  gather (jnp path) or FUSED inside the Pallas paged decode/extend
+  kernels (``use_pallas_paged`` — ``kernels.flash_attention``
+  ``paged_attention`` / ``paged_extend_attention`` with
+  ``k_scale``/``v_scale``).  Decode is NOT bit-exact vs f32: the
+  engine-matrix gates it tolerance-based (longest-common-prefix +
+  first-token agreement vs the dense vanilla reference), while
+  quant-vs-quant restart-warm persistence stays bit-identical and a
+  store header pins the quant layout (f32<->int8 stores are rejected
+  "mismatched", the engine starts cold).  ``quant_draft=True``
+  additionally serves a separate draft model with int8 weights via
+  ``models.layers.quantize_matmul_params``/``weight_einsum`` (TPU:
+  the ``quant_matmul`` Pallas kernel) — greedy spec output remains
+  bit-exact because the f32 verify trunk decides every token; a
+  quantized draft can only change acceptance rate.  Families without
+  paged KV (ssm, hybrid) accept ``quant_kv`` and serve dense
+  unquantized (``engine.quant`` reports the armed state).
 * **KV-preserving preemption.** ``preempt()`` extracts the slot's dense
   cache leaves and decode position onto ``Request.saved_state`` and
   detaches its KV pages (refcounts held, zero copies); re-submission

@@ -260,13 +260,17 @@ def cache_batch_axes(cfg: ModelConfig, max_len: int):
 
 
 def paged_cache_axes(cfg: ModelConfig, max_len: int, num_blocks: int,
-                     block_size: int):
+                     block_size: int, kv_dtype=None):
     """Like ``cache_batch_axes`` for the paged cache: shared page-pool
-    leaves have no batch axis and map to -1."""
+    leaves have no batch axis and map to -1.  With ``kv_dtype="int8"``
+    the probe includes the ``k_scale``/``v_scale`` pool leaves, which
+    map to -1 like their int8 K/V twins — all generic pool-leaf
+    machinery (CoW copies, chain gathers, persistence) rides on these
+    axes and so covers the scales with no special cases."""
     s1 = jax.eval_shape(partial(M.init_paged_cache, cfg, _PROBE_A, max_len,
-                                num_blocks, block_size))
+                                num_blocks, block_size, kv_dtype=kv_dtype))
     s2 = jax.eval_shape(partial(M.init_paged_cache, cfg, _PROBE_B, max_len,
-                                num_blocks, block_size))
+                                num_blocks, block_size, kv_dtype=kv_dtype))
     return jax.tree.map(_diff_axis, s1, s2)
 
 
@@ -386,6 +390,30 @@ class ServeConfig:
     # many tokens is treated as a miss (a 1-token accidental hit would
     # CoW-fork a page for near-zero reuse).  1 = accept any hit.
     min_match_tokens: int = 1
+    # ---- quantized serving (capacity lever: edge hubs are pool-bound) --
+    # quant_kv="int8" stores the paged pool's K/V as int8 with one f32
+    # scale per (page, token-offset, kv-head) head_dim vector riding in
+    # parallel k_scale/v_scale pool leaves (~4/head_dim byte overhead;
+    # ~3.8x pool capacity at head_dim 64).  Scales are write-once like
+    # the pages themselves, so CoW/rollback/in-flight sharing semantics
+    # are unchanged, and persistence spills int8 bytes + scales (the
+    # store header pins the layout: an f32<->int8 store mismatch is a
+    # clean cold start).  Decode/extend logits shift within a small
+    # per-family tolerance (gated in tests/test_engine_matrix.py, NOT
+    # bit-exact); use_pallas_paged additionally fuses the dequant into
+    # the Pallas paged decode AND extend kernels so the f32 pool never
+    # materialises.  None = f32 pool, every path stays bit-exact.
+    # Families with no pages (ssm, hybrid) quietly ignore it.
+    quant_kv: Optional[str] = None
+    # quantize the DRAFT model's weights to int8 (per-out-channel
+    # scales, models.layers.quantize_matmul_params; TPU matmuls go
+    # through the kernels.quant_matmul Pallas kernel).  Greedy spec
+    # output stays BIT-exact — the verify model is untouched; only the
+    # acceptance rate (perf, not correctness) can shift.  Rejected for
+    # the early-exit self-draft, which shares the verify trunk by
+    # reference (quantizing would materialise a copy instead of saving
+    # memory).
+    quant_draft: bool = False
 
 
 class EdgeServingEngine:
@@ -404,7 +432,14 @@ class EdgeServingEngine:
         self.scfg = scfg
         B, T = scfg.max_slots, scfg.max_len
         bs = scfg.kv_block_size
+        if scfg.quant_kv not in (None, "int8"):
+            raise ValueError(
+                f"quant_kv must be None or 'int8', got {scfg.quant_kv!r}")
         self.paged = bool(scfg.paged)
+        # quantization only exists as a POOL layout; the dense twin
+        # keeps f32 strips (it is the bit-exact reference the quantized
+        # engine is tolerance-gated against)
+        self.quant = bool(self.paged and scfg.quant_kv == "int8")
         if self.paged:
             if bs < 1:
                 raise ValueError(f"kv_block_size must be >= 1, got {bs}")
@@ -421,15 +456,18 @@ class EdgeServingEngine:
                 n_pool = scfg.kv_pool_blocks * scfg.kv_block_size // bs
             else:
                 n_pool = B * self.n_blk
-            axes = paged_cache_axes(cfg, T, n_pool, bs)
+            axes = paged_cache_axes(cfg, T, n_pool, bs,
+                                    kv_dtype=scfg.quant_kv)
             # families with no global KV layers (ssm, hybrid ring) have
             # zero pool demand — run them on the dense path outright
             self.paged = any(a < 0 for a in jax.tree.leaves(axes))
         self.block_size = bs              # effective page size
+        self.quant = bool(self.paged and scfg.quant_kv == "int8")
         if self.paged:
             self.axes = axes
             self.pool = KVBlockPool(n_pool, bs)
-            self.cache = M.init_paged_cache(cfg, B, T, n_pool, bs)
+            self.cache = M.init_paged_cache(cfg, B, T, n_pool, bs,
+                                            kv_dtype=scfg.quant_kv)
             self.block_tables = np.full((B, self.n_blk), -1, np.int32)
             self.slot_blocks: list[list[int]] = [[] for _ in range(B)]
         else:
@@ -494,6 +532,15 @@ class EdgeServingEngine:
             if draft is not None:
                 dcfg, dparams = draft
             elif scfg.draft_arch in (None, "self"):
+                if scfg.quant_draft:
+                    # the self-draft trunk IS the verify trunk (shared
+                    # by reference) — quantizing it would materialise a
+                    # private copy, the opposite of saving draft bytes
+                    raise ValueError(
+                        "quant_draft requires a separate draft model "
+                        "(draft_arch or an explicit draft); the "
+                        "early-exit self-draft shares the verify trunk "
+                        "by reference")
                 dcfg, dparams = make_self_draft(
                     cfg, params, key=jax.random.PRNGKey(scfg.seed))
             else:
@@ -505,7 +552,13 @@ class EdgeServingEngine:
             if problems:
                 raise ValueError("spec_decode misconfigured: "
                                  + "; ".join(problems))
+            if scfg.quant_draft:
+                from repro.models.layers import quantize_matmul_params
+                dparams = quantize_matmul_params(dparams)
             self.spec = SpecDecoder(dcfg, dparams, B, T)
+        elif scfg.quant_draft and not scfg.spec_decode:
+            raise ValueError("quant_draft without spec_decode: there is "
+                             "no draft model to quantize")
         self.tokens = np.zeros((B, 1), np.int32)
         self.pos = np.zeros((B,), np.int32)
         self.temps = np.zeros((B,), np.float32)
@@ -1122,7 +1175,8 @@ class EdgeServingEngine:
         else:
             logits, new_cache = M.extend_paged(self.cfg, params, cache,
                                                tokens, pos, block_tables,
-                                               valid)
+                                               valid,
+                                               self.scfg.use_pallas_paged)
         logits = logits.astype(jnp.float32)
         greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return greedy, (logits if need_logits else None), new_cache
@@ -1613,6 +1667,12 @@ class EdgeServingEngine:
                 sig.append([list(shape), str(lv.dtype)])
         return {"version": PERSIST_VERSION, "config": cfg_digest,
                 "params": fp.hexdigest(), "block_size": self.block_size,
+                # pins the pool quant layout explicitly (the leaf sigs
+                # already differ — int8 dtypes + extra scale leaves —
+                # but the key makes an f32<->int8 mismatch legible in
+                # the rejection reason): spilled stores carry int8 page
+                # bytes + scales and are only valid for the same layout
+                "quant_kv": self.scfg.quant_kv if self.quant else None,
                 "leaves": sig}
 
     def _chain_pages_host(self, blocks) -> list[np.ndarray]:
@@ -1751,6 +1811,21 @@ class EdgeServingEngine:
             out.update(pool_blocks=self.pool.num_blocks,
                        pool_free=self.pool.num_free,
                        pool_shared=self.pool.num_shared)
+        if self.quant or self.scfg.quant_draft:
+            from repro.serving.kv_pool import page_bytes
+            out.update(
+                quant_kv=self.scfg.quant_kv or "",
+                quant_draft=bool(self.scfg.quant_draft
+                                 and self.spec is not None),
+                # deterministic capacity facts for the baseline gate:
+                # bytes of one page under this layout vs f32, and how
+                # many int8 pages fit in the f32 pool's byte budget
+                quant_page_bytes=page_bytes(self.cfg, self.block_size,
+                                            self.scfg.quant_kv
+                                            if self.quant else None),
+                quant_f32_page_bytes=page_bytes(self.cfg,
+                                                self.block_size, None),
+            )
         if self.scfg.spec_decode:
             out.update(
                 spec_active=self.spec is not None,

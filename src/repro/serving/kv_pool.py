@@ -47,6 +47,40 @@ def blocks_for_tokens(n_tokens: int, block_size: int) -> int:
     return -(-n_tokens // block_size)
 
 
+def page_bytes(cfg, block_size: int, kv_dtype=None) -> int:
+    """Device bytes of ONE physical page across all stacked pool layers
+    for the given quant layout.
+
+    f32 layout: K and V at 4 bytes/element.  ``kv_dtype="int8"``: K/V at
+    1 byte plus one f32 scale per (token offset, kv head) — an overhead
+    of ``4 / head_dim`` relative to the int8 bytes, so the page shrinks
+    ~3.8x at head_dim 64 (the capacity lever the admission ceiling
+    sees).  Only GLOBAL attention layers hold pages; callers that mix
+    dense ring layers (gemma patterns) account those separately.
+    """
+    n_global = sum(1 for i in range(cfg.num_layers)
+                   if cfg.pattern_period <= 1
+                   or (i + 1) % cfg.pattern_period == 0)
+    per_tok = block_size * cfg.num_kv_heads
+    if kv_dtype == "int8":
+        elem = per_tok * cfg.head_dim * 1 + per_tok * 4   # int8 + f32 scale
+    elif kv_dtype is None:
+        elem = per_tok * cfg.head_dim * 4
+    else:
+        raise ValueError(f"unknown kv_dtype {kv_dtype!r}")
+    return 2 * elem * max(n_global, 1)                     # K and V
+
+
+def pool_blocks_for_budget(cfg, block_size: int, budget_bytes: int,
+                           kv_dtype=None) -> int:
+    """How many pool pages fit in ``budget_bytes`` of device memory for
+    the given quant layout — the fixed-HBM capacity comparison the
+    quantized-serving benchmark reports (int8 vs f32 concurrent slots
+    at identical pool bytes)."""
+    pb = page_bytes(cfg, block_size, kv_dtype)
+    return max(0, int(budget_bytes) // pb)
+
+
 class KVBlockPool:
     """Fixed-size KV page allocator with refcounts (host-side)."""
 

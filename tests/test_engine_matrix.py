@@ -135,6 +135,112 @@ def setup_chunked(setup):
     return reference
 
 
+# ---------------------------------------------------------------------------
+# int8 KV quantization axis
+# ---------------------------------------------------------------------------
+# quant_kv="int8" is NOT bit-exact vs the f32 dense vanilla reference
+# (pages round-trip through int8 + per-row scales), so these combos are
+# TOLERANCE-gated instead of token-for-token: greedy decode must track
+# the reference for a long common prefix (drift compounds after the
+# first flipped argmax, so longest-common-prefix is the right metric)
+# and every request's FIRST token must match almost always (cold
+# prefill logits never touch quantized bytes — only prefix-cache hit
+# suffixes read dequantized pages).  Empirically the smoke config holds
+# ~88% LCP / 7-of-7 first tokens; the gate leaves margin.
+
+QUANT_COMBOS = [
+    (False, False, False, "fifo"),
+    (True,  False, False, "priority"),
+    (True,  False, True,  "edf"),
+    (False, False, True,  "fifo"),
+    (True,  True,  False, "priority"),     # spec verify on quant pages
+]
+
+
+@pytest.mark.parametrize("prefix,spec,pallas,policy", QUANT_COMBOS)
+def test_quant_kv_tracks_dense_vanilla(setup, prefix, spec, pallas,
+                                       policy):
+    cfg, params, reference = setup
+    eng = EdgeServingEngine(cfg, params, ServeConfig(
+        max_slots=3, max_len=96, prefill_buckets=(8, 16, 32), seed=3,
+        quant_kv="int8", prefix_cache=prefix, spec_decode=spec,
+        draft_arch="self", use_pallas_paged=pallas, policy=policy))
+    assert eng.quant                       # paged + int8 actually armed
+    for r in _traffic(cfg.vocab_size):
+        eng.submit(r)
+    eng.run_until_drained()
+    got = {r.uid: tuple(r.generated) for r in eng.completed}
+    assert set(got) == set(reference)
+    lcp = total = first = 0
+    for uid in reference:
+        a, b = reference[uid], got[uid]
+        assert len(a) == len(b)
+        total += len(a)
+        first += a[0] == b[0]
+        for x, y in zip(a, b):
+            if x != y:
+                break
+            lcp += 1
+    assert first >= len(reference) - 1, (first, got)
+    assert lcp >= 0.6 * total, (
+        f"quant drift beyond tolerance: lcp {lcp}/{total} for "
+        f"prefix={prefix} spec={spec} pallas={pallas} policy={policy}")
+    stats = eng.stats()
+    assert stats["quant_kv"] == "int8"
+    assert stats["quant_page_bytes"] < stats["quant_f32_page_bytes"]
+    cached = eng.prefix_cache.num_blocks if eng.prefix_cache else 0
+    assert eng.pool.num_free + cached == eng.pool.num_blocks
+    if spec:
+        assert eng.spec is not None and stats["spec_rounds"] >= 1, stats
+
+
+def test_quant_draft_greedy_is_bit_exact(setup):
+    """int8 draft weights change PROPOSALS only: greedy speculative
+    output is decided by the (f32) verify trunk, so tokens must equal
+    the dense vanilla reference token-for-token even with a quantized
+    draft — a worse draft can only cost acceptance rate."""
+    cfg, params, reference = setup
+    eng = EdgeServingEngine(cfg, params, ServeConfig(
+        max_slots=3, max_len=96, prefill_buckets=(8, 16, 32), seed=3,
+        spec_decode=True, draft_arch="gemma3-1b", quant_draft=True,
+        policy="fifo"))
+    for r in _traffic(cfg.vocab_size):
+        eng.submit(r)
+    eng.run_until_drained()
+    got = {r.uid: tuple(r.generated) for r in eng.completed}
+    assert got == reference, "quantized draft leaked into verify output"
+    stats = eng.stats()
+    assert stats["quant_draft"] is True and stats["spec_rounds"] >= 1
+
+
+def test_quant_config_validation():
+    """Misconfigurations fail loudly at engine construction."""
+    cfg = get_smoke_config(ARCH)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="quant_kv"):
+        EdgeServingEngine(cfg, params, ServeConfig(quant_kv="int4"))
+    with pytest.raises(ValueError, match="quant_draft"):
+        EdgeServingEngine(cfg, params, ServeConfig(
+            spec_decode=True, draft_arch="self", quant_draft=True))
+    with pytest.raises(ValueError, match="quant_draft"):
+        EdgeServingEngine(cfg, params, ServeConfig(quant_draft=True))
+
+
+def test_quant_kv_off_on_nonpaged_families():
+    """ssm/hybrid silently serve dense: quant_kv is accepted but the
+    engine reports the quant machinery disarmed (no pages to quantize)."""
+    cfg = get_smoke_config("mamba2-370m")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = EdgeServingEngine(cfg, params, ServeConfig(
+        max_slots=2, max_len=64, quant_kv="int8"))
+    assert not eng.paged and not eng.quant
+    r = Request(uid=0, prompt=np.arange(4, 12, dtype=np.int32),
+                max_new_tokens=4)
+    eng.submit(r)
+    eng.run_until_drained()
+    assert len(r.generated) == 4
+
+
 @pytest.mark.parametrize("paged,prefix,spec,pallas,policy", COMBOS)
 def test_chunked_interleave_matches_chunked_dense(setup, setup_chunked,
                                                   paged, prefix, spec,

@@ -161,6 +161,117 @@ def test_paged_attention_matches_ref(B, H, kv, hd, nB, bs, n_blk, softcap):
                                rtol=2e-3, atol=2e-3)
 
 
+# ---------------------------------------------------------------------------
+# int8 KV quantization + fused dequant reads
+# ---------------------------------------------------------------------------
+
+def _quant_paged_case(seed, B, H, kv, hd, nB, bs, n_blk):
+    """`_paged_case` plus the int8 twin of the pool: per-(token, kv-head)
+    symmetric scales as written by ``layers.quantize_kv``."""
+    from repro.models import layers as L
+    q, kp, vp, bt, ln = _paged_case(seed, B, H, kv, hd, nB, bs, n_blk)
+    kq, ks = L.quantize_kv(kp)
+    vq, vs = L.quantize_kv(vp)
+    return q, kq, ks, vq, vs, bt, ln
+
+
+def test_quantize_kv_roundtrip_bounds():
+    """int8 values stay in [-127, 127] and the dequant error of every
+    head_dim vector is within one quantization step of its row scale."""
+    from repro.models import layers as L
+    x = jax.random.normal(jax.random.PRNGKey(3), (6, 8, 2, 64)) * 2.0
+    q, s = L.quantize_kv(x)
+    assert q.dtype == jnp.int8 and s.shape == x.shape[:-1]
+    assert int(jnp.max(q)) <= 127 and int(jnp.min(q)) >= -127
+    err = jnp.abs(L.dequantize_kv(q, s) - x)
+    assert float(jnp.max(err - 0.5 * s[..., None])) <= 1e-6
+
+
+@pytest.mark.parametrize("B,H,kv,hd,nB,bs,n_blk",
+                         [(3, 4, 2, 32, 12, 8, 4),
+                          (2, 8, 8, 64, 10, 16, 2)])
+@pytest.mark.parametrize("softcap", [0.0, 30.0])
+def test_paged_attention_quant_matches_ref(B, H, kv, hd, nB, bs, n_blk,
+                                           softcap):
+    """Fused dequant decode kernel == gather+dequant reference."""
+    q, kq, ks, vq, vs, bt, ln = _quant_paged_case(
+        B * 11 + H, B, H, kv, hd, nB, bs, n_blk)
+    out = ops.paged_attention(q, kq, vq, bt, ln, scale=hd ** -0.5,
+                              softcap=softcap, k_scale=ks, v_scale=vs)
+    exp = ref.paged_attention_ref(q, kq, vq, bt, ln, scale=hd ** -0.5,
+                                  softcap=softcap, k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_paged_attention_quant_close_to_f32():
+    """Dequantized attention tracks the f32-pool result within int8
+    tolerance — the dequant is semantically a KV read, not just
+    self-consistent."""
+    from repro.models import layers as L
+    B, H, kv, hd, nB, bs, n_blk = 3, 4, 2, 64, 12, 8, 4
+    q, kp, vp, bt, ln = _paged_case(5, B, H, kv, hd, nB, bs, n_blk)
+    kq, ks = L.quantize_kv(kp)
+    vq, vs = L.quantize_kv(vp)
+    f32 = ref.paged_attention_ref(q, kp, vp, bt, ln, scale=hd ** -0.5)
+    q8 = ops.paged_attention(q, kq, vq, bt, ln, scale=hd ** -0.5,
+                             k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(np.asarray(q8), np.asarray(f32),
+                               rtol=0.05, atol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# paged extend (multi-token catch-up read)
+# ---------------------------------------------------------------------------
+
+def _extend_case(seed, B, H, kv, hd, nB, bs, n_blk, S):
+    q1, kp, vp, bt, ln = _paged_case(seed, B, H, kv, hd, nB, bs, n_blk)
+    qe = jax.random.normal(jax.random.PRNGKey(seed + 3),
+                           (B, S, H, hd), jnp.float32) * 0.5
+    kn = jax.random.normal(jax.random.PRNGKey(seed + 4),
+                           (B, S, kv, hd)) * 0.5
+    vn = jax.random.normal(jax.random.PRNGKey(seed + 5),
+                           (B, S, kv, hd)) * 0.5
+    return qe, kp, vp, kn, vn, bt, ln
+
+
+@pytest.mark.parametrize("B,H,kv,hd,nB,bs,n_blk,S",
+                         [(3, 4, 2, 32, 12, 8, 4, 4),
+                          (2, 8, 8, 64, 10, 16, 2, 6),
+                          (4, 4, 1, 128, 20, 8, 4, 3)])
+@pytest.mark.parametrize("softcap", [0.0, 30.0])
+def test_paged_extend_matches_ref(B, H, kv, hd, nB, bs, n_blk, S, softcap):
+    """Fused extend kernel (paged context + dense causal suffix in one
+    online-softmax pass) == the gather+concat reference."""
+    qe, kp, vp, kn, vn, bt, ln = _extend_case(
+        B * 13 + H + S, B, H, kv, hd, nB, bs, n_blk, S)
+    out = ops.paged_extend_attention(qe, kp, vp, kn, vn, bt, ln,
+                                     scale=hd ** -0.5, softcap=softcap)
+    exp = ref.paged_extend_attention_ref(qe, kp, vp, kn, vn, bt, ln,
+                                         scale=hd ** -0.5, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("softcap", [0.0, 30.0])
+def test_paged_extend_quant_matches_ref(softcap):
+    """Fused dequant extend kernel == gather+dequant+concat reference."""
+    from repro.models import layers as L
+    B, H, kv, hd, nB, bs, n_blk, S = 3, 4, 2, 64, 12, 8, 4, 5
+    qe, kp, vp, kn, vn, bt, ln = _extend_case(
+        9, B, H, kv, hd, nB, bs, n_blk, S)
+    kq, ks = L.quantize_kv(kp)
+    vq, vs = L.quantize_kv(vp)
+    out = ops.paged_extend_attention(qe, kq, vq, kn, vn, bt, ln,
+                                     scale=hd ** -0.5, softcap=softcap,
+                                     k_scale=ks, v_scale=vs)
+    exp = ref.paged_extend_attention_ref(qe, kq, vq, kn, vn, bt, ln,
+                                         scale=hd ** -0.5, softcap=softcap,
+                                         k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-3, atol=2e-3)
+
+
 def test_paged_ref_matches_contiguous_attention():
     """The gather-based paged reference on an IDENTITY table equals
     masked dense attention over the same contiguous K/V — ties the

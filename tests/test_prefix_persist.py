@@ -155,6 +155,64 @@ def test_mismatched_config_and_params_rejected(setup, tmp_path):
     assert len(got[0]) == 5
 
 
+def test_quant_restart_warm_matches_quant_cold(setup, tmp_path):
+    """int8 pools persist: spilled chains carry the int8 page bytes AND
+    the scale leaves, and a restarted quantized engine serves warm hits
+    identical to its own cold run (quant-vs-quant — the f32 reference is
+    a different numeric system and is gated in the engine matrix)."""
+    cfg, params = setup
+    path = str(tmp_path / "prefix.npz")
+
+    cold = _serve(EdgeServingEngine(
+        cfg, params, _scfg(prefix_cache=False, quant_kv="int8")),
+        _traffic(cfg))
+
+    eng_a = EdgeServingEngine(cfg, params,
+                              _scfg(persist=path, quant_kv="int8"))
+    assert eng_a.quant
+    _serve(eng_a, _traffic(cfg))
+    saved = eng_a.close()
+    assert saved["persist_saved_chains"] >= 1
+
+    eng_b = EdgeServingEngine(cfg, params,
+                              _scfg(persist=path, quant_kv="int8"))
+    assert eng_b.persist_rejected == ""
+    assert eng_b.persist_loaded_chains >= 1
+    warm = _serve(eng_b, _traffic(cfg))
+    assert eng_b.prefix_cache.stats()["hits"] >= len(warm)
+    assert warm == cold                    # restart-warm == cold, bitwise
+    eng_b.pool.assert_consistent()
+
+
+def test_quant_layout_mismatch_rejected(setup, tmp_path):
+    """A store written by an f32 engine must not rehydrate into an int8
+    pool (or vice versa): the header pins the quant layout, the engine
+    rejects cleanly and starts cold."""
+    cfg, params = setup
+    path_f32 = str(tmp_path / "f32.npz")
+    eng_a = EdgeServingEngine(cfg, params, _scfg(persist=path_f32))
+    _serve(eng_a, _traffic(cfg, n=2))
+    assert eng_a.close()["persist_saved_chains"] >= 1
+
+    # f32 store -> int8 engine: rejected, non-fatal
+    eng_q = EdgeServingEngine(cfg, params,
+                              _scfg(persist=path_f32, quant_kv="int8"))
+    assert eng_q.persist_loaded_chains == 0
+    assert "mismatched" in eng_q.persist_rejected
+    got = _serve(eng_q, _traffic(cfg, n=1))
+    assert len(got[0]) == 5
+
+    # int8 store -> f32 engine: same rejection, opposite direction
+    path_q = str(tmp_path / "int8.npz")
+    eng_b = EdgeServingEngine(cfg, params,
+                              _scfg(persist=path_q, quant_kv="int8"))
+    _serve(eng_b, _traffic(cfg, n=2))
+    assert eng_b.close()["persist_saved_chains"] >= 1
+    eng_f = EdgeServingEngine(cfg, params, _scfg(persist=path_q))
+    assert eng_f.persist_loaded_chains == 0
+    assert "mismatched" in eng_f.persist_rejected
+
+
 def test_overlapping_store_rehydrates_without_page_aliasing(setup, tmp_path):
     """Defense in depth for hand-merged / legacy stores: a store holding
     BOTH a partial-tail chain and its extension (close()'s prefix dedup
