@@ -24,7 +24,11 @@ spec output is gated to be bit-identical to vanilla — and an OPEN-LOOP
 scenario (Poisson arrivals, heavy-tailed lognormal prompt/output
 lengths, no drain assumption) reporting TTFT/inter-token percentiles
 and goodput under an SLO, with chunked-prefill interleaving gated to
-strictly beat monolithic-prefill stalls on decode inter-token p99.
+strictly beat monolithic-prefill stalls on decode inter-token p99, and
+a TELEMETRY leg (``ServeConfig.trace=True`` over the same workload)
+gating trace neutrality: traced tokens bit-identical to untraced, a
+structurally valid Chrome-trace dump, exact TTFT decomposition — with
+the tracing overhead (wall-clock delta %) reported ungated.
 
   PYTHONPATH=src python -m benchmarks.serving_throughput [--requests N]
       [--write-baseline PATH] [--check PATH]
@@ -97,7 +101,13 @@ EXACT_FIELDS = ("requests", "decode_steps", "tokens", "peak_active",
                 "capacity_requests", "capacity_f32_blocks",
                 "capacity_int8_blocks", "capacity_f32_concurrent",
                 "capacity_int8_concurrent", "capacity_gain_ok",
-                "capacity_parity_ok")
+                "capacity_parity_ok",
+                # telemetry: tracing must be behaviour-neutral (traced
+                # tokens bit-identical to the untraced leg), the dump
+                # structurally valid Chrome-trace JSON, and every
+                # per-request TTFT decomposition must sum exactly
+                "trace_requests", "trace_matches_untraced",
+                "trace_valid", "trace_ttft_decomp_ok")
 
 
 def _workload(n_requests: int, vocab: int, seed: int = 0):
@@ -514,6 +524,72 @@ def _capacity_demo(seed: int = 0, n_requests: int = 16) -> dict:
     }
 
 
+def _trace_demo(seed: int = 0, n_requests: int = 12) -> dict:
+    """Telemetry neutrality: the SAME mixed workload with
+    ``ServeConfig.trace=True`` must emit bit-identical tokens to the
+    untraced leg (the tracer only observes — its ``block_until_ready``
+    fences are value-neutral), the Chrome-trace dump must be
+    structurally valid (every event ph/ts/pid/tid, B/E balanced) and
+    every request's queue_wait + prefill + first_wave must sum to its
+    TTFT exactly (well under the 1 ms acceptance bound — the segments
+    share boundary stamps).  Trace overhead (wall-clock delta %) is
+    reported ungated: it is machine noise at this workload size, not a
+    gate."""
+    import dataclasses
+    import json as _json
+    import os
+    import tempfile
+
+    from repro.serving.telemetry import validate_chrome_trace
+
+    cfg = get_smoke_config(ARCH)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    def leg(trace):
+        eng = EdgeServingEngine(cfg, params,
+                                dataclasses.replace(_SCFG, trace=trace))
+        for r in _workload(n_requests, cfg.vocab_size, seed=seed):
+            eng.submit(r)
+        eng.run_until_drained()              # compile-warm replay
+        eng.completed.clear()
+        eng.steps = 0
+        eng.reset_rng()
+        t0 = time.perf_counter()
+        for r in _workload(n_requests, cfg.vocab_size, seed=seed):
+            eng.submit(r)
+        eng.run_until_drained()
+        elapsed = time.perf_counter() - t0
+        toks = {r.uid: tuple(r.generated) for r in eng.completed}
+        return eng, elapsed, toks
+
+    _, el_off, toks_off = leg(False)
+    eng_on, el_on, toks_on = leg(True)
+
+    tmp = tempfile.NamedTemporaryFile(suffix=".json", delete=False)
+    tmp.close()
+    try:
+        dumped = eng_on.dump_chrome_trace(tmp.name)
+        with open(tmp.name) as f:
+            trace = _json.load(f)
+    finally:
+        os.unlink(tmp.name)
+    problems = validate_chrome_trace(trace["traceEvents"])
+    decomp_ok = True
+    for row in eng_on.tracer.request_summaries():
+        parts = (row["queue_wait_us"], row["prefill_us"],
+                 row["first_wave_us"], row["ttft_us"])
+        if None in parts or abs(sum(parts[:3]) - parts[3]) > 1000.0:
+            decomp_ok = False
+    return {
+        "trace_requests": n_requests,
+        "trace_matches_untraced": toks_on == toks_off,
+        "trace_valid": not problems,
+        "trace_ttft_decomp_ok": decomp_ok,
+        "trace_events": int(dumped["events"]),
+        "trace_overhead_pct": 100.0 * (el_on - el_off) / el_off,
+    }
+
+
 def run(n_requests: int = 12, seed: int = 0) -> dict:
     cfg = get_smoke_config(ARCH)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -571,6 +647,7 @@ def run(n_requests: int = 12, seed: int = 0) -> dict:
     out.update(_spec_demo(seed, n_requests))
     out.update(_open_loop_demo(seed))
     out.update(_capacity_demo(seed))
+    out.update(_trace_demo(seed, n_requests))
     return out
 
 

@@ -1,0 +1,66 @@
+"""Fold a pytest junit-xml report into ``check_summary.json`` — the
+machine-readable verdict ``scripts/check.sh`` leaves behind so CI and
+the growth driver can gate on tier-1 counts, the serving-baseline
+verdict, and slow-test creep (slowest 5 tests) without scraping stdout.
+
+  python scripts/_check_summary.py --junit report.xml \
+      --baseline pass|fail|skipped --out check_summary.json
+"""
+import argparse
+import json
+import xml.etree.ElementTree as ET
+
+
+def summarize(junit_path: str) -> dict:
+    if not junit_path:
+        return {"ran": False}
+    root = ET.parse(junit_path).getroot()
+    suite = root if root.tag == "testsuite" else root.find("testsuite")
+    cases = []
+    for tc in suite.iter("testcase"):
+        status = "passed"
+        if tc.find("failure") is not None:
+            status = "failed"
+        elif tc.find("error") is not None:
+            status = "error"
+        elif tc.find("skipped") is not None:
+            status = "skipped"
+        cases.append({
+            "id": f"{tc.get('classname', '')}::{tc.get('name', '')}",
+            "time_s": round(float(tc.get("time", 0.0)), 2),
+            "status": status,
+        })
+    counts = {}
+    for c in cases:
+        counts[c["status"]] = counts.get(c["status"], 0) + 1
+    return {
+        "ran": True,
+        "total": len(cases),
+        "passed": counts.get("passed", 0),
+        "failed": counts.get("failed", 0) + counts.get("error", 0),
+        "skipped": counts.get("skipped", 0),
+        "slowest": sorted(cases, key=lambda c: -c["time_s"])[:5],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--junit", required=True,
+                    help="pytest --junitxml output ('' = tests not run)")
+    ap.add_argument("--baseline", required=True,
+                    choices=("pass", "fail", "skipped"),
+                    help="serving-baseline gate verdict")
+    ap.add_argument("--out", default="check_summary.json")
+    args = ap.parse_args()
+    out = {"baseline_gate": args.baseline, "tier1": summarize(args.junit)}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+    print(f"wrote {args.out}: baseline={args.baseline} "
+          f"tier1={out['tier1'].get('passed', '-')}p/"
+          f"{out['tier1'].get('failed', '-')}f/"
+          f"{out['tier1'].get('skipped', '-')}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,17 @@ ops by bytes / flops / collective bytes (trip-scaled, per chip).
   PYTHONPATH=src python scripts/diagnose.py --quant
       # per-arch quantization surface (int8 KV-poolable? draft-weight
       # quantizable?) + fused dequant kernel vs reference parity verdict
+  PYTHONPATH=src python scripts/diagnose.py --trace trace.json
+      # summarize a serving trace dump (launch.serve --trace /
+      # engine.dump_chrome_trace): top phases by total time,
+      # per-request TTFT decomposition table, spec acceptance by round
+
+Exit codes (uniform across modes so CI can gate on any of them):
+  0  report printed, all verdicts OK
+  1  failure verdict — spec pairing incompatible (--spec), prefix
+     store unreadable/corrupt (--cache), kernel parity FAIL (--quant),
+     engine failed to drain or budget overshot (--server), trace
+     invalid or structurally broken (--trace)
 """
 import json
 import sys
@@ -219,9 +230,13 @@ def server_report(args: list) -> None:
     for uid, n in enumerate((30, 6, 12)):   # one catch-up + two short
         eng.submit(req(uid, n))
     print(f"wave-budget plans ({arch}, wave_tokens=10, catch_chunk=4):")
+    overshoots = []
     for i in range(4):
         eng.step()
         plan = {s: f"{m}x{v}" for s, (m, v) in sorted(eng.last_plan.items())}
+        fed = sum(v for _, v in eng.last_plan.values())
+        if fed > eng.scfg.wave_tokens:
+            overshoots.append((i, fed))
         print(f"  wave {i}: {json.dumps(plan)}")
     print("live-slot frontier:")
     print("  slot uid   pos pending published mode")
@@ -247,11 +262,74 @@ def server_report(args: list) -> None:
     print("engine:", json.dumps({k: st[k] for k in
                                  ("steps", "mixed_waves", "wave_admitted",
                                   "cancels")}))
+    # operator verdict: every submitted request drained, no wave ever
+    # exceeded its token budget
+    done = sorted(r.uid for r in eng.completed)
+    expect = [0, 1, 2, 10, 11]
+    ok = done == expect and not overshoots
+    print(f"server verdict: drained {done} (expect {expect}), "
+          f"budget overshoots {overshoots} -> {'OK' if ok else 'FAIL'}")
+    if not ok:
+        sys.exit(1)
+
+
+def trace_report(args: list) -> None:
+    """Summarize a Chrome-trace dump produced by
+    ``launch.serve --trace`` / ``engine.dump_chrome_trace``: validity
+    verdict, top phases by total time, per-request TTFT decomposition,
+    and speculative acceptance by round.  Exits 1 when the file is
+    unreadable or structurally invalid (missing ph/ts/pid/tid,
+    unbalanced B/E spans)."""
+    from repro.serving.telemetry import summarize_trace
+
+    if not args:
+        print("usage: diagnose.py --trace <trace.json>")
+        sys.exit(1)
+    path = args[0]
+    try:
+        with open(path) as f:
+            trace = json.load(f)
+    except Exception as e:
+        print(f"trace {path}: UNREADABLE ({e!r})")
+        sys.exit(1)
+    s = summarize_trace(trace)
+    n_ev = len(trace.get("traceEvents", []))
+    print(f"trace {path}: {n_ev} events, "
+          f"{len(s['requests'])} requests")
+    print("top phases by total time:")
+    print("  phase             total_ms   calls   mean_us")
+    for p in s["phases"][:10]:
+        print(f"  {p['name']:<16s} {p['total_us'] / 1e3:9.3f} "
+              f"{p['calls']:7d} {p['mean_us']:9.1f}")
+    if s["requests"]:
+        print("per-request TTFT decomposition (ms):")
+        print("  uid    queue  prefill  first_wave    ttft     e2e  toks")
+        for r in s["requests"]:
+            def ms(v):
+                return "     -" if v is None else f"{v / 1e3:6.2f}"
+            print(f"  {r['uid']:3d} {ms(r['queue_wait_us'])} "
+                  f"{ms(r['prefill_us'])}   {ms(r['first_wave_us'])} "
+                  f" {ms(r['ttft_us'])} {ms(r['e2e_us'])} "
+                  f"{r['n_tokens']:5d}")
+    if s["accept_by_round"]:
+        print("spec acceptance by round position:")
+        for j, row in s["accept_by_round"].items():
+            print(f"  round[{j}]: {row['accepted']}/{row['proposed']} "
+                  f"accepted ({row['rate']:.2f})")
+    if s["problems"]:
+        for p in s["problems"][:20]:
+            print(f"  INVALID: {p}")
+        print(f"trace verdict: FAIL ({len(s['problems'])} problems)")
+        sys.exit(1)
+    print("trace verdict: OK")
 
 
 def main():
     from repro.compat import report
     print("compat:", json.dumps(report()))
+    if "--trace" in sys.argv:
+        trace_report([a for a in sys.argv[1:] if not a.startswith("-")])
+        return
     if "--quant" in sys.argv:
         quant_report([a for a in sys.argv[1:] if not a.startswith("-")])
         return

@@ -78,7 +78,8 @@ def admission_rank(policy: str, *, priority: int = 0, arrival: float = 0.0,
     raise ValueError(policy)
 
 
-def plan_wave(policy: str, entries, budget: Optional[int] = None) -> dict:
+def plan_wave(policy: str, entries, budget: Optional[int] = None,
+              metrics=None) -> dict:
     """Per-wave token widths for a live mixed admit/decode frontier.
 
     ``entries``: dicts with ``id`` (slot), ``want`` (the width the slot
@@ -94,6 +95,12 @@ def plan_wave(policy: str, entries, budget: Optional[int] = None) -> dict:
     best-rank-first up to each entry's ``want``.  ``budget=None``
     disables the cap (every slot takes its natural width).  Returns
     ``{id: width}``.
+
+    ``metrics``: optional ``serving.telemetry.MetricsRegistry`` —
+    budgeted plans record the wave's budget utilization (granted /
+    budget, ``sched.budget_utilization`` histogram) and count demoted
+    slots (granted < wanted, ``sched.demotions``) so QoE pressure is
+    visible without sampling ``engine.last_plan``.
 
     Width is deliberately the only lever: shrinking a catch-up or
     speculative span never changes the tokens a request emits (chunked
@@ -114,6 +121,14 @@ def plan_wave(policy: str, entries, budget: Optional[int] = None) -> dict:
         extra = min(max(1, int(e["want"])) - 1, left)
         widths[e["id"]] += extra
         left -= extra
+    if metrics is not None and entries:
+        metrics.histogram("sched.budget_utilization",
+                          (0.25, 0.5, 0.75, 0.9, 1.0)).observe(
+            sum(widths.values()) / max(int(budget), 1))
+        demoted = sum(1 for e in entries
+                      if widths[e["id"]] < max(1, int(e["want"])))
+        if demoted:
+            metrics.counter("sched.demotions").inc(demoted)
     return widths
 
 

@@ -29,7 +29,6 @@ from __future__ import annotations
 import argparse
 import asyncio
 import json
-import time
 from typing import Callable, Optional
 
 import jax
@@ -38,6 +37,7 @@ import numpy as np
 from repro.configs import ARCH_IDS, get_smoke_config, get_config
 from repro.models import model as M
 from repro.serving import EdgeServingEngine, Request, ServeConfig
+from repro.serving.telemetry import FRONTEND_TID, default_clock
 
 
 class StreamHandle:
@@ -49,14 +49,15 @@ class StreamHandle:
     mid-flight cancel from natural completion).
     """
 
-    def __init__(self, req: Request):
+    def __init__(self, req: Request, clock: Callable[[], float] = None):
         self.req = req
         self.uid = req.uid
         self.delivered = 0
         self.tokens: asyncio.Queue = asyncio.Queue()
         self.done: asyncio.Future = (
             asyncio.get_event_loop().create_future())
-        self.t_submit = time.monotonic()
+        self._clock = clock if clock is not None else default_clock
+        self.t_submit = self._clock()
         self.t_tokens: list[float] = []     # arrival time of each token
 
     def __aiter__(self):
@@ -80,10 +81,16 @@ class AsyncServingFrontend:
     oblivious to the frontend.
     """
 
-    def __init__(self, engine: EdgeServingEngine):
+    def __init__(self, engine: EdgeServingEngine,
+                 trace_path: Optional[str] = None):
         self.engine = engine
+        self.trace_path = trace_path
+        # share the engine's trace clock so frontend stamps and engine
+        # spans land on one timeline (monotonic, never the wall clock)
+        self._clock = (engine.tracer.clock if engine.tracer is not None
+                       else default_clock)
         self._inbox: list[Request] = []
-        self._cancels: list[tuple[int, asyncio.Future]] = []
+        self._cancels: list[tuple[int, asyncio.Future, float]] = []
         self._handles: dict[int, StreamHandle] = {}
         self._callbacks: dict[int, Callable] = {}
         self._wake: Optional[asyncio.Event] = None
@@ -91,7 +98,18 @@ class AsyncServingFrontend:
         self._closing = False
         self.ttft_ms: list[float] = []      # first-token latency/request
         self.itl_ms: list[float] = []       # every inter-token gap
+        self.cancel_ms: list[float] = []    # cancel() call -> applied
         self.steps = 0
+        m = engine.metrics
+        m.gauge("frontend.steps", lambda: self.steps)
+        m.gauge("frontend.streams", lambda: len(self._handles))
+        m.gauge("frontend.inbox_depth", lambda: len(self._inbox))
+        m.gauge("frontend.pending_cancels", lambda: len(self._cancels))
+
+    def metrics(self) -> dict:
+        """Deterministic snapshot of the WHOLE registry — engine,
+        subsystems, and the frontend gauges above."""
+        return self.engine.metrics.collect()
 
     # -- public API (call from coroutines on the running loop) --------
     async def start(self) -> None:
@@ -104,7 +122,7 @@ class AsyncServingFrontend:
         """Enqueue a request; returns a handle streaming its tokens."""
         if self._closing:
             raise RuntimeError("frontend is shutting down")
-        h = StreamHandle(req)
+        h = StreamHandle(req, clock=self._clock)
         self._handles[req.uid] = h
         if on_token is not None:
             self._callbacks[req.uid] = on_token
@@ -116,7 +134,7 @@ class AsyncServingFrontend:
         """Request mid-flight cancellation; the future resolves
         True/False once the engine processed it (between steps)."""
         fut = asyncio.get_event_loop().create_future()
-        self._cancels.append((uid, fut))
+        self._cancels.append((uid, fut, self._clock()))
         self._wake.set()
         return fut
 
@@ -133,7 +151,12 @@ class AsyncServingFrontend:
         self._wake.set()
         if self._task is not None:
             await self._task
-        return self.engine.close()          # persists hot chains
+        out = self.engine.close()           # persists hot chains
+        if self.trace_path and self.engine.tracer is not None:
+            out["trace"] = dict(
+                self.engine.dump_chrome_trace(self.trace_path),
+                path=self.trace_path)
+        return out
 
     def slo_stats(self, ttft_slo_ms: float = 1e9,
                   itl_slo_ms: float = 1e9) -> dict:
@@ -162,23 +185,34 @@ class AsyncServingFrontend:
         steps — the only place besides ``step`` that touches the
         engine."""
         eng = self.engine
+        tr = eng.tracer
         inbox, self._inbox = self._inbox, []
         for req in inbox:
             h = self._handles[req.uid]
-            h.t_submit = time.monotonic()
+            h.t_submit = self._clock()
             eng.submit(req)
         cancels, self._cancels = self._cancels, []
-        for uid, fut in cancels:
+        for uid, fut, t0 in cancels:
             ok = eng.cancel(uid)
+            if ok:
+                lat_ms = (self._clock() - t0) * 1e3
+                self.cancel_ms.append(lat_ms)
+                if tr is not None:
+                    tr.instant("cancel_applied", tid=FRONTEND_TID,
+                               uid=uid, latency_ms=lat_ms)
             if not fut.done():
                 fut.set_result(ok)
             if ok:
                 self._resolve(uid)
+        if tr is not None and (inbox or cancels):
+            tr.counter("frontend_queues", tid=FRONTEND_TID,
+                       streams=len(self._handles),
+                       engine_queue=len(eng.queue))
 
     def _deliver(self) -> None:
         """Diff ``req.generated`` against what each handle has seen and
         stream the delta; resolve handles whose request finished."""
-        now = time.monotonic()
+        now = self._clock()
         for uid in list(self._handles):
             h = self._handles[uid]
             req = h.req
@@ -242,7 +276,8 @@ def _build_engine(args):
                        draft_arch=args.draft if args.spec else None,
                        spec_gamma=args.gamma,
                        chunked_prefill=args.chunked,
-                       prefix_persist_path=args.persist)
+                       prefix_persist_path=args.persist,
+                       trace=bool(args.trace))
     return cfg, EdgeServingEngine(cfg, params, scfg)
 
 
@@ -271,7 +306,7 @@ def _make_requests(cfg, args) -> list:
 
 async def _serve_async(eng, reqs, args) -> dict:
     """Open-loop style demo: staggered arrivals into a live frontend."""
-    fe = AsyncServingFrontend(eng)
+    fe = AsyncServingFrontend(eng, trace_path=args.trace)
     await fe.start()
     handles = []
     gap = args.arrival_gap_ms / 1e3
@@ -327,6 +362,11 @@ def main() -> None:
                          "rejected cleanly (cold start).  Only engages "
                          "on prefix-sharable archs (see "
                          "scripts/diagnose.py --cache)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="enable wave/request tracing and dump a "
+                         "Perfetto/chrome://tracing JSON to PATH at "
+                         "shutdown (summarize with scripts/diagnose.py "
+                         "--trace PATH)")
     ap.add_argument("--min-prompt", type=int, default=4)
     ap.add_argument("--max-prompt", type=int, default=24)
     ap.add_argument("--params", default=None,
@@ -335,11 +375,11 @@ def main() -> None:
 
     cfg, eng = _build_engine(args)
     reqs = _make_requests(cfg, args)
-    t0 = time.time()
+    t0 = default_clock()
 
     if args.mode == "async":
         out = asyncio.run(_serve_async(eng, reqs, args))
-        dt = time.time() - t0
+        dt = default_clock() - t0
         out["elapsed_s"] = round(dt, 2)
         out["tok_per_s"] = round(out["tokens"] / dt, 1)
         out["policy"] = args.policy
@@ -348,15 +388,15 @@ def main() -> None:
         t_submit, t_first = {}, {}
         for req in reqs:
             eng.submit(req)
-            t_submit[req.uid] = time.time()
+            t_submit[req.uid] = default_clock()
         while eng.queue or eng.active.any():
             eng.step()
-            now = time.time()
+            now = default_clock()
             for r in reqs:
                 if r.uid not in t_first and r.generated:
                     t_first[r.uid] = now
         done = eng.completed
-        dt = time.time() - t0
+        dt = default_clock() - t0
         toks = sum(len(r.generated) for r in done)
         ttft = sorted((t_first[u] - t_submit[u]) * 1e3 for u in t_first)
         out = {
@@ -370,6 +410,9 @@ def main() -> None:
         }
         if args.persist:
             out.update(eng.close())     # save the warm chains back
+        if args.trace:
+            out["trace"] = dict(eng.dump_chrome_trace(args.trace),
+                                path=args.trace)
 
     st = eng.stats()
     if args.spec:

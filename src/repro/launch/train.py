@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
+from repro.serving.telemetry import default_clock
 
 import jax
 
@@ -59,14 +59,14 @@ def main() -> None:
     state = tr.init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
     it = data_iterator(cfg, shape, DataConfig(branching=4))
 
-    t0 = time.time()
+    t0 = default_clock()
     for step in range(args.steps):
         batch = next(it)
         state, metrics = built.fn(state, batch)
         if step % args.log_every == 0 or step == args.steps - 1:
             m = {k: round(float(v), 4) for k, v in metrics.items()}
             print(json.dumps({"step": step,
-                              "elapsed_s": round(time.time() - t0, 1), **m}))
+                              "elapsed_s": round(default_clock() - t0, 1), **m}))
     if args.checkpoint:
         ckpt.save(args.checkpoint, state["params"],
                   {"arch": args.arch, "steps": args.steps})

@@ -129,6 +129,111 @@ Admission semantics (the contract tests rely on)
   restores the block table — no re-prefill, bit-identical continuation.
   ``submit`` rejects resumed states that could not make progress.
 
+* **Telemetry.** ``serving.telemetry`` is the observability spine:
+  every subsystem registers typed counters/gauges/histograms into the
+  engine's ``MetricsRegistry`` (``engine.metrics``; ``stats()`` is a
+  compatibility view over it) and ``ServeConfig.trace=True`` records
+  wave phases + per-request lifecycles against an injectable monotonic
+  clock, exported as Perfetto/chrome://tracing JSON via
+  ``engine.dump_chrome_trace`` / ``launch.serve --trace`` and
+  summarized by ``scripts/diagnose.py --trace``.  Tracing is
+  behaviour-neutral (traced tokens bit-identical to untraced — gated
+  in ``benchmarks/serving_throughput.py``).
+
+Counter/metric glossary
+-----------------------
+``stats()`` key (registry name in parens), one line each.
+
+Engine (always present):
+
+* ``steps`` (``engine.steps``) — committed engine waves (prefill
+  admissions + decode/extend steps).
+* ``peak_active`` (``engine.peak_active``) — max concurrently resident
+  requests observed.
+* ``peak_pool_used`` (``engine.peak_pool_used``) — max KV pages in
+  flight at once.
+* ``exhaust_preempts`` (``engine.exhaust_preempts``) — slots preempted
+  because the pool ran out of pages mid-decode.
+* ``reclaims`` (``engine.reclaims``) — forced reclaims of a detached
+  preempted holder to un-wedge admission.
+* ``cow_forks`` (``engine.cow_forks``) — copy-on-write page forks
+  (mid-page hit tails + in-flight shared frontier writes).
+* ``mixed_waves`` (``engine.mixed_waves``) — waves mixing catch-up
+  prefill spans with decode/spec slots (chunked prefill).
+* ``wave_admitted`` (``engine.wave_admitted``) — requests admitted via
+  the zero-prefill chunked path (bookkeeping-only admission).
+* ``cancels`` (``engine.cancels``) — requests cancelled mid-flight.
+* ``published_frontiers`` (``engine.published_frontiers``; prefix
+  configs) — per-wave publications of live chains into the radix index.
+
+KV pool (paged configs; ``kv_pool.*``):
+
+* ``pool_blocks`` (``kv_pool.blocks``) — total physical pages.
+* ``pool_free`` (``kv_pool.free``) — pages on the free list now.
+* ``pool_shared`` (``kv_pool.shared``) — pages with refcount > 1 now.
+* registry-only: ``kv_pool.used`` (allocated pages now),
+  ``kv_pool.alloc_blocks`` / ``kv_pool.share_blocks`` /
+  ``kv_pool.fork_copies`` / ``kv_pool.reclaimed_blocks`` — cumulative
+  page traffic (allocations, reference shares, CoW copies, returns).
+
+Prefix cache (``prefix_cache.*``; prefix configs):
+
+* ``prefix_hits`` / ``prefix_misses`` / ``prefix_hit_rate`` — match
+  outcomes at admission (hits actually served).
+* ``prefix_hit_blocks`` / ``prefix_hit_tokens`` — pages / tokens served
+  by reference instead of re-prefilled.
+* ``prefix_hit_tokens_block`` — block-granular counterfactual of
+  ``prefix_hit_tokens`` (the token-granularity gain is the delta).
+* ``prefix_cached_blocks`` — pages currently indexed in the radix tree.
+* ``prefix_evicted_blocks`` / ``prefix_inserted_blocks`` /
+  ``prefix_replaced_blocks`` — LRU evictions, chain insertions, partial
+  tails superseded by longer chains.
+* ``prefix_short_matches`` — matches rejected by the admission floor
+  (``min_match_tokens``).
+* registry-only: ``prefix_cache.hit_tokens_hist`` — histogram of
+  matched tokens per served hit.
+
+Speculative decoding (``spec.*``; spec configs):
+
+* ``spec_active`` (``spec.active``) — a draft model is resident.
+* ``spec_steps`` / ``spec_rounds`` — waves that speculated / per-slot
+  draft-verify rounds.
+* ``spec_proposed`` / ``spec_accepted`` / ``spec_emitted`` — draft
+  tokens proposed, accepted, and big-model tokens emitted (accepted +
+  the free verify token).
+* ``spec_acceptance`` — accepted / proposed.
+* ``spec_tokens_per_round`` — emitted / rounds (1.0 = vanilla pace).
+* registry-only: ``spec.depth{j}.proposed`` / ``.accepted`` —
+  acceptance by draft depth j within a round (decays with depth; the
+  signal that picks gamma).
+
+Quantized serving (``quant.*``; quant configs):
+
+* ``quant_kv`` (``quant.kv``) — KV pool dtype ("" = f32).
+* ``quant_draft`` (``quant.draft``) — int8-weight draft is serving.
+* ``quant_page_bytes`` / ``quant_f32_page_bytes`` — device bytes of one
+  page under this layout vs f32 (the capacity lever).
+
+Prefix persistence (``persist.*``; persist configs):
+
+* ``persist_loaded_chains`` / ``persist_loaded_blocks`` — chains/pages
+  rehydrated from the store at startup.
+* ``persist_spilled_chains`` — chains spilled to the store under pool
+  pressure this run.
+* ``persist_rejected`` — non-empty reason when a store was rejected
+  (corrupt / config mismatch) and the engine started cold.
+
+Scheduler (registry-only; budgeted waves):
+
+* ``sched.budget_utilization`` — histogram of granted/budget per
+  planned wave.
+* ``sched.demotions`` — slots granted less width than they wanted.
+
+Frontend (registry-only; ``launch.serve.AsyncServingFrontend``):
+
+* ``frontend.steps`` / ``frontend.streams`` / ``frontend.inbox_depth``
+  / ``frontend.pending_cancels`` — loop progress and queue depths.
+
 JAX version compatibility: all version-sensitive jax.sharding / mesh
 symbols are imported via ``repro.compat`` (see its module docstring for
 the shim policy); ``scripts/check.sh`` runs an import sweep that
@@ -148,9 +253,14 @@ from repro.serving.kv_pool import KVBlockPool, PoolExhausted, \
 from repro.serving.prefix_cache import RadixPrefixCache
 from repro.serving.spec_decode import (SpecDecoder, accept_proposals,
                                        make_self_draft, validate_spec)
+from repro.serving.telemetry import (MetricsRegistry, Tracer,
+                                     default_clock, summarize_trace,
+                                     validate_chrome_trace)
 
 __all__ = ["EdgeServingEngine", "Request", "ServeConfig",
            "cache_batch_axes", "extract_slot", "insert_slot",
            "paged_cache_axes", "KVBlockPool", "PoolExhausted",
            "blocks_for_tokens", "RadixPrefixCache", "SpecDecoder",
-           "accept_proposals", "make_self_draft", "validate_spec"]
+           "accept_proposals", "make_self_draft", "validate_spec",
+           "MetricsRegistry", "Tracer", "default_clock",
+           "summarize_trace", "validate_chrome_trace"]

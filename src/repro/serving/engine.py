@@ -206,6 +206,7 @@ from __future__ import annotations
 import hashlib
 import itertools
 import os
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Any, Callable, Optional
@@ -220,6 +221,7 @@ from repro.serving.kv_pool import KVBlockPool, PoolExhausted, \
     blocks_for_tokens
 from repro.serving.prefix_cache import (PrefixStoreError, RadixPrefixCache,
                                         dump_chains, load_store, save_store)
+from repro.serving.telemetry import SLOT_TID0, MetricsRegistry, Tracer
 
 # NOTE: repro.core.scheduler is imported lazily in _rank —
 # core/__init__ pulls in hub.py, which imports this module back.
@@ -414,6 +416,22 @@ class ServeConfig:
     # reference (quantizing would materialise a copy instead of saving
     # memory).
     quant_draft: bool = False
+    # ---- telemetry (serving/telemetry.py) ----
+    # trace=True records engine-phase spans (admit / plan / dispatch /
+    # device sync / retire / publish), per-slot residency tracks and
+    # per-request lifecycle events (TTFT decomposition, ITL series,
+    # per-round speculative acceptance), exported as Perfetto JSON via
+    # engine.dump_chrome_trace(path).  Tracing only OBSERVES: generated
+    # tokens are bit-identical to an untraced run (the only extra
+    # device call is a value-neutral block_until_ready that fences the
+    # sync span).  The metrics registry (engine.metrics) is always on —
+    # stats() is a compatibility view over it, traced or not.
+    trace: bool = False
+    # monotonic clock the tracer stamps against (None =
+    # telemetry.default_clock, i.e. time.perf_counter).  Injectable so
+    # a replayed trace — fed a deterministic fake clock — is
+    # byte-reproducible in tests.
+    trace_clock: Optional[Callable[[], float]] = None
 
 
 class EdgeServingEngine:
@@ -614,6 +632,14 @@ class EdgeServingEngine:
         self.spec_proposed = 0
         self.spec_accepted = 0
         self.spec_emitted = 0
+        # telemetry: the registry is ALWAYS on (stats() below is a
+        # compatibility view over it); the tracer only with
+        # ServeConfig.trace.  Counters stay plain attributes —
+        # benchmarks/tests reset them by assignment (`eng.steps = 0`) —
+        # and the registry reads them through callback gauges.
+        self.metrics = MetricsRegistry()
+        self.tracer = Tracer(clock=scfg.trace_clock) if scfg.trace else None
+        self._legacy_stats = self._register_metrics()
 
     @property
     def _prefix(self) -> int:
@@ -665,6 +691,11 @@ class EdgeServingEngine:
                     f"(kv_pool_blocks); it could never finish")
         if req.arrival is None:
             req.arrival = float(next(self._arrival))
+        if self.tracer is not None:
+            fresh = req.saved_state is None and not req.generated
+            self._revent(req, "submit" if fresh else "resubmit",
+                         prompt_tokens=len(req.prompt))
+            self._revent(req, "queued", depth=len(self.queue) + 1)
         self.queue.append(req)
 
     def _rank(self, req: Request):
@@ -873,6 +904,8 @@ class EdgeServingEngine:
 
     def _admit_resumed(self, req: Request, slot: int) -> None:
         need = self._blocks_needed(req)   # same formula the scan reserved
+        self._slot_begin(req, slot)
+        self._revent(req, "resume", slot=slot)
         st = req.saved_state
         req.saved_state = None
         if self.paged:
@@ -904,6 +937,9 @@ class EdgeServingEngine:
         that consumes the last prompt token (the existing catch-up
         retirement), so admission never blocks in-flight decoders."""
         L = getattr(req, "_ctx_len", 0)
+        self._slot_begin(req, slot)
+        self._revent(req, "admitted", slot=slot, mode="wave",
+                     prefix_hit_tokens=L)
         if self.paged:
             ctx = getattr(req, "_ctx_blocks", None) or []
             self._set_table(slot, list(ctx))
@@ -1038,6 +1074,7 @@ class EdgeServingEngine:
                                 jnp.asarray(new))
                             req._ctx_blocks[-1] = new
                             self.cow_forks += 1
+                            self._revent(req, "cow_fork", slot=slot)
                     fresh_alloc = self.pool.alloc(fresh_n)
                 except PoolExhausted:
                     self._release_ctx(req)
@@ -1049,6 +1086,10 @@ class EdgeServingEngine:
             group = admitted
             if not group:
                 return
+        for req, slot in group:
+            self._slot_begin(req, slot)
+            self._revent(req, "admitted", slot=slot, mode="prefill",
+                         prefix_hit_tokens=getattr(req, "_ctx_len", 0))
         m = len(group)
         prompts = np.zeros((m, bucket), np.int32)
         true_len = np.zeros((m,), np.int32)
@@ -1085,8 +1126,14 @@ class EdgeServingEngine:
             args.append(jnp.asarray(tables))
         if n_ctx:
             args.append(jnp.asarray(ctx_len))
-        logits, self.cache = self._prefill_fn(bucket, m, extras_sig,
-                                              n_ctx)(*args)
+        with self._span("prefill_dispatch", bucket=bucket, rows=m):
+            logits, self.cache = self._prefill_fn(bucket, m, extras_sig,
+                                                  n_ctx)(*args)
+        if self.tracer is not None:
+            # value-neutral fence: device prefill time vs the host
+            # first-token sampling loop below
+            with self.tracer.span("prefill_sync"):
+                jax.block_until_ready(logits)
         if self.spec is not None:
             # the draft prefills the FULL prompt (it is cheap and never
             # chunks), so catch-up slots are already draft-complete by
@@ -1099,10 +1146,13 @@ class EdgeServingEngine:
             n1 = int(true_len[i])
             req._ctx_blocks, req._ctx_len = [], 0
             remainder = suffixes[i][n1:]
+            self._revent(req, "prefill_chunk", slot=slot, n=n1)
             tok = None
             if not remainder.size:
+                self._revent(req, "prompt_done", slot=slot)
                 tok = self._sample_first(req, logits_host[i])
                 req.generated.append(tok)
+                self._rtokens(req, slot, 1)
                 hit_eos = (self.scfg.eos_id >= 0
                            and tok == self.scfg.eos_id)
                 if len(req.generated) >= req.max_new_tokens or hit_eos:
@@ -1116,6 +1166,9 @@ class EdgeServingEngine:
                         self._set_table(slot, [])
                     req.done = True
                     self.completed.append(req)
+                    self._revent(req, "finish", slot=slot,
+                                 n_generated=len(req.generated))
+                    self._slot_end(slot)
                     continue
             self.pos[slot] = (L if L else self._prefix) + n1
             if remainder.size:
@@ -1260,6 +1313,7 @@ class EdgeServingEngine:
                 self.slot_blocks[s][j] = new
                 self.block_tables[s, j] = new
                 self.cow_forks += 1
+                self._revent(self.slot_req[s], "cow_fork", slot=s)
 
     def _has_pending(self) -> bool:
         return any(self.active[s] and self.pending[s] is not None
@@ -1283,7 +1337,7 @@ class EdgeServingEngine:
                             "arrival": r.arrival, "deadline": r.deadline,
                             "uid": r.uid})
         widths = plan_wave(self.scfg.policy, entries,
-                           self.scfg.wave_tokens)
+                           self.scfg.wave_tokens, metrics=self.metrics)
         out = {}
         for s, (mode, want) in plan.items():
             v = min(want, widths[s])
@@ -1327,36 +1381,40 @@ class EdgeServingEngine:
         force-reclaimed so an always-on loop cannot spin idle.  Returns
         the number of active slots stepped (0 = idle).
         """
-        self._admit_batch()
-        if self.extend_ok and (self.spec is not None
-                               or self._has_pending()):
-            stepped = self._extend_step()
-        else:
-            stepped = self._decode_wave()
-        if (stepped == 0 and self.paged and self.queue
-                and not self.active.any()):
-            # requests requeued by _ensure_blocks mid-step (after this
-            # step's admission pass) may need zero new pages — give
-            # admission one more look before reclaiming
-            self._admit_batch()
-            if not self.active.any():
-                # every queued request is blocked on pool pages held
-                # by detached requests: force-reclaim the worst one
-                self._reclaim()
+        with self._span("step", step=self.steps):
+            with self._span("admit", queued=len(self.queue)):
+                self._admit_batch()
+            if self.extend_ok and (self.spec is not None
+                                   or self._has_pending()):
+                stepped = self._extend_step()
+            else:
+                stepped = self._decode_wave()
+            if (stepped == 0 and self.paged and self.queue
+                    and not self.active.any()):
+                # requests requeued by _ensure_blocks mid-step (after
+                # this step's admission pass) may need zero new pages —
+                # give admission one more look before reclaiming
+                with self._span("admit", queued=len(self.queue)):
+                    self._admit_batch()
+                if not self.active.any():
+                    # every queued request is blocked on pool pages held
+                    # by detached requests: force-reclaim the worst one
+                    self._reclaim()
         return stepped
 
     def _decode_wave(self) -> int:
         """The plain one-token wave: plan is implicit (every active
         slot has width 1; slots still consuming a prompt on a
         non-extendable family teacher-force one pending token)."""
-        if self.paged:
-            self._ensure_blocks()
-            self._cow_guard()
-        self._record_plan({
-            s: (("catch", 1) if (self.pending[s] is not None
-                                 and self.pending[s].size) else
-                ("plain", 1))
-            for s in range(self.scfg.max_slots) if self.active[s]})
+        with self._span("plan"):
+            if self.paged:
+                self._ensure_blocks()
+                self._cow_guard()
+            self._record_plan({
+                s: (("catch", 1) if (self.pending[s] is not None
+                                     and self.pending[s].size) else
+                    ("plain", 1))
+                for s in range(self.scfg.max_slots) if self.active[s]})
         n_active = int(self.active.sum())
         if n_active == 0:
             return 0
@@ -1368,35 +1426,49 @@ class EdgeServingEngine:
         self._key, sub = jax.random.split(self._key)
         any_topk = bool((self.topks[self.active] > 0).any())
         tables = (jnp.asarray(self.block_tables) if self.paged else None)
-        nxt, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(self.tokens),
-            jnp.asarray(self.pos), jnp.asarray(self.temps),
-            jnp.asarray(self.topks), sub, tables, any_topk=any_topk)
+        with self._span("dispatch", mode="decode", rows=n_active):
+            nxt, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(self.tokens),
+                jnp.asarray(self.pos), jnp.asarray(self.temps),
+                jnp.asarray(self.topks), sub, tables, any_topk=any_topk)
+        if self.tracer is not None:
+            # value-neutral fence: splits device time ("sync") from the
+            # host sampling/retire loop below — tokens are untouched
+            with self.tracer.span("sync"):
+                jax.block_until_ready(nxt)
         nxt_host = np.asarray(nxt)
-        for slot in range(self.scfg.max_slots):
-            if not self.active[slot]:
-                continue
-            self.pos[slot] += 1
-            req = self.slot_req[slot]
-            pend = self.pending[slot]
-            out_of_room = int(self.pos[slot]) >= self.scfg.max_len - 1
-            if pend is not None and pend.size:
-                # still consuming the prompt: teacher-force the next
-                # prompt token, discard the sampled one
-                self.tokens[slot, 0] = int(pend[0])
-                self.pending[slot] = pend[1:]
-                if out_of_room:
+        with self._span("retire"):
+            for slot in range(self.scfg.max_slots):
+                if not self.active[slot]:
+                    continue
+                self.pos[slot] += 1
+                req = self.slot_req[slot]
+                pend = self.pending[slot]
+                out_of_room = int(self.pos[slot]) >= self.scfg.max_len - 1
+                if pend is not None and pend.size:
+                    # still consuming the prompt: teacher-force the next
+                    # prompt token, discard the sampled one
+                    self._revent(req, "prefill_chunk", slot=slot, n=1)
+                    self.tokens[slot, 0] = int(pend[0])
+                    self.pending[slot] = pend[1:]
+                    if out_of_room:
+                        self._finish(slot, req)
+                    continue
+                if pend is not None:
+                    # the wave that consumed the last prompt token
+                    self._revent(req, "prompt_done", slot=slot)
+                self.pending[slot] = None
+                tok = int(nxt_host[slot])
+                self.tokens[slot, 0] = tok
+                req.generated.append(tok)
+                self._rtokens(req, slot, 1)
+                hit_eos = (self.scfg.eos_id >= 0
+                           and tok == self.scfg.eos_id)
+                if (len(req.generated) >= req.max_new_tokens or hit_eos
+                        or out_of_room):
                     self._finish(slot, req)
-                continue
-            self.pending[slot] = None
-            tok = int(nxt_host[slot])
-            self.tokens[slot, 0] = tok
-            req.generated.append(tok)
-            hit_eos = (self.scfg.eos_id >= 0 and tok == self.scfg.eos_id)
-            if (len(req.generated) >= req.max_new_tokens or hit_eos
-                    or out_of_room):
-                self._finish(slot, req)
-        self._publish_frontiers()
+        with self._span("publish"):
+            self._publish_frontiers()
         self.steps += 1
         return n_active
 
@@ -1434,26 +1506,27 @@ class EdgeServingEngine:
         B, K = self.scfg.max_slots, self.K
         gamma = self.scfg.spec_gamma
         eos = self.scfg.eos_id
-        plan: dict[int, tuple] = {}
-        for s in range(B):
-            if not self.active[s]:
-                continue
-            pend = self.pending[s]
-            npend = 0 if pend is None else int(pend.size)
-            room = self.scfg.max_len - 1 - int(self.pos[s])
-            if npend:
-                plan[s] = ("catch", max(1, min(1 + npend, K, room)))
-            elif self.spec is not None and min(gamma, room) >= 2:
-                plan[s] = ("spec", min(gamma, room))
-            else:
-                plan[s] = ("plain", 1)
-        plan = self._apply_budget(plan)
-        if self.paged:
-            spans = {s: v for s, (_, v) in plan.items()}
-            self._ensure_blocks(spans)
-            self._cow_guard(spans)
-            plan = {s: p for s, p in plan.items() if self.active[s]}
-        self._record_plan(plan)
+        with self._span("plan"):
+            plan: dict[int, tuple] = {}
+            for s in range(B):
+                if not self.active[s]:
+                    continue
+                pend = self.pending[s]
+                npend = 0 if pend is None else int(pend.size)
+                room = self.scfg.max_len - 1 - int(self.pos[s])
+                if npend:
+                    plan[s] = ("catch", max(1, min(1 + npend, K, room)))
+                elif self.spec is not None and min(gamma, room) >= 2:
+                    plan[s] = ("spec", min(gamma, room))
+                else:
+                    plan[s] = ("plain", 1)
+            plan = self._apply_budget(plan)
+            if self.paged:
+                spans = {s: v for s, (_, v) in plan.items()}
+                self._ensure_blocks(spans)
+                self._cow_guard(spans)
+                plan = {s: p for s, p in plan.items() if self.active[s]}
+            self._record_plan(plan)
         n_active = int(self.active.sum())
         if n_active == 0:
             return 0
@@ -1469,9 +1542,10 @@ class EdgeServingEngine:
             # budget-shrunk round must not burn draft steps it cannot
             # verify
             k_spec = max(v for s, (m, v) in plan.items() if m == "spec")
-            proposals, dists = self.spec.propose(
-                spec_slots, self.tokens[:, 0], self.temps, self.topks,
-                k_spec, self._rng)
+            with self._span("draft", slots=len(spec_slots), width=k_spec):
+                proposals, dists = self.spec.propose(
+                    spec_slots, self.tokens[:, 0], self.temps,
+                    self.topks, k_spec, self._rng)
 
         fed = np.zeros((B, K), np.int32)
         valid = np.ones((B,), np.int32)
@@ -1488,10 +1562,17 @@ class EdgeServingEngine:
         tables = jnp.asarray(self.block_tables) if self.paged else None
         # all-greedy waves ship only the (B, K) argmax ids
         need_logits = bool((self.temps[self.active] > 0).any())
-        greedy, logits, self.cache = self._extend(
-            self.params, self.cache, jnp.asarray(fed),
-            jnp.asarray(self.pos), jnp.asarray(valid), tables,
-            need_logits=need_logits)
+        with self._span("dispatch", mode="extend", rows=n_active,
+                        fed_tokens=int(sum(v for _, v in plan.values()))):
+            greedy, logits, self.cache = self._extend(
+                self.params, self.cache, jnp.asarray(fed),
+                jnp.asarray(self.pos), jnp.asarray(valid), tables,
+                need_logits=need_logits)
+        if self.tracer is not None:
+            # value-neutral fence separating device compute from the
+            # host acceptance/sampling loop
+            with self.tracer.span("sync"):
+                jax.block_until_ready(greedy)
         greedy = np.asarray(greedy)                      # (B, K)
         logits = (np.asarray(logits, np.float32) if need_logits
                   else None)                             # (B, K, V)
@@ -1503,73 +1584,91 @@ class EdgeServingEngine:
                                       self._rng)
 
         any_spec = False
-        for s in range(B):
-            if s not in plan or not self.active[s]:
-                continue
-            mode, v = plan[s]
-            req = self.slot_req[s]
-            temp, top_k = float(self.temps[s]), int(self.topks[s])
-            if mode == "catch":
-                self.pos[s] += v
-                rest = self.pending[s][v - 1:]
-                out_of_room = int(self.pos[s]) >= self.scfg.max_len - 1
-                if rest.size:
-                    self.tokens[s, 0] = int(rest[0])
-                    self.pending[s] = rest[1:]
-                    if out_of_room:
+        with self._span("retire"):
+            for s in range(B):
+                if s not in plan or not self.active[s]:
+                    continue
+                mode, v = plan[s]
+                req = self.slot_req[s]
+                temp, top_k = float(self.temps[s]), int(self.topks[s])
+                if mode == "catch":
+                    self._revent(req, "prefill_chunk", slot=s, n=v)
+                    self.pos[s] += v
+                    rest = self.pending[s][v - 1:]
+                    out_of_room = (int(self.pos[s])
+                                   >= self.scfg.max_len - 1)
+                    if rest.size:
+                        self.tokens[s, 0] = int(rest[0])
+                        self.pending[s] = rest[1:]
+                        if out_of_room:
+                            self._finish(s, req)
+                        continue
+                    self._revent(req, "prompt_done", slot=s)
+                    self.pending[s] = None
+                    tok = sample(s, v - 1, temp, top_k)
+                    self.tokens[s, 0] = tok
+                    req.generated.append(tok)
+                    self._rtokens(req, s, 1)
+                    hit_eos = eos >= 0 and tok == eos
+                    if (len(req.generated) >= req.max_new_tokens
+                            or hit_eos or out_of_room):
                         self._finish(s, req)
                     continue
-                self.pending[s] = None
-                tok = sample(s, v - 1, temp, top_k)
-                self.tokens[s, 0] = tok
-                req.generated.append(tok)
-                hit_eos = eos >= 0 and tok == eos
-                if (len(req.generated) >= req.max_new_tokens or hit_eos
-                        or out_of_room):
-                    self._finish(s, req)
-                continue
-            if mode == "plain":
-                self.pos[s] += 1
-                tok = sample(s, 0, temp, top_k)
-                self.tokens[s, 0] = tok
-                req.generated.append(tok)
-                hit_eos = eos >= 0 and tok == eos
-                if (len(req.generated) >= req.max_new_tokens or hit_eos
+                if mode == "plain":
+                    self.pos[s] += 1
+                    tok = sample(s, 0, temp, top_k)
+                    self.tokens[s, 0] = tok
+                    req.generated.append(tok)
+                    self._rtokens(req, s, 1)
+                    hit_eos = eos >= 0 and tok == eos
+                    if (len(req.generated) >= req.max_new_tokens
+                            or hit_eos
+                            or int(self.pos[s]) >= self.scfg.max_len - 1):
+                        self._finish(s, req)
+                    continue
+                # speculative round
+                any_spec = True
+                if temp <= 0:
+                    n_acc, emitted = accept_greedy(proposals[s][:v - 1],
+                                                   greedy[s, :v])
+                else:
+                    n_acc, emitted = accept_proposals(
+                        proposals[s][:v - 1], dists[s][:v - 1],
+                        logits[s, :v], temp, top_k, self._rng)
+                self.spec.advance(s, n_acc + 1)
+                self.spec_rounds += 1
+                self.spec_proposed += v - 1
+                self.spec_accepted += n_acc
+                # acceptance by draft depth (registry counters) + the
+                # per-request round log the trace summaries aggregate
+                for j in range(v - 1):
+                    self.metrics.counter(f"spec.depth{j}.proposed").inc()
+                for j in range(n_acc):
+                    self.metrics.counter(f"spec.depth{j}.accepted").inc()
+                self._revent(req, "spec_round", slot=s, proposed=v - 1,
+                             accepted=n_acc)
+                # budget/EOS truncation (both imply the request
+                # finishes)
+                emit = emitted[:req.max_new_tokens - len(req.generated)]
+                if eos >= 0 and eos in emit:
+                    emit = emit[:emit.index(eos) + 1]
+                req.generated.extend(emit)
+                self.spec_emitted += len(emit)
+                self._rtokens(req, s, len(emit))
+                # frontier: every emitted token except a final
+                # correction/bonus was fed (and written) this wave
+                self.pos[s] += min(len(emit) + 1, n_acc + 1)
+                if (len(req.generated) >= req.max_new_tokens
+                        or (eos >= 0 and emit and emit[-1] == eos)
                         or int(self.pos[s]) >= self.scfg.max_len - 1):
                     self._finish(s, req)
-                continue
-            # speculative round
-            any_spec = True
-            if temp <= 0:
-                n_acc, emitted = accept_greedy(proposals[s][:v - 1],
-                                               greedy[s, :v])
-            else:
-                n_acc, emitted = accept_proposals(
-                    proposals[s][:v - 1], dists[s][:v - 1],
-                    logits[s, :v], temp, top_k, self._rng)
-            self.spec.advance(s, n_acc + 1)
-            self.spec_rounds += 1
-            self.spec_proposed += v - 1
-            self.spec_accepted += n_acc
-            # budget/EOS truncation (both imply the request finishes)
-            emit = emitted[:req.max_new_tokens - len(req.generated)]
-            if eos >= 0 and eos in emit:
-                emit = emit[:emit.index(eos) + 1]
-            req.generated.extend(emit)
-            self.spec_emitted += len(emit)
-            # frontier: every emitted token except a final
-            # correction/bonus was fed (and written) this wave
-            self.pos[s] += min(len(emit) + 1, n_acc + 1)
-            if (len(req.generated) >= req.max_new_tokens
-                    or (eos >= 0 and emit and emit[-1] == eos)
-                    or int(self.pos[s]) >= self.scfg.max_len - 1):
-                self._finish(s, req)
-            else:
-                self.tokens[s, 0] = emit[-1]
-                self._truncate_slot(s)       # rejected-tail pages back
+                else:
+                    self.tokens[s, 0] = emit[-1]
+                    self._truncate_slot(s)   # rejected-tail pages back
         if any_spec:
             self.spec_steps += 1
-        self._publish_frontiers()
+        with self._span("publish"):
+            self._publish_frontiers()
         self.steps += 1
         return n_active
 
@@ -1627,6 +1726,9 @@ class EdgeServingEngine:
         self.pool.free(list(leftovers) + list(blocks[nb:]))
 
     def _finish(self, slot: int, req: Request) -> None:
+        self._revent(req, "finish", slot=slot,
+                     n_generated=len(req.generated))
+        self._slot_end(slot)
         req.done = True
         self.completed.append(req)
         self.active[slot] = False
@@ -1792,67 +1894,153 @@ class EdgeServingEngine:
         self.cache = jax.tree_util.tree_unflatten(treedef, leaves)
 
     # ------------------------------------------------------------------
-    def stats(self) -> dict:
-        """Pool / prefix-cache observability; every call re-checks the
-        pool accounting invariant (free + refcounted == total)."""
-        out = {
-            "steps": self.steps,
-            "peak_active": self.peak_active,
-            "peak_pool_used": self.peak_pool_used,
-            "exhaust_preempts": self.exhaust_preempts,
-            "reclaims": self.reclaims,
-            "cow_forks": self.cow_forks,
-            "mixed_waves": self.mixed_waves,
-            "wave_admitted": self.wave_admitted,
-            "cancels": self.cancels,
-        }
+    # telemetry (serving/telemetry.py)
+    # ------------------------------------------------------------------
+    def _register_metrics(self) -> dict:
+        """Register every serving counter/gauge into the metrics
+        registry and return the ``stats()`` compatibility map
+        ``{legacy_key: metric_name}`` — built per config axis exactly
+        like the historical ad-hoc dict, so the view's key set and
+        values are unchanged (snapshot-tested in
+        ``tests/test_telemetry.py``).  Counters that tests reset by
+        assignment stay plain attributes; the registry samples them via
+        callback gauges."""
+        m, legacy = self.metrics, {}
+
+        def view(key: str, name: str, fn) -> None:
+            m.gauge(name, fn)
+            legacy[key] = name
+
+        view("steps", "engine.steps", lambda: self.steps)
+        view("peak_active", "engine.peak_active", lambda: self.peak_active)
+        view("peak_pool_used", "engine.peak_pool_used",
+             lambda: self.peak_pool_used)
+        view("exhaust_preempts", "engine.exhaust_preempts",
+             lambda: self.exhaust_preempts)
+        view("reclaims", "engine.reclaims", lambda: self.reclaims)
+        view("cow_forks", "engine.cow_forks", lambda: self.cow_forks)
+        view("mixed_waves", "engine.mixed_waves", lambda: self.mixed_waves)
+        view("wave_admitted", "engine.wave_admitted",
+             lambda: self.wave_admitted)
+        view("cancels", "engine.cancels", lambda: self.cancels)
         if self.paged:
-            self.pool.assert_consistent()
-            out.update(pool_blocks=self.pool.num_blocks,
-                       pool_free=self.pool.num_free,
-                       pool_shared=self.pool.num_shared)
+            self.pool.attach_metrics(m)
+            legacy.update(pool_blocks="kv_pool.blocks",
+                          pool_free="kv_pool.free",
+                          pool_shared="kv_pool.shared")
         if self.quant or self.scfg.quant_draft:
             from repro.serving.kv_pool import page_bytes
-            out.update(
-                quant_kv=self.scfg.quant_kv or "",
-                quant_draft=bool(self.scfg.quant_draft
-                                 and self.spec is not None),
-                # deterministic capacity facts for the baseline gate:
-                # bytes of one page under this layout vs f32, and how
-                # many int8 pages fit in the f32 pool's byte budget
-                quant_page_bytes=page_bytes(self.cfg, self.block_size,
-                                            self.scfg.quant_kv
-                                            if self.quant else None),
-                quant_f32_page_bytes=page_bytes(self.cfg,
-                                                self.block_size, None),
-            )
+            view("quant_kv", "quant.kv", lambda: self.scfg.quant_kv or "")
+            view("quant_draft", "quant.draft",
+                 lambda: bool(self.scfg.quant_draft
+                              and self.spec is not None))
+            # deterministic capacity facts for the baseline gate:
+            # bytes of one page under this layout vs f32
+            view("quant_page_bytes", "quant.page_bytes",
+                 lambda: page_bytes(self.cfg, self.block_size,
+                                    self.scfg.quant_kv
+                                    if self.quant else None))
+            view("quant_f32_page_bytes", "quant.f32_page_bytes",
+                 lambda: page_bytes(self.cfg, self.block_size, None))
         if self.scfg.spec_decode:
-            out.update(
-                spec_active=self.spec is not None,
-                spec_steps=self.spec_steps,
-                spec_rounds=self.spec_rounds,
-                spec_proposed=self.spec_proposed,
-                spec_accepted=self.spec_accepted,
-                spec_emitted=self.spec_emitted,
-                spec_acceptance=(self.spec_accepted
-                                 / max(self.spec_proposed, 1)),
-                # mean big-model tokens emitted per verify round per
-                # slot: 1.0 = vanilla; > 1 = speculation paying off
-                spec_tokens_per_round=(self.spec_emitted
-                                       / max(self.spec_rounds, 1)),
-            )
+            view("spec_active", "spec.active",
+                 lambda: self.spec is not None)
+            view("spec_steps", "spec.steps", lambda: self.spec_steps)
+            view("spec_rounds", "spec.rounds", lambda: self.spec_rounds)
+            view("spec_proposed", "spec.proposed",
+                 lambda: self.spec_proposed)
+            view("spec_accepted", "spec.accepted",
+                 lambda: self.spec_accepted)
+            view("spec_emitted", "spec.emitted", lambda: self.spec_emitted)
+            view("spec_acceptance", "spec.acceptance",
+                 lambda: self.spec_accepted / max(self.spec_proposed, 1))
+            # mean big-model tokens emitted per verify round per slot:
+            # 1.0 = vanilla; > 1 = speculation paying off
+            view("spec_tokens_per_round", "spec.tokens_per_round",
+                 lambda: self.spec_emitted / max(self.spec_rounds, 1))
+            # acceptance by DRAFT DEPTH: position j of a proposal
+            # within its round (acceptance decays with depth — the
+            # signal that picks gamma); bumped in _extend_step
+            for j in range(max(self.scfg.spec_gamma - 1, 0)):
+                m.counter(f"spec.depth{j}.proposed")
+                m.counter(f"spec.depth{j}.accepted")
         if self.prefix_cache is not None:
-            out.update({f"prefix_{k}": v
-                        for k, v in self.prefix_cache.stats().items()})
-            out["published_frontiers"] = self.published_frontiers
+            for k in self.prefix_cache.attach_metrics(m):
+                legacy[f"prefix_{k}"] = f"prefix_cache.{k}"
+            view("published_frontiers", "engine.published_frontiers",
+                 lambda: self.published_frontiers)
             if self.scfg.prefix_persist_path:
-                out.update(
-                    persist_loaded_chains=self.persist_loaded_chains,
-                    persist_loaded_blocks=self.persist_loaded_blocks,
-                    persist_spilled_chains=len(self._spilled),
-                    persist_rejected=self.persist_rejected,
-                )
-        return out
+                view("persist_loaded_chains", "persist.loaded_chains",
+                     lambda: self.persist_loaded_chains)
+                view("persist_loaded_blocks", "persist.loaded_blocks",
+                     lambda: self.persist_loaded_blocks)
+                view("persist_spilled_chains", "persist.spilled_chains",
+                     lambda: len(self._spilled))
+                view("persist_rejected", "persist.rejected",
+                     lambda: self.persist_rejected)
+        return legacy
+
+    def _span(self, name: str, **args):
+        """Engine-phase span when tracing; a free no-op context
+        otherwise (the untraced step path stays branch-for-branch what
+        it was)."""
+        if self.tracer is None:
+            return nullcontext()
+        return self.tracer.span(name, **args)
+
+    def _revent(self, req: Request, name: str, slot: Optional[int] = None,
+                **args) -> None:
+        """Per-request lifecycle event (no-op untraced): mirrored onto
+        the slot's track when resident, the frontend track otherwise."""
+        if self.tracer is not None:
+            self.tracer.req_event(
+                req.uid, name,
+                tid=None if slot is None else SLOT_TID0 + slot, **args)
+
+    def _rtokens(self, req: Request, slot: int, n: int) -> None:
+        """Token-retirement stamps, called AFTER appending ``n`` tokens
+        to ``req.generated``: ``first_token`` closes the TTFT
+        decomposition, ``tokens`` feeds the per-request ITL series."""
+        if self.tracer is None or n <= 0:
+            return
+        if len(req.generated) == n:
+            self._revent(req, "first_token", slot=slot)
+        self._revent(req, "tokens", slot=slot, n=n)
+
+    def _slot_begin(self, req: Request, slot: int) -> None:
+        """Open the slot-residency span on the slot's trace track."""
+        if self.tracer is not None:
+            tid = SLOT_TID0 + slot
+            self.tracer.name_track(tid, f"slot{slot}")
+            self.tracer.begin(f"u{req.uid}", tid, uid=req.uid)
+
+    def _slot_end(self, slot: int) -> None:
+        if self.tracer is not None:
+            self.tracer.end(SLOT_TID0 + slot)
+
+    def dump_chrome_trace(self, path: str) -> dict:
+        """Write the tracer's Perfetto / chrome://tracing JSON dump to
+        ``path`` (engine phases on one track, one track per slot,
+        per-request ``request_summary`` instants carrying the TTFT
+        decomposition).  Requires ``ServeConfig.trace=True``."""
+        if self.tracer is None:
+            raise ValueError(
+                "tracing is off — construct the engine with "
+                "ServeConfig(trace=True) to record a trace")
+        return self.tracer.dump_chrome_trace(path)
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        """Pool / prefix-cache observability — a compatibility VIEW
+        over the metrics registry (``serving/telemetry.py``): same keys
+        and values as the historical ad-hoc dict, now read through the
+        registered gauges so every subsystem reports through one path.
+        Every call re-checks the pool accounting invariant (free +
+        refcounted == total)."""
+        if self.paged:
+            self.pool.assert_consistent()
+        return {key: self.metrics.get(name)
+                for key, name in self._legacy_stats.items()}
 
     # ------------------------------------------------------------------
     def cancel(self, uid: int) -> bool:
@@ -1887,6 +2075,7 @@ class EdgeServingEngine:
             req = self.slot_req[s]
             if not self.active[s] or req is None or req.uid != uid:
                 continue
+            self._slot_end(s)
             self.active[s] = False
             self.slot_req[s] = None
             self.pending[s] = None
@@ -1900,6 +2089,7 @@ class EdgeServingEngine:
         return False
 
     def _mark_cancelled(self, req: Request) -> None:
+        self._revent(req, "cancel", n_generated=len(req.generated))
         req.done = True
         req.cancelled = True
         self.cancelled.append(req)
@@ -1915,6 +2105,8 @@ class EdgeServingEngine:
         req = self.slot_req[slot]
         if req is None:
             return None
+        self._revent(req, "preempt", slot=slot)
+        self._slot_end(slot)
         req.saved_state = {
             "cache": extract_slot(self.cache, slot, self.axes),
             "pos": int(self.pos[slot]),

@@ -92,6 +92,9 @@ class KVBlockPool:
         # LIFO: freshly freed pages are reused first (cache-warm reuse)
         self._free: list[int] = list(range(self.num_blocks - 1, -1, -1))
         self._refcount = np.zeros(self.num_blocks, np.int32)
+        # traffic counters, live only after attach_metrics (telemetry)
+        self._m_alloc = self._m_share = None
+        self._m_fork = self._m_reclaim = None
 
     # ------------------------------------------------------------------
     @property
@@ -116,6 +119,22 @@ class KVBlockPool:
     def can_alloc(self, n: int) -> bool:
         return n <= len(self._free)
 
+    def attach_metrics(self, registry) -> None:
+        """Register this pool's occupancy gauges and traffic counters
+        into a ``serving.telemetry.MetricsRegistry``: occupancy
+        (``kv_pool.blocks/free/used/shared``) samples the live pool at
+        collect time; traffic (``kv_pool.alloc/share/fork_copy/
+        reclaimed_blocks``) counts page movements, bumped by
+        alloc/share/fork/free themselves."""
+        registry.gauge("kv_pool.blocks", lambda: self.num_blocks)
+        registry.gauge("kv_pool.free", lambda: self.num_free)
+        registry.gauge("kv_pool.used", lambda: self.num_used)
+        registry.gauge("kv_pool.shared", lambda: self.num_shared)
+        self._m_alloc = registry.counter("kv_pool.alloc_blocks")
+        self._m_share = registry.counter("kv_pool.share_blocks")
+        self._m_fork = registry.counter("kv_pool.fork_copies")
+        self._m_reclaim = registry.counter("kv_pool.reclaimed_blocks")
+
     # ------------------------------------------------------------------
     def alloc(self, n: int) -> list[int]:
         """Claim ``n`` blocks (refcount 1 each) or raise PoolExhausted.
@@ -131,6 +150,8 @@ class KVBlockPool:
                 f"{self.num_blocks} free")
         ids = [self._free.pop() for _ in range(n)]
         self._refcount[ids] += 1
+        if self._m_alloc is not None:
+            self._m_alloc.inc(n)
         return ids
 
     def incref(self, block_ids) -> None:
@@ -138,6 +159,8 @@ class KVBlockPool:
             if self._refcount[b] <= 0:
                 raise ValueError(f"incref on unallocated block {b}")
             self._refcount[b] += 1
+            if self._m_share is not None:
+                self._m_share.inc()
 
     # prefix sharing reads as "share these pages with one more owner"
     share = incref
@@ -159,6 +182,8 @@ class KVBlockPool:
             return int(block_id)
         (new,) = self.alloc(1)
         self._refcount[block_id] -= 1
+        if self._m_fork is not None:
+            self._m_fork.inc()
         return new
 
     def free(self, block_ids) -> None:
@@ -170,6 +195,8 @@ class KVBlockPool:
             self._refcount[b] -= 1
             if self._refcount[b] == 0:
                 self._free.append(int(b))
+                if self._m_reclaim is not None:
+                    self._m_reclaim.inc()
 
     # ------------------------------------------------------------------
     def assert_consistent(self) -> None:

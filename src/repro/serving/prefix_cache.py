@@ -140,6 +140,8 @@ class RadixPrefixCache:
         self.evicted_blocks = 0
         self.inserted_blocks = 0
         self.replaced_blocks = 0      # partial tails superseded by longer chains
+        # hit-length histogram, live only after attach_metrics (telemetry)
+        self._m_hit_hist = None
 
     # ------------------------------------------------------------------
     def _root(self, namespace: int) -> _Node:
@@ -211,6 +213,8 @@ class RadixPrefixCache:
         self.hits += 1
         self.hit_blocks += len(blocks)
         self.hit_tokens += matched
+        if self._m_hit_hist is not None:
+            self._m_hit_hist.observe(matched)
         bg_cap = (raw if max_tokens is None
                   else (max_tokens // bs) * bs)
         self.hit_tokens_block += min((raw // bs) * bs, bg_cap)
@@ -392,6 +396,23 @@ class RadixPrefixCache:
     def num_blocks(self) -> int:
         """Pages currently indexed (cache holds one ref each)."""
         return sum(self._size(r) for r in self._roots.values())
+
+    def attach_metrics(self, registry) -> list:
+        """Register one ``prefix_cache.<key>`` callback gauge per
+        ``stats()`` field into a ``serving.telemetry.MetricsRegistry``
+        plus a ``prefix_cache.hit_tokens_hist`` histogram (tokens per
+        served hit, observed by ``match``; ``unrecord_hit`` cannot roll
+        a histogram sample back, so the histogram counts *recorded*
+        hits, the gauges count *served* ones).  Returns the stats keys
+        in dict order so callers can build compatibility views."""
+        keys = list(self.stats().keys())
+        for k in keys:
+            registry.gauge(f"prefix_cache.{k}",
+                           (lambda k=k: self.stats()[k]))
+        self._m_hit_hist = registry.histogram(
+            "prefix_cache.hit_tokens_hist",
+            (16, 32, 64, 128, 256, 512, 1024))
+        return keys
 
     def stats(self) -> dict:
         total = self.hits + self.misses
